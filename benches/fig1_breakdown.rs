@@ -1,0 +1,72 @@
+//! Fig. 1 bench — runtime share by op type.
+//!
+//! Two complementary measurements:
+//!   1. Cycle-model shares for the paper's LLaMA-2-7B shape (fitted to
+//!      the paper's BF16 measurement, then predicted for FP8 / Algo.2).
+//!   2. A *measured* share on our own stack: wall-clock of the lowered
+//!      prefill with exact softmax vs with the EXAQ kernel — the delta is
+//!      the softmax share our runtime actually exposes.
+
+use std::path::Path;
+use std::time::Instant;
+
+use exaq_repro::cost::{GemmPrecision, MachineModel, TransformerShape};
+use exaq_repro::report::{f as fnum, pct, Table};
+use exaq_repro::runtime::{Engine, HostTensor, QuantMode};
+
+fn main() -> anyhow::Result<()> {
+    let m = MachineModel::default();
+    let llama7b = TransformerShape {
+        layers: 32, d_model: 4096, n_heads: 32, d_ff: 11008, seq: 2048,
+        batch: 1, vocab: 32000,
+    };
+    let mut t = Table::new(
+        "Fig. 1 — cycle-model runtime shares (LLaMA-2-7B shape)",
+        &["scenario", "gemm", "softmax", "elementwise"]);
+    for (name, prec, bits) in [
+        ("BF16 + original softmax (paper: 24/39/37)",
+         GemmPrecision::Bf16, None),
+        ("FP8  + original softmax", GemmPrecision::Fp8, None),
+        ("BF16 + EXAQ 2-bit", GemmPrecision::Bf16, Some(2)),
+    ] {
+        let s = m.breakdown(llama7b, prec, bits);
+        t.row(&[name.to_string(), pct(s[0].share), pct(s[1].share),
+                pct(s[2].share)]);
+    }
+    println!("{}", t.to_markdown());
+    let _ = exaq_repro::report::write_csv("reports/fig1_breakdown.csv",
+                                          &t);
+
+    // measured on our bundle, if present
+    let dir = Path::new("artifacts");
+    if dir.join("manifest.json").exists() {
+        let mut engine = Engine::load(dir)?;
+        let model = "m";
+        let seq = engine.manifest.seq;
+        let n_layers = engine.manifest.model(model)?.config.n_layers;
+        let tokens = HostTensor::i32(vec![1; 8 * seq], &[8, seq]);
+        let mut time_of = |quant, c: Option<&[f32]>| -> anyhow::Result<f64> {
+            engine.prefill(model, quant, &tokens, c)?; // warm/compile
+            let t0 = Instant::now();
+            let reps = 5;
+            for _ in 0..reps {
+                engine.prefill(model, quant, &tokens, c)?;
+            }
+            Ok(t0.elapsed().as_secs_f64() / reps as f64)
+        };
+        let cv = vec![-6.0f32; n_layers];
+        let exact = time_of(QuantMode::None, None)?;
+        let q2 = time_of(QuantMode::Static { bits: 2 }, Some(&cv))?;
+        let mut t2 = Table::new(
+            "Fig. 1 (measured) — our prefill wall-clock, batch 8",
+            &["variant", "ms/prefill"]);
+        t2.row(&["exact softmax".into(), fnum(exact * 1e3, 2)]);
+        t2.row(&["EXAQ 2-bit softmax".into(), fnum(q2 * 1e3, 2)]);
+        println!("{}", t2.to_markdown());
+        println!("(CPU-interpret kernel timings are structural only — \
+                  see DESIGN.md §7 L1)");
+    } else {
+        println!("artifacts/ missing — measured section skipped");
+    }
+    Ok(())
+}

@@ -1,0 +1,33 @@
+//! Fig. 3 bench — optimal clipping value vs sigma: analytic model vs
+//! Monte-Carlo simulation, for M = 2 and 3 (+ our M = 4 extension),
+//! against the paper's Table 1 lines.
+
+use exaq_repro::exaq::mc::simulated_optimal_clip;
+use exaq_repro::exaq::solver::optimal_clip;
+use exaq_repro::report::{f as fnum, Table};
+
+fn main() {
+    let mut t = Table::new(
+        "Fig. 3 — C*(sigma): analysis vs simulation vs paper line",
+        &["sigma", "M", "analytic", "simulation", "paper line"]);
+    let paper = |bits: u32, s: f64| match bits {
+        2 => -1.66 * s - 1.85,
+        3 => -1.75 * s - 2.06,
+        _ => f64::NAN,
+    };
+    for bits in [2u32, 3, 4] {
+        for i in 0..9 {
+            let sigma = 0.5 + 0.5 * i as f64;
+            let a = optimal_clip(sigma, bits);
+            let sim = simulated_optimal_clip(sigma, bits, 12,
+                                             42 + i as u64);
+            let p = paper(bits, sigma);
+            t.row(&[fnum(sigma, 2), bits.to_string(), fnum(a, 3),
+                    fnum(sim, 3),
+                    if p.is_nan() { "-".into() } else { fnum(p, 3) }]);
+        }
+    }
+    println!("{}", t.to_markdown());
+    let _ = exaq_repro::report::write_csv(
+        "reports/fig3_optimal_clip.csv", &t);
+}

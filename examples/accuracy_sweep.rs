@@ -1,0 +1,76 @@
+//! Table 2/5 sweep: NONE / NAIVE / EXAQ × INT2/INT3 across model sizes
+//! and the seven task families.
+//!
+//!     cargo run --release --example accuracy_sweep [models] [n] [seeds]
+//!
+//! e.g. `accuracy_sweep s,m,l,xl 40 3` regenerates the full Table 2 + 4
+//! analogue; `accuracy_sweep v2-s,v2-m,v2-l 40 3` the Table 5 + 6 one.
+
+use std::path::Path;
+
+use exaq_repro::calib;
+use exaq_repro::eval::{eval_task, family_world_seed, mean_std, World,
+                       ALL_TASKS};
+use exaq_repro::exaq::{clip_exaq, clip_naive};
+use exaq_repro::report::{f as fnum, Table};
+use exaq_repro::runtime::{Engine, QuantMode};
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let models = args.first().map(String::as_str).unwrap_or("s,m");
+    let n: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(30);
+    let seeds: usize =
+        args.get(2).and_then(|s| s.parse().ok()).unwrap_or(1);
+
+    let dir = Path::new("artifacts");
+    let mut engine = Engine::load(dir)?;
+
+    for model in models.split(',') {
+        let entry = engine.manifest.model(model)?.clone();
+        let world = World::build(family_world_seed(entry.family));
+        let cal = calib::load_calibration(dir, model)
+            .or_else(|_| calib::calibrate(&mut engine, model))?;
+        let configs: Vec<(&str, QuantMode, Option<Vec<f32>>)> = vec![
+            ("NONE", QuantMode::None, None),
+            ("NAIVE-INT2", QuantMode::Static { bits: 2 },
+             Some(clip_naive(&cal.layers))),
+            ("EXAQ-INT2", QuantMode::Static { bits: 2 },
+             Some(clip_exaq(&cal.layers, 2))),
+            ("NAIVE-INT3", QuantMode::Static { bits: 3 },
+             Some(clip_naive(&cal.layers))),
+            ("EXAQ-INT3", QuantMode::Static { bits: 3 },
+             Some(clip_exaq(&cal.layers, 3))),
+        ];
+        let mut headers = vec!["config".to_string()];
+        headers.extend(ALL_TASKS.iter().map(|t| t.name().to_string()));
+        headers.push("avg".into());
+        let hdr: Vec<&str> = headers.iter().map(String::as_str).collect();
+        let mut t = Table::new(
+            &format!("model {model} ({} params) — n={n}, seeds={seeds}",
+                     entry.config.n_params),
+            &hdr);
+        for (name, quant, c_vec) in &configs {
+            let mut cells = vec![name.to_string()];
+            let mut sum = 0.0;
+            for task in ALL_TASKS {
+                let mut accs = Vec::new();
+                for s in 0..seeds {
+                    let r = eval_task(&mut engine, model, *quant,
+                                      c_vec.as_deref(), task, &world, n,
+                                      1000 + s as u64 * 7919)?;
+                    accs.push(r.accuracy * 100.0);
+                }
+                let (m, _) = mean_std(&accs);
+                sum += m;
+                cells.push(fnum(m, 1));
+            }
+            cells.push(fnum(sum / ALL_TASKS.len() as f64, 1));
+            t.row(&cells);
+            eprintln!("[sweep] {model} {name} done");
+        }
+        println!("{}", t.to_markdown());
+        let _ = exaq_repro::report::write_csv(
+            &format!("reports/accuracy_{model}.csv"), &t);
+    }
+    Ok(())
+}

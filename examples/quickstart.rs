@@ -1,0 +1,58 @@
+//! Quickstart: load the artifact bundle, generate text with the EXAQ
+//! 2-bit softmax, print tokens/s.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! (run `make artifacts` first.)
+
+use std::path::Path;
+
+use exaq_repro::calib;
+use exaq_repro::coordinator::{serve_until_drained, Request, ServeConfig};
+use exaq_repro::exaq::clip_exaq;
+use exaq_repro::model::{SamplingParams, Tokenizer};
+use exaq_repro::runtime::{Engine, QuantMode};
+
+fn main() -> anyhow::Result<()> {
+    let dir = Path::new("artifacts");
+    let mut engine = Engine::load(dir)?;
+    let tok = Tokenizer::from_manifest(&engine.manifest);
+    let model = "s";
+
+    // calibrated EXAQ clip thresholds (paper Table 1 applied to the
+    // calibration sigmas)
+    let cal = calib::load_calibration(dir, model)
+        .or_else(|_| calib::calibrate(&mut engine, model))?;
+    let c_vec = clip_exaq(&cal.layers, 2);
+    println!("per-layer clip thresholds: {c_vec:?}");
+
+    let cfg = ServeConfig {
+        model: model.into(),
+        quant: QuantMode::Static { bits: 2 },
+        c_vec: Some(c_vec),
+        decode_batch: 8,
+    };
+    let prompts = ["alice is in the", "the ball is", "bob has the"];
+    let reqs: Vec<Request> = prompts
+        .iter()
+        .enumerate()
+        .map(|(i, p)| Request {
+            id: i as u64,
+            prompt: tok.encode(p).unwrap(),
+            max_new_tokens: 10,
+            params: SamplingParams::greedy(),
+        })
+        .collect();
+
+    let (mut resps, wall, _) =
+        serve_until_drained(&mut engine, &cfg, reqs)?;
+    resps.sort_by_key(|r| r.id);
+    let total: usize = resps.iter().map(|r| r.tokens.len()).sum();
+    for r in &resps {
+        println!("{} -> {}", prompts[r.id as usize],
+                 tok.decode(&r.tokens));
+    }
+    println!("\n{total} tokens in {wall:.2}s = {:.1} tok/s \
+              (EXAQ 2-bit softmax)", total as f64 / wall);
+    Ok(())
+}

@@ -1,0 +1,82 @@
+//! End-to-end serving benchmark (DESIGN.md's end-to-end driver): a
+//! synthetic request trace through the continuous-batching coordinator,
+//! reporting latency/throughput for the exact vs EXAQ-quantized softmax
+//! configurations.
+//!
+//!     cargo run --release --example serving_benchmark [model] [n_req]
+
+use std::path::Path;
+
+use exaq_repro::calib;
+use exaq_repro::coordinator::{serve_until_drained, Request, ServeConfig};
+use exaq_repro::eval::{family_world_seed, Task, World};
+use exaq_repro::exaq::clip_exaq;
+use exaq_repro::model::{SamplingParams, Tokenizer};
+use exaq_repro::report::{f as fnum, Table};
+use exaq_repro::runtime::{Engine, QuantMode};
+use exaq_repro::util::rng::SplitMix64;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let model = args.first().map(String::as_str).unwrap_or("s");
+    let n_req: usize =
+        args.get(1).and_then(|s| s.parse().ok()).unwrap_or(24);
+
+    let dir = Path::new("artifacts");
+    let mut engine = Engine::load(dir)?;
+    let tok = Tokenizer::from_manifest(&engine.manifest);
+    let entry = engine.manifest.model(model)?.clone();
+    let world = World::build(family_world_seed(entry.family));
+    let cal = calib::load_calibration(dir, model)
+        .or_else(|_| calib::calibrate(&mut engine, model))?;
+
+    let make_trace = |seed: u64| -> Vec<Request> {
+        let mut rng = SplitMix64::new(seed);
+        (0..n_req as u64)
+            .map(|id| {
+                let task = [Task::Completion, Task::OpenBook,
+                            Task::ArcEasy][rng.below(3)];
+                let inst = task.generate(&world, &mut rng);
+                Request {
+                    id,
+                    prompt: inst.prompt.iter()
+                        .map(|w| tok.id(w).unwrap()).collect(),
+                    max_new_tokens: 8 + rng.below(9),
+                    params: SamplingParams::greedy(),
+                }
+            })
+            .collect()
+    };
+
+    let mut t = Table::new(
+        &format!("Serving benchmark — model {model}, {n_req} requests, \
+                  decode batch 8"),
+        &["softmax", "tok/s", "p50 ttft (s)", "p50 latency (s)",
+          "mean batch occupancy"]);
+    for (name, quant, c_vec) in [
+        ("exact", QuantMode::None, None),
+        ("EXAQ INT3", QuantMode::Static { bits: 3 },
+         Some(clip_exaq(&cal.layers, 3))),
+        ("EXAQ INT2", QuantMode::Static { bits: 2 },
+         Some(clip_exaq(&cal.layers, 2))),
+    ] {
+        let cfg = ServeConfig {
+            model: model.into(),
+            quant,
+            c_vec,
+            decode_batch: 8,
+        };
+        let (resps, wall, sched) =
+            serve_until_drained(&mut engine, &cfg, make_trace(11))?;
+        let toks: usize = resps.iter().map(|r| r.tokens.len()).sum();
+        t.row(&[name.into(), fnum(toks as f64 / wall, 1),
+                fnum(sched.metrics.ttft.quantile(0.5), 3),
+                fnum(sched.metrics.total_latency.quantile(0.5), 3),
+                fnum(sched.metrics.mean_occupancy(), 2)]);
+        assert_eq!(resps.len(), n_req, "all requests must complete");
+    }
+    println!("{}", t.to_markdown());
+    let _ = exaq_repro::report::write_csv(
+        "reports/serving_benchmark.csv", &t);
+    Ok(())
+}

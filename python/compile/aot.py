@@ -1,0 +1,204 @@
+"""AOT lowering: JAX entry points -> HLO *text* artifacts + manifest.
+
+The interchange format is HLO text, NOT a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids that the image's
+xla_extension 0.5.1 (behind the published `xla` 0.1.6 crate) rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+
+Every artifact is a fixed-shape executable. The quantized variants take the
+per-layer clip thresholds `c_vec[L]` as a *runtime input*, so a single
+lowering serves both the EXAQ and NAIVE rows of Table 2 — the Rust
+coordinator decides the thresholds from calibration statistics
+(rust/src/exaq). Entry points and signatures are recorded in
+artifacts/manifest.json, which rust/src/runtime/manifest.rs parses.
+
+Usage: python -m compile.aot --out ../artifacts [--sizes s,m,l,xl]
+                             [--families 1,2] [--skip-existing]
+"""
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import corpus, model as M
+from .weights_io import load_weights
+
+SEQ = 64
+PREFILL_BATCHES = (1, 8)
+DECODE_BATCHES = (1, 8)
+STATS_BATCH = 4  # paper §5.1.1: calibration runs use batch size 4
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    # print_large_constants=True: the default printer elides dense
+    # constants as `constant({...})`, which xla_extension 0.5.1's text
+    # parser silently materialises as ZEROS (no error!) — the RoPE tables
+    # would vanish. See EXPERIMENTS.md §Pitfalls.
+    return comp.as_hlo_text(True)
+
+
+def _sig(args) -> list[dict]:
+    out = []
+    for name, a in args:
+        out.append({"name": name, "shape": list(a.shape),
+                    "dtype": str(a.dtype)})
+    return out
+
+
+def lower_entry(cfg: M.ModelConfig, entry: str, quant: M.QuantSpec,
+                batch: int):
+    """Build (fn, example_args, input_names) for one artifact."""
+    L, H, hd = cfg.n_layers, cfg.n_heads, cfg.head_dim
+    wspecs = [(n, jax.ShapeDtypeStruct(M.param_shape(cfg, n), jnp.float32))
+              for n in M.param_names(cfg)]
+    nw = len(wspecs)
+    needs_c = quant.kind == "static"
+
+    if entry == "prefill":
+        extra = [("tokens", jax.ShapeDtypeStruct((batch, SEQ), jnp.int32))]
+        if needs_c:
+            extra.append(("c_vec", jax.ShapeDtypeStruct((L,), jnp.float32)))
+
+        def fn(*args):
+            params = M.flat_to_params(cfg, args[:nw])
+            tokens = args[nw]
+            c_vec = args[nw + 1] if needs_c else None
+            return M.prefill(cfg, params, tokens, c_vec, quant, fused=True)
+    elif entry == "decode":
+        kvshape = (L, batch, H, SEQ, hd)
+        extra = [
+            ("token", jax.ShapeDtypeStruct((batch,), jnp.int32)),
+            ("pos", jax.ShapeDtypeStruct((batch,), jnp.int32)),
+            ("kc", jax.ShapeDtypeStruct(kvshape, jnp.float32)),
+            ("vc", jax.ShapeDtypeStruct(kvshape, jnp.float32)),
+        ]
+        if needs_c:
+            extra.append(("c_vec", jax.ShapeDtypeStruct((L,), jnp.float32)))
+
+        def fn(*args):
+            params = M.flat_to_params(cfg, args[:nw])
+            token, pos, kc, vc = args[nw:nw + 4]
+            c_vec = args[nw + 4] if needs_c else None
+            return M.decode(cfg, params, token, pos, kc, vc, c_vec, quant)
+    elif entry == "prefill_stats":
+        extra = [
+            ("tokens", jax.ShapeDtypeStruct((batch, SEQ), jnp.int32)),
+            ("lengths", jax.ShapeDtypeStruct((batch,), jnp.int32)),
+        ]
+
+        def fn(*args):
+            params = M.flat_to_params(cfg, args[:nw])
+            return M.prefill_stats(cfg, params, args[nw], args[nw + 1])
+    else:
+        raise ValueError(entry)
+
+    specs = wspecs + extra
+    return fn, [s for _, s in specs], _sig(specs)
+
+
+def artifact_plan(cfg: M.ModelConfig, full: bool) -> list[dict]:
+    plan = []
+    for b in PREFILL_BATCHES:
+        for q in (M.QuantSpec("none"), M.QuantSpec("static", 2),
+                  M.QuantSpec("static", 3)):
+            plan.append(dict(entry="prefill", quant=q, batch=b))
+    for b in DECODE_BATCHES:
+        for q in (M.QuantSpec("none"), M.QuantSpec("static", 2),
+                  M.QuantSpec("static", 3)):
+            plan.append(dict(entry="decode", quant=q, batch=b))
+    plan.append(dict(entry="prefill_stats", quant=M.QuantSpec("none"),
+                     batch=STATS_BATCH))
+    if full:  # dynamic-statistics ablation (DESIGN.md experiment index)
+        for kind in ("dynamic_exaq", "dynamic_naive"):
+            plan.append(dict(entry="prefill", quant=M.QuantSpec(kind, 2),
+                             batch=1))
+    return plan
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--sizes", default="s,m,l,xl")
+    ap.add_argument("--families", default="1,2")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = {
+        "format": 1,
+        "seq": SEQ,
+        "vocab": corpus.VOCAB,
+        "specials": {"pad": corpus.PAD, "bos": corpus.BOS,
+                     "eos": corpus.EOS, "sep": corpus.SEP},
+        "table1": {str(k): list(v) for k, v in
+                   __import__("compile.kernels.ref", fromlist=["ref"])
+                   .EXAQ_TABLE1.items()},
+        "models": {},
+    }
+
+    for family in [int(f) for f in args.families.split(",")]:
+        table = M.SIZES if family == 1 else M.V2_SIZES
+        sizes = [s for s in args.sizes.split(",") if s in table]
+        for size in sizes:
+            cfg = table[size]
+            wpath = os.path.join(args.out, f"weights_{cfg.name}.bin")
+            if not os.path.exists(wpath):
+                print(f"!! missing {wpath}; run compile.train first — skip")
+                continue
+            entry_list = []
+            # ablation artifacts only for family-1 "m"
+            full = (family == 1 and size == "m")
+            for item in artifact_plan(cfg, full):
+                q: M.QuantSpec = item["quant"]
+                key = f"{item['entry']}_{cfg.name}_{q.tag()}_b{item['batch']}"
+                path = os.path.join(args.out, key + ".hlo.txt")
+                fn, specs, sig = lower_entry(cfg, item["entry"], q,
+                                             item["batch"])
+                if not (args.skip_existing and os.path.exists(path)):
+                    t0 = time.time()
+                    lowered = jax.jit(fn).lower(*specs)
+                    text = to_hlo_text(lowered)
+                    with open(path, "w") as f:
+                        f.write(text)
+                    print(f"  {key}: {len(text) / 1e6:.2f} MB "
+                          f"({time.time() - t0:.1f}s)", flush=True)
+                entry_list.append({
+                    "key": key, "file": os.path.basename(path),
+                    "entry": item["entry"], "quant": q.kind,
+                    "bits": q.bits if q.kind != "none" else 0,
+                    "batch": item["batch"], "seq": SEQ, "inputs": sig,
+                })
+            manifest["models"][cfg.name] = {
+                "family": family,
+                "config": {
+                    "name": cfg.name, "n_layers": cfg.n_layers,
+                    "d_model": cfg.d_model, "n_heads": cfg.n_heads,
+                    "d_ff": cfg.d_ff, "vocab_size": cfg.vocab_size,
+                    "max_seq": SEQ, "head_dim": cfg.head_dim,
+                    "n_params": cfg.n_params(),
+                },
+                "weights": os.path.basename(wpath),
+                "param_names": M.param_names(cfg),
+                "artifacts": entry_list,
+            }
+
+    mpath = os.path.join(args.out, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {mpath} ({len(manifest['models'])} models)")
+
+
+if __name__ == "__main__":
+    main()

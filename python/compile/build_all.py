@@ -1,0 +1,69 @@
+"""Build the complete artifact bundle: train -> calibrate -> AOT.
+
+Driven by `make artifacts`. Each stage is skipped when its outputs are
+newer than its inputs (cheap mtime checks), so repeated `make artifacts`
+is a no-op.
+
+Usage: python -m compile.build_all --out ../artifacts
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import subprocess
+import sys
+
+FAMILY_SIZES = {1: ["s", "m", "l", "xl"], 2: ["s", "m", "l"]}
+TRAIN_STEPS = {"s": 800, "m": 800, "l": 700, "xl": 700}
+
+
+def run(mod: str, *args: str) -> None:
+    cmd = [sys.executable, "-m", mod, *args]
+    print("::", " ".join(cmd), flush=True)
+    subprocess.run(cmd, check=True, cwd=os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__))))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    here = os.path.dirname(os.path.abspath(__file__))
+    out = os.path.normpath(os.path.join(here, "..", args.out)) \
+        if not os.path.isabs(args.out) else args.out
+    os.makedirs(out, exist_ok=True)
+
+    src_mtime = max(os.path.getmtime(os.path.join(here, f))
+                    for f in os.listdir(here) if f.endswith(".py"))
+
+    from .model import SIZES, V2_SIZES  # noqa: delayed import (jax init)
+    for family, sizes in FAMILY_SIZES.items():
+        table = SIZES if family == 1 else V2_SIZES
+        for size in sizes:
+            name = table[size].name
+            wpath = os.path.join(out, f"weights_{name}.bin")
+            if (args.force or not os.path.exists(wpath)
+                    or os.path.getmtime(wpath) < src_mtime):
+                run("compile.train", "--size", size, "--family", str(family),
+                    "--steps", str(TRAIN_STEPS[size]), "--out", args.out)
+            else:
+                print(f":: weights_{name}.bin up to date", flush=True)
+
+    manifest = os.path.join(out, "manifest.json")
+    stale = (args.force or not os.path.exists(manifest)
+             or os.path.getmtime(manifest) < src_mtime)
+    run("compile.aot", "--out", args.out,
+        *([] if stale else ["--skip-existing"]))
+
+    calib = os.path.join(out, "calibration.json")
+    if (args.force or not os.path.exists(calib)
+            or os.path.getmtime(calib) < os.path.getmtime(manifest)):
+        run("compile.calibrate", "--out", args.out)
+    else:
+        print(":: calibration.json up to date", flush=True)
+    print(":: artifacts complete", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,105 @@
+"""Build-time calibration: per-layer softmax-input statistics.
+
+Mirrors the paper's §5.1.1 protocol: a calibration set of 100 sequences run
+as 25 iterations of batch 4. For each model we record per-layer
+(sigma, min, mean, count) plus the per-iteration sigma series that
+regenerates Fig. 6 (sigma of softmax inputs across layers and iterations).
+
+The Rust side consumes artifacts/calibration.json and derives the clip
+thresholds itself (rust/src/exaq/clip.rs):
+    EXAQ : C_l = slope_M * sigma_l + intercept_M     (Table 1)
+    NAIVE: C_l = (min_l + max_l) / 2 = min_l / 2     (max = 0 post-shift)
+
+The same statistics can be regenerated at runtime by the Rust calibration
+driver (rust/src/calib) through the `prefill_stats` artifact; this script
+exists so `make artifacts` yields a complete, self-consistent bundle
+without needing the Rust binary mid-build.
+
+Usage: python -m compile.calibrate --out ../artifacts
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import corpus, model as M
+from .train import FAMILY_WORLD_SEED
+from .weights_io import load_weights
+
+CALIB_ITERS = 25
+CALIB_BATCH = 4
+CALIB_SEED = 20240555
+
+
+def welford_merge(a, b):
+    """a,b: (count, mean, M2, min) -> combined."""
+    n1, m1, M1, mn1 = a
+    n2, m2, M2, mn2 = b
+    n = n1 + n2
+    d = m2 - m1
+    return (n, m1 + d * n2 / n, M1 + M2 + d * d * n1 * n2 / n,
+            min(mn1, mn2))
+
+
+def calibrate_model(cfg: M.ModelConfig, params, family: int):
+    world = corpus.build_world(FAMILY_WORLD_SEED[family])
+    seq = M.SIZES["s"].max_seq if False else 64
+    toks = corpus.generate_tokens(
+        world, CALIB_SEED, CALIB_ITERS * CALIB_BATCH * seq + 1)
+    agg = [None] * cfg.n_layers
+    fig6 = []  # per-iteration, per-layer sigma
+    for it in range(CALIB_ITERS):
+        lo = it * CALIB_BATCH * seq
+        t = jnp.asarray(np.array(toks[lo: lo + CALIB_BATCH * seq],
+                                 dtype=np.int32).reshape(CALIB_BATCH, seq))
+        _, st = M.prefill_stats(cfg, params, t,
+                                jnp.full((CALIB_BATCH,), seq, jnp.int32))
+        st = np.asarray(st, np.float64)
+        fig6.append([float(np.sqrt(r[2] / r[0])) for r in st])
+        for layer in range(cfg.n_layers):
+            row = tuple(st[layer])
+            agg[layer] = row if agg[layer] is None else \
+                welford_merge(agg[layer], row)
+    layers = []
+    for n, mean, m2, mn in agg:
+        layers.append({"count": n, "mean": mean,
+                       "sigma": float(np.sqrt(m2 / n)), "min": mn})
+    return {"layers": layers, "fig6_sigma": fig6,
+            "iters": CALIB_ITERS, "batch": CALIB_BATCH, "seq": seq}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+
+    mpath = os.path.join(args.out, "manifest.json")
+    with open(mpath) as f:
+        manifest = json.load(f)
+
+    out = {"protocol": {"iters": CALIB_ITERS, "batch": CALIB_BATCH,
+                        "set_size": CALIB_ITERS * CALIB_BATCH},
+           "models": {}}
+    for name, info in manifest["models"].items():
+        c = info["config"]
+        cfg = M.ModelConfig(
+            name=c["name"], n_layers=c["n_layers"], d_model=c["d_model"],
+            n_heads=c["n_heads"], d_ff=c["d_ff"],
+            vocab_size=c["vocab_size"], max_seq=c["max_seq"])
+        params = {n: jnp.asarray(a) for n, a in load_weights(
+            os.path.join(args.out, info["weights"]))}
+        out["models"][name] = calibrate_model(cfg, params, info["family"])
+        sig = [round(l["sigma"], 3) for l in out["models"][name]["layers"]]
+        print(f"{name}: sigma per layer = {sig}")
+
+    with open(os.path.join(args.out, "calibration.json"), "w") as f:
+        json.dump(out, f, indent=1)
+    print("wrote calibration.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,315 @@
+"""Procedural world, vocabulary and training corpus for tinyllama.
+
+This module is the *specification* of the synthetic language shared between
+the Python build path (training corpus) and the Rust runtime
+(`rust/src/eval/world.rs`, the eval-task generators). Both sides implement
+the exact same deterministic derivation:
+
+  SplitMix64(world_seed) drives, in this exact call order:
+    1. for each object i in 0..N_OBJECTS: color[i], material[i]
+    2. a Fisher-Yates shuffle of the object indices (owned-object permutation)
+    3. for each person p in 0..N_PEOPLE: place[p]
+
+Cross-language consistency is enforced by the golden dump
+(`artifacts/world.json`, written by `dump_world`) which the Rust test-suite
+re-derives and compares byte-for-byte.
+
+The language is a closed-vocabulary, fully regular "world-fact" English:
+attribute statements, ownership, location, hardness comparisons, Q/A forms
+and two-hop property chains. The seven evaluation task families in
+`rust/src/eval/tasks.rs` are drawn from the same templates, so evaluation
+prompts are in-distribution and a converged model scores far above chance —
+which is what makes softmax-quantization damage measurable (the paper's
+Table 2 axis).
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass
+
+MASK64 = (1 << 64) - 1
+
+
+class SplitMix64:
+    """Deterministic PRNG, mirrored bit-for-bit in rust/src/util/rng.rs."""
+
+    def __init__(self, seed: int):
+        self.state = seed & MASK64
+
+    def next_u64(self) -> int:
+        self.state = (self.state + 0x9E3779B97F4A7C15) & MASK64
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK64
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK64
+        return (z ^ (z >> 31)) & MASK64
+
+    def below(self, n: int) -> int:
+        """Unbiased-enough modulo draw (spec: plain modulo, both languages)."""
+        return self.next_u64() % n
+
+    def uniform(self) -> float:
+        """f64 in [0,1): top 53 bits / 2^53 (same derivation in Rust)."""
+        return (self.next_u64() >> 11) / float(1 << 53)
+
+
+# ---------------------------------------------------------------------------
+# Fixed word lists — identical constants in rust/src/eval/world.rs.
+# ---------------------------------------------------------------------------
+NAMES = [
+    "alice", "bob", "carol", "david", "erin", "frank", "grace", "henry",
+    "iris", "jack", "karen", "leo", "mona", "nina", "oscar", "paul",
+    "quinn", "rosa", "sam", "tina",
+]
+OBJECTS = [
+    "ball", "cup", "book", "knife", "hammer", "pillow", "bottle", "lamp",
+    "chair", "rope", "coin", "plate", "shirt", "box", "mirror", "brick",
+    "blanket", "spoon", "vase", "drum", "kite", "glove", "candle", "basket",
+]
+PLACES = [
+    "kitchen", "garden", "library", "garage", "park", "office", "attic",
+    "cellar", "market", "station", "museum", "bakery",
+]
+COLORS = ["red", "blue", "green", "yellow", "black", "white", "purple", "orange"]
+MATERIALS = ["wood", "metal", "glass", "stone", "cloth", "plastic", "rubber", "paper"]
+PROPERTIES = ["hard", "soft", "fragile", "sturdy", "heavy", "light"]
+FUNCTION_WORDS = [
+    "the", "is", "in", "has", "made", "of", "than", "harder", "softer",
+    "question", "answer", "yes", "no", "it", "belongs", "to", "a",
+    "which", "or",
+]
+PUNCT = [".", "?", ":"]
+SPECIALS = ["<pad>", "<bos>", "<eos>", "<sep>"]
+
+#: material -> characteristic property (the "open book" fact table).
+MATERIAL_PROP = {
+    "wood": "sturdy",
+    "metal": "heavy",
+    "glass": "fragile",
+    "stone": "hard",
+    "cloth": "soft",
+    "plastic": "light",
+    "rubber": "soft",
+    "paper": "fragile",
+}
+#: material -> hardness rank for comparison sentences (higher = harder).
+HARDNESS = {
+    "stone": 7, "metal": 6, "wood": 5, "glass": 4,
+    "plastic": 3, "rubber": 2, "paper": 1, "cloth": 0,
+}
+
+VOCAB: list[str] = (
+    SPECIALS + NAMES + OBJECTS + PLACES + COLORS + MATERIALS + PROPERTIES
+    + FUNCTION_WORDS + PUNCT
+)
+TOK = {w: i for i, w in enumerate(VOCAB)}
+VOCAB_SIZE = len(VOCAB)
+PAD, BOS, EOS, SEP = TOK["<pad>"], TOK["<bos>"], TOK["<eos>"], TOK["<sep>"]
+
+N_PEOPLE, N_OBJECTS, N_PLACES = len(NAMES), len(OBJECTS), len(PLACES)
+N_COLORS, N_MATERIALS = len(COLORS), len(MATERIALS)
+
+
+def encode(words: list[str]) -> list[int]:
+    return [TOK[w] for w in words]
+
+
+def decode(ids) -> list[str]:
+    return [VOCAB[int(i)] for i in ids]
+
+
+# ---------------------------------------------------------------------------
+# World derivation
+# ---------------------------------------------------------------------------
+@dataclass
+class World:
+    seed: int
+    color: list[int]      # object index  -> color index
+    material: list[int]   # object index  -> material index
+    owned: list[int]      # person index  -> object index (injective)
+    place: list[int]      # person index  -> place index
+
+    def object_color(self, obj: int) -> str:
+        return COLORS[self.color[obj]]
+
+    def object_material(self, obj: int) -> str:
+        return MATERIALS[self.material[obj]]
+
+    def object_property(self, obj: int) -> str:
+        return MATERIAL_PROP[self.object_material(obj)]
+
+    def object_hardness(self, obj: int) -> int:
+        return HARDNESS[self.object_material(obj)]
+
+    def owner_of(self, obj: int) -> int | None:
+        try:
+            return self.owned.index(obj)
+        except ValueError:
+            return None
+
+
+def build_world(seed: int) -> World:
+    rng = SplitMix64(seed)
+    color = []
+    material = []
+    for _ in range(N_OBJECTS):
+        color.append(rng.below(N_COLORS))
+        material.append(rng.below(N_MATERIALS))
+    # Fisher-Yates over object indices; person p owns perm[p].
+    perm = list(range(N_OBJECTS))
+    for i in range(N_OBJECTS - 1, 0, -1):
+        j = rng.below(i + 1)
+        perm[i], perm[j] = perm[j], perm[i]
+    owned = perm[:N_PEOPLE]
+    place = [rng.below(N_PLACES) for _ in range(N_PEOPLE)]
+    return World(seed=seed, color=color, material=material, owned=owned, place=place)
+
+
+# ---------------------------------------------------------------------------
+# Sentence templates. Each generator returns a list of words (already split).
+# Template ids are shared with Rust (eval task families reference them).
+# ---------------------------------------------------------------------------
+def s_color(w: World, obj: int) -> list[str]:
+    return ["the", OBJECTS[obj], "is", w.object_color(obj), "."]
+
+
+def s_material(w: World, obj: int) -> list[str]:
+    return ["the", OBJECTS[obj], "is", "made", "of", w.object_material(obj), "."]
+
+
+def s_mat_prop(mat: int) -> list[str]:
+    m = MATERIALS[mat]
+    return [m, "is", MATERIAL_PROP[m], "."]
+
+
+def s_place(w: World, person: int) -> list[str]:
+    return [NAMES[person], "is", "in", "the", PLACES[w.place[person]], "."]
+
+
+def s_has(w: World, person: int) -> list[str]:
+    return [NAMES[person], "has", "the", OBJECTS[w.owned[person]], "."]
+
+
+def s_belongs(w: World, person: int) -> list[str]:
+    return ["the", OBJECTS[w.owned[person]], "belongs", "to", NAMES[person], "."]
+
+
+def s_harder(w: World, a: int, b: int) -> list[str]:
+    """Comparison sentence; only emitted when strictly comparable."""
+    ha, hb = w.object_hardness(a), w.object_hardness(b)
+    if ha > hb:
+        return ["the", OBJECTS[a], "is", "harder", "than", "the", OBJECTS[b], "."]
+    return ["the", OBJECTS[b], "is", "harder", "than", "the", OBJECTS[a], "."]
+
+
+def s_bool_qa(w: World, obj: int, color: int) -> list[str]:
+    ans = "yes" if w.color[obj] == color else "no"
+    return ["question", ":", "is", "the", OBJECTS[obj], COLORS[color], "?",
+            "answer", ":", ans, "."]
+
+
+def s_which_harder(w: World, a: int, b: int) -> list[str]:
+    winner = a if w.object_hardness(a) > w.object_hardness(b) else b
+    return ["question", ":", "which", "is", "harder", ":", OBJECTS[a], "or",
+            OBJECTS[b], "?", "answer", ":", OBJECTS[winner], "."]
+
+
+def s_coref(w: World, person: int) -> list[str]:
+    obj = w.owned[person]
+    return [NAMES[person], "has", "the", OBJECTS[obj], ".",
+            "it", "is", w.object_color(obj), "."]
+
+
+def s_chain(w: World, obj: int) -> list[str]:
+    m = w.object_material(obj)
+    return ["the", OBJECTS[obj], "is", "made", "of", m, ".",
+            m, "is", MATERIAL_PROP[m], ".",
+            "the", OBJECTS[obj], "is", MATERIAL_PROP[m], "."]
+
+
+def s_prop_direct(w: World, obj: int) -> list[str]:
+    """Two-hop fact stated directly (teaches the arc-challenge composition)."""
+    return ["the", OBJECTS[obj], "is", w.object_property(obj), "."]
+
+
+#: template id -> (sampler arity spec). Sampling order of rng calls is part
+#: of the spec: first the template index, then each argument in order.
+N_TEMPLATES = 11
+
+
+def sample_sentence(w: World, rng: SplitMix64) -> list[str]:
+    t = rng.below(N_TEMPLATES)
+    if t == 0:
+        return s_color(w, rng.below(N_OBJECTS))
+    if t == 1:
+        return s_material(w, rng.below(N_OBJECTS))
+    if t == 2:
+        return s_mat_prop(rng.below(N_MATERIALS))
+    if t == 3:
+        return s_place(w, rng.below(N_PEOPLE))
+    if t == 4:
+        return s_has(w, rng.below(N_PEOPLE))
+    if t == 5:
+        return s_belongs(w, rng.below(N_PEOPLE))
+    if t == 6:
+        a = rng.below(N_OBJECTS)
+        b = rng.below(N_OBJECTS)
+        while w.object_hardness(a) == w.object_hardness(b):
+            b = rng.below(N_OBJECTS)
+        return s_harder(w, a, b)
+    if t == 7:
+        obj = rng.below(N_OBJECTS)
+        # 50/50 true/false colour question: draw a colour, coin-flip to force
+        # the true colour.
+        color = rng.below(N_COLORS)
+        if rng.below(2) == 0:
+            color = w.color[obj]
+        return s_bool_qa(w, obj, color)
+    if t == 8:
+        a = rng.below(N_OBJECTS)
+        b = rng.below(N_OBJECTS)
+        while w.object_hardness(a) == w.object_hardness(b):
+            b = rng.below(N_OBJECTS)
+        return s_which_harder(w, a, b)
+    if t == 9:
+        return s_coref(w, rng.below(N_PEOPLE))
+    return s_chain(w, rng.below(N_OBJECTS))
+
+
+def generate_tokens(world: World, corpus_seed: int, n_tokens: int) -> list[int]:
+    """Token stream: sentences back-to-back, <sep> between documents of ~8
+    sentences. The stream is later chunked into fixed-length rows."""
+    rng = SplitMix64(corpus_seed)
+    out: list[int] = [BOS]
+    sent_in_doc = 0
+    while len(out) < n_tokens:
+        out.extend(encode(sample_sentence(world, rng)))
+        sent_in_doc += 1
+        if sent_in_doc == 8:
+            out.append(SEP)
+            sent_in_doc = 0
+    return out[:n_tokens]
+
+
+def dump_world(world: World, path: str) -> None:
+    """Golden dump consumed by the Rust cross-check test."""
+    payload = {
+        "seed": world.seed,
+        "vocab": VOCAB,
+        "color": world.color,
+        "material": world.material,
+        "owned": world.owned,
+        "place": world.place,
+        "material_prop": MATERIAL_PROP,
+        "hardness": HARDNESS,
+        # A short golden corpus prefix pins the sentence-sampler spec too.
+        "corpus_prefix": generate_tokens(world, corpus_seed=world.seed + 1,
+                                         n_tokens=256),
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+
+
+if __name__ == "__main__":
+    w = build_world(1)
+    toks = generate_tokens(w, 2, 200)
+    print(" ".join(decode(toks)))

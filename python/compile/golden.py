@@ -1,0 +1,70 @@
+"""Golden outputs for the Rust integration tests.
+
+Runs the JAX model directly (the same code that was AOT-lowered) on fixed
+inputs and records logits, so `rust/tests/engine_integration.rs` can assert
+that the full AOT -> HLO-text -> PJRT path reproduces JAX numerics.
+
+Usage: python -m compile.golden --out ../artifacts
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import corpus, model as M
+from .weights_io import load_weights
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--model", default="s")
+    args = ap.parse_args()
+
+    cfg = M.SIZES[args.model]
+    params = {n: jnp.asarray(a) for n, a in load_weights(
+        os.path.join(args.out, f"weights_{cfg.name}.bin"))}
+
+    world = corpus.build_world(1)
+    toks = corpus.generate_tokens(world, 424242, 64)
+    tokens = jnp.asarray(np.array(toks, np.int32)[None, :])  # [1, 64]
+
+    out = {"model": cfg.name, "tokens": [int(t) for t in toks]}
+
+    # NONE prefill: last-position logits
+    lg, _, _ = M.prefill(cfg, params, tokens, None, M.QuantSpec("none"),
+                         fused=True)
+    out["logits_none_last"] = [float(x) for x in np.asarray(lg)[0, -1]]
+
+    # static q2 prefill with a fixed clip vector
+    cv = jnp.full((cfg.n_layers,), -6.0, jnp.float32)
+    lq, _, _ = M.prefill(cfg, params, tokens, cv, M.QuantSpec("static", 2),
+                         fused=True)
+    out["c_vec"] = [-6.0] * cfg.n_layers
+    out["logits_q2_last"] = [float(x) for x in np.asarray(lq)[0, -1]]
+
+    # decode consistency fixture: prefill 32 tokens, then the expected
+    # logits when decoding token 32 at position 32.
+    t32 = tokens[:, :32]
+    lg32, kc, vc = M.prefill(cfg, params, t32, None, M.QuantSpec("none"),
+                             fused=True)
+    pad = cfg.max_seq - 32
+    kc = jnp.pad(kc, ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0)))
+    vc = jnp.pad(vc, ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0)))
+    ld, _, _ = M.decode(cfg, params, tokens[:, 32], jnp.array([32]),
+                        kc, vc, None, M.QuantSpec("none"))
+    out["decode_pos"] = 32
+    out["logits_decode32"] = [float(x) for x in np.asarray(ld)[0]]
+
+    path = os.path.join(args.out, f"golden_{cfg.name}.json")
+    with open(path, "w") as f:
+        json.dump(out, f)
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

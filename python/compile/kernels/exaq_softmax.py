@@ -1,0 +1,195 @@
+"""Pallas implementation of the EXAQ quantized softmax (paper §4, Algo. 2).
+
+Two kernels:
+
+  * `exaq_softmax_static`  — the hardware-faithful path. The clip threshold
+    C is a per-call scalar (calibrated per layer, paper §5.1.1), so the two
+    lookup tables are genuinely shared across the whole tensor:
+      - LUT_exp  (2^M entries)      : code -> exp(v_code)      (paper §4.1)
+      - LUT_sum  ((2^M)^g entries)  : packed key of g codes -> sum of their
+        exps (paper §4.2, Fig. 5). g = 4 at M=2 (byte key), 2 at M=3/4.
+    The denominator is computed with S/g LUT_sum gathers plus a closed-form
+    correction for masked lanes (masked lanes are forced onto code 0, whose
+    value is exactly C, so their total contribution is (S-n)*exp(C)).
+
+  * `quant_softmax_dynamic` — the ablation path: per-row statistics decide C
+    (EXAQ: C = slope*sigma + intercept; NAIVE: C = min/2). Per-row C means
+    per-row tables, which defeats the LUT purpose in hardware, so this
+    variant takes the direct exp/sum path; it exists to measure how much
+    accuracy static calibration gives up (DESIGN.md experiment index).
+
+TPU adaptation (DESIGN.md §3): the LUTs live in VMEM and the gathers are
+one-op `jnp.take` per lane on the VPU — the analogue of the paper's 1-cycle
+scalar LUT unit on Gaudi-2. Block shape (block_rows, S) keeps one softmax
+row resident; quantize -> gather -> packed-sum -> normalize fuse into a
+single HBM read + write per element.
+
+Kernels are lowered with `interpret=True` everywhere: the CPU PJRT plugin
+cannot execute Mosaic custom-calls, and interpret mode traces to plain HLO
+that the Rust runtime can run (see /opt/xla-example/README.md).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+_NEG = jnp.finfo(jnp.float32).min
+
+
+def _pad_rows(x, vlen, block_rows):
+    """Pad the row axis up to a multiple of block_rows with dummy rows
+    (vlen = S, x = 0) so the grid divides evenly; caller slices back."""
+    R = x.shape[0]
+    pad = (-R) % block_rows
+    if pad:
+        S = x.shape[1]
+        x = jnp.concatenate([x, jnp.zeros((pad, S), x.dtype)], axis=0)
+        vlen = jnp.concatenate(
+            [vlen, jnp.full((pad,), S, vlen.dtype)], axis=0)
+    return x, vlen, R
+
+
+def _static_kernel(len_ref, x_ref, lexp_ref, lsum_ref, c_ref, o_ref,
+                   *, bits: int, group: int):
+    x = x_ref[...]                       # (BR, S)
+    vlen = len_ref[...]                  # (BR,)
+    C = c_ref[0]
+    BR, S = x.shape
+    nlev = (1 << bits) - 1
+    step = -C / nlev
+
+    lanes = jax.lax.broadcasted_iota(jnp.int32, (BR, S), 1)
+    valid = lanes < vlen[:, None]
+
+    # max over valid lanes, shift so xs <= 0
+    m = jnp.max(jnp.where(valid, x, _NEG), axis=1, keepdims=True)
+    xs = jnp.where(valid, jnp.clip(x - m, C, 0.0), C)
+
+    # quantize: mid-tread codes; masked lanes land exactly on code 0
+    codes = jnp.clip(jnp.round((xs - C) / step), 0, nlev).astype(jnp.int32)
+
+    # (1) exponent via LUT_exp — single gather per lane (Algo.2 line 6)
+    e = jnp.take(lexp_ref[...], codes, axis=0)
+
+    # (2) denominator via LUT_sum over packed keys (Algo.2 lines 10-13):
+    # S/g gathers instead of S accumulations.
+    keyed = codes.reshape(BR, S // group, group)
+    key = keyed[..., 0]
+    for j in range(1, group):
+        key = key + (keyed[..., j] << (bits * j))
+    gsum = jnp.take(lsum_ref[...], key, axis=0)          # (BR, S/g)
+    total = jnp.sum(gsum, axis=1)                        # (BR,)
+    # masked-lane correction: each masked lane contributed exp(C) = LUT[0]
+    n_masked = (S - vlen).astype(jnp.float32)
+    denom = jnp.maximum(total - n_masked * lexp_ref[0], 1e-30)
+
+    # (3) normalize
+    o_ref[...] = jnp.where(valid, e / denom[:, None], 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "block_rows"))
+def exaq_softmax_static(x, valid_len, C, *, bits: int = 2,
+                        block_rows: int = 8):
+    """Quantized softmax with a shared (calibrated) clip threshold.
+
+    x: [R, S] float32 rows; valid_len: [R] int32; C: scalar (< 0; clamped).
+    Returns [R, S] probabilities, masked lanes exactly 0.
+    """
+    R0, S = x.shape
+    group = ref.lut_group(bits)
+    if S % group:
+        raise ValueError(f"row length {S} not divisible by group {group}")
+    C = jnp.minimum(jnp.asarray(C, jnp.float32), -ref.CLIP_EPS)
+    lexp = ref.lut_exp_table(C, bits)
+    lsum = ref.lut_sum_table(C, bits)
+    x, valid_len, R0 = _pad_rows(x, valid_len.astype(jnp.int32), block_rows)
+    R = x.shape[0]
+
+    out = pl.pallas_call(
+        functools.partial(_static_kernel, bits=bits, group=group),
+        grid=(R // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows,), lambda i: (i,)),
+            pl.BlockSpec((block_rows, S), lambda i: (i, 0)),
+            pl.BlockSpec(lexp.shape, lambda i: (0,)),
+            pl.BlockSpec(lsum.shape, lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, S), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, S), jnp.float32),
+        interpret=True,
+    )(valid_len, x, lexp, lsum, C.reshape(1))
+    return out[:R0]
+
+
+def _dynamic_kernel(len_ref, x_ref, coef_ref, o_ref, *, bits: int,
+                    naive: bool):
+    x = x_ref[...]
+    vlen = len_ref[...]
+    BR, S = x.shape
+    nlev = (1 << bits) - 1
+
+    lanes = jax.lax.broadcasted_iota(jnp.int32, (BR, S), 1)
+    valid = lanes < vlen[:, None]
+    n = jnp.maximum(vlen, 1).astype(jnp.float32)
+
+    m = jnp.max(jnp.where(valid, x, _NEG), axis=1, keepdims=True)
+    xs = jnp.where(valid, x - m, 0.0)
+
+    if naive:
+        # NAIVE baseline: midpoint of [min, max] = min/2 (max(xs) == 0)
+        mn = jnp.min(jnp.where(valid, xs, 0.0), axis=1)
+        C = mn / 2.0
+    else:
+        s1 = jnp.sum(jnp.where(valid, xs, 0.0), axis=1)
+        s2 = jnp.sum(jnp.where(valid, xs * xs, 0.0), axis=1)
+        mean = s1 / n
+        sigma = jnp.sqrt(jnp.maximum(s2 / n - mean * mean, 0.0))
+        C = coef_ref[0] * sigma + coef_ref[1]
+    C = jnp.minimum(C, -ref.CLIP_EPS)[:, None]
+    step = -C / nlev
+
+    xs = jnp.where(valid, jnp.clip(xs, C, 0.0), C)
+    codes = jnp.clip(jnp.round((xs - C) / step), 0, nlev)
+    e = jnp.exp(C + codes * step)
+    denom = jnp.maximum(
+        jnp.sum(jnp.where(valid, e, 0.0), axis=1, keepdims=True), 1e-30)
+    o_ref[...] = jnp.where(valid, e / denom, 0.0)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bits", "mode", "block_rows"))
+def quant_softmax_dynamic(x, valid_len, *, bits: int = 2,
+                          mode: str = "exaq", block_rows: int = 8,
+                          slope: float | None = None,
+                          intercept: float | None = None):
+    """Dynamic-statistics quantized softmax (per-row C). mode: exaq|naive."""
+    R0, S = x.shape
+    if mode == "exaq":
+        if slope is None or intercept is None:
+            slope, intercept = ref.EXAQ_TABLE1[bits]
+    else:
+        slope, intercept = 0.0, 0.0
+    coef = jnp.array([slope, intercept], jnp.float32)
+    x, valid_len, R0 = _pad_rows(x, valid_len.astype(jnp.int32), block_rows)
+    R = x.shape[0]
+
+    out = pl.pallas_call(
+        functools.partial(_dynamic_kernel, bits=bits,
+                          naive=(mode == "naive")),
+        grid=(R // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows,), lambda i: (i,)),
+            pl.BlockSpec((block_rows, S), lambda i: (i, 0)),
+            pl.BlockSpec((2,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, S), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, S), jnp.float32),
+        interpret=True,
+    )(valid_len, x, coef)
+    return out[:R0]

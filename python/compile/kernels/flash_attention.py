@@ -1,0 +1,125 @@
+"""Fused causal attention with EXAQ-quantized softmax (one Pallas kernel).
+
+The unfused model path materialises the full [B,H,Q,S] score tensor in HBM,
+round-trips it through the softmax kernel, then reads it again for the PV
+matmul — three HBM passes over the largest tensor in the layer. This kernel
+keeps one (q-block, S) score tile in VMEM and does
+
+    QK^T -> max-shift -> quantize -> LUT_exp gather -> LUT_sum packed
+    denominator -> normalize -> PV
+
+in a single pass: one HBM read of Q/K/V and one write of O per element,
+which is the paper's bandwidth argument (§1: "runtime, bandwidth and
+memory") realised with BlockSpec instead of threadblocks (DESIGN.md §3).
+
+Grid: (B*H, Q/block_q). K and V for the whole row (S, hd) are resident in
+VMEM — fine for the sequence lengths this repo targets (S <= 512; VMEM
+budget table in EXPERIMENTS.md §Perf). bits=None gives the exact-softmax
+fused baseline used for the NONE rows of Table 2.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+_NEG = jnp.finfo(jnp.float32).min
+
+
+def _fused_kernel(q_ref, k_ref, v_ref, lexp_ref, lsum_ref, c_ref, o_ref,
+                  *, bits, group, scale, q_offset, block_q):
+    # q: (1, BQ, hd); k/v: (1, S, hd) — leading dim is the B*H grid axis.
+    q = q_ref[0]                       # (BQ, hd)
+    k = k_ref[0]                       # (S, hd)
+    v = v_ref[0]
+    BQ, hd = q.shape
+    S = k.shape[0]
+
+    scores = jnp.dot(q, k.T) * scale   # (BQ, S) — MXU work
+
+    # causal validity: query row i (global q_offset + block index) sees
+    # k-positions 0..global_i (+ kv history offset folded into q_offset).
+    qi = pl.program_id(1) * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (BQ, S), 0)
+    lanes = jax.lax.broadcasted_iota(jnp.int32, (BQ, S), 1)
+    valid = lanes <= (qi + q_offset)
+
+    m = jnp.max(jnp.where(valid, scores, _NEG), axis=1, keepdims=True)
+    if bits is None:
+        e = jnp.where(valid, jnp.exp(scores - m), 0.0)
+        denom = jnp.maximum(jnp.sum(e, axis=1, keepdims=True), 1e-30)
+        p = e / denom
+    else:
+        C = c_ref[0]
+        nlev = (1 << bits) - 1
+        step = -C / nlev
+        xs = jnp.where(valid, jnp.clip(scores - m, C, 0.0), C)
+        codes = jnp.clip(jnp.round((xs - C) / step), 0, nlev).astype(
+            jnp.int32)
+        e = jnp.take(lexp_ref[...], codes, axis=0)
+        keyed = codes.reshape(BQ, S // group, group)
+        key = keyed[..., 0]
+        for j in range(1, group):
+            key = key + (keyed[..., j] << (bits * j))
+        total = jnp.sum(jnp.take(lsum_ref[...], key, axis=0), axis=1)
+        n_masked = jnp.sum(jnp.where(valid, 0.0, 1.0), axis=1)
+        denom = jnp.maximum(total - n_masked * lexp_ref[0], 1e-30)
+        p = jnp.where(valid, e / denom[:, None], 0.0)
+
+    o_ref[0] = jnp.dot(p, v)           # (BQ, hd)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bits", "block_q", "q_offset"))
+def fused_attention(q, k, v, C=None, *, bits: int | None = 2,
+                    block_q: int = 16, q_offset: int = 0):
+    """Fused causal MHA. q: [B,H,Q,hd]; k,v: [B,H,S,hd]; C scalar clip.
+
+    q_offset: global position of q row 0 relative to the KV sequence
+    (prefill: 0 with Q == S; decode-style: S - Q).
+    """
+    B, H, Q, hd = q.shape
+    S = k.shape[2]
+    group = ref.lut_group(bits) if bits is not None else 1
+    if bits is not None and S % group:
+        raise ValueError(f"S={S} not divisible by LUT group {group}")
+    bq = min(block_q, Q)
+    if Q % bq:
+        raise ValueError(f"Q={Q} not divisible by block_q={bq}")
+    scale = 1.0 / (hd ** 0.5)
+
+    if bits is not None:
+        C = jnp.minimum(jnp.asarray(C, jnp.float32), -ref.CLIP_EPS)
+        lexp = ref.lut_exp_table(C, bits)
+        lsum = ref.lut_sum_table(C, bits)
+        carr = C.reshape(1)
+    else:  # placeholders so the kernel arity is stable
+        lexp = jnp.zeros((1,), jnp.float32)
+        lsum = jnp.zeros((1,), jnp.float32)
+        carr = jnp.zeros((1,), jnp.float32)
+
+    qf = q.reshape(B * H, Q, hd)
+    kf = k.reshape(B * H, S, hd)
+    vf = v.reshape(B * H, S, hd)
+
+    out = pl.pallas_call(
+        functools.partial(_fused_kernel, bits=bits, group=group,
+                          scale=scale, q_offset=q_offset, block_q=bq),
+        grid=(B * H, Q // bq),
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda g, i: (g, i, 0)),
+            pl.BlockSpec((1, S, hd), lambda g, i: (g, 0, 0)),
+            pl.BlockSpec((1, S, hd), lambda g, i: (g, 0, 0)),
+            pl.BlockSpec(lexp.shape, lambda g, i: (0,)),
+            pl.BlockSpec(lsum.shape, lambda g, i: (0,)),
+            pl.BlockSpec((1,), lambda g, i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda g, i: (g, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Q, hd), jnp.float32),
+        interpret=True,
+    )(qf, kf, vf, lexp, lsum, carr)
+    return out.reshape(B, H, Q, hd)

@@ -1,0 +1,182 @@
+"""Pure-jnp reference oracles for the EXAQ kernels.
+
+Everything in this file is the *ground truth* the Pallas kernels are tested
+against (pytest + hypothesis in python/tests/test_kernels.py). The reference
+computes the same mathematics through a different computational path —
+direct `exp` of the quantized values and explicit masked reductions instead
+of LUT gathers and packed LUT_sum accumulation — so agreement is a real
+signal, not a tautology.
+
+Quantization spec (shared with rust/src/exaq/quant.rs — keep in sync):
+
+  Given a softmax input row x[0..S) with `n` valid leading lanes:
+    m      = max over valid lanes
+    xs     = x - m                      (so xs <= 0 on valid lanes)
+    C < 0  = clip threshold (static: calibrated per layer; dynamic EXAQ:
+             C = slope * sigma(xs_valid) + intercept; dynamic NAIVE:
+             C = (min(xs_valid) + max(xs_valid)) / 2 = min(xs_valid)/2)
+    levels = mid-tread on [C, 0]: step = -C / (2^M - 1), v_k = C + k*step,
+             k = clamp(round((xs - C)/step), 0, 2^M - 1)
+    masked lanes are forced to xs = C so they land exactly on code 0
+    e_k    = exp(v_k)   (LUT_exp)
+    denom  = sum of e over valid lanes
+           = (packed LUT_sum over all lanes) - (S - n) * exp(C)
+    out    = e / denom on valid lanes, 0 elsewhere.
+
+  Note vs. the paper: the paper's error analysis uses Δ = -C/2^M (mid-rise);
+  we realise the quantizer as mid-tread with Δ' = -C/(2^M - 1) so that the
+  row maximum (xs = 0) is representable exactly — essential at M=2 where
+  losing the peak of the distribution costs more than the analysis'
+  constant-factor difference. The analytic clipping solver
+  (rust/src/exaq/solver.rs) keeps the paper's Δ so Table 1 reproduces the
+  published coefficients.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+#: Minimum magnitude for the clip threshold; C is clamped to <= -CLIP_EPS so
+#: the quantization step is never zero (degenerate all-equal rows).
+CLIP_EPS = 1e-3
+
+#: Table 1 of the paper: M -> (slope, intercept) of C*(sigma).
+EXAQ_TABLE1 = {2: (-1.66, -1.85), 3: (-1.75, -2.06), 4: (-1.02, -3.62)}
+# M=4 is our extension (paper §4.2 mentions 4-bit packing); coefficients
+# come from rust `repro fit-table1 --bits 4` and are cross-checked in tests.
+
+
+def lut_group(bits: int) -> int:
+    """How many codes are packed into one LUT_sum key (paper: byte-sized
+    keys -> 4 codes at 2 bits; 2 codes at 3 and 4 bits)."""
+    return {2: 4, 3: 2, 4: 2}[bits]
+
+
+def quant_codes(xs, C, bits: int):
+    """Mid-tread quantization codes of xs (assumed <= 0) against clip C<0."""
+    nlev = (1 << bits) - 1
+    step = -C / nlev
+    k = jnp.round((xs - C) / step)
+    return jnp.clip(k, 0, nlev).astype(jnp.int32)
+
+
+def dequant(codes, C, bits: int):
+    nlev = (1 << bits) - 1
+    step = -C / nlev
+    return C + codes.astype(jnp.float32) * step
+
+
+def lut_exp_table(C, bits: int):
+    """LUT_exp: code -> exp(v_code). Shape (2^bits,)."""
+    k = jnp.arange(1 << bits, dtype=jnp.float32)
+    nlev = (1 << bits) - 1
+    step = -C / nlev
+    return jnp.exp(C + k * step)
+
+
+def lut_sum_table(C, bits: int):
+    """LUT_sum: packed key of `lut_group(bits)` codes -> sum of their exps.
+    Key layout (low code first): key = sum_j codes[j] << (bits * j).
+    Shape ((2^bits)^group,)."""
+    g = lut_group(bits)
+    e = lut_exp_table(C, bits)  # (2^bits,)
+    n = 1 << bits
+    keys = jnp.arange(n ** g)
+    total = jnp.zeros(n ** g, dtype=jnp.float32)
+    for j in range(g):
+        digit = (keys >> (bits * j)) % n
+        total = total + e[digit]
+    return total
+
+
+def _row_stats(xs, valid):
+    """(sigma, min) over valid lanes of xs, rows of shape [..., S]."""
+    n = jnp.maximum(jnp.sum(valid, axis=-1), 1).astype(jnp.float32)
+    s1 = jnp.sum(jnp.where(valid, xs, 0.0), axis=-1)
+    s2 = jnp.sum(jnp.where(valid, xs * xs, 0.0), axis=-1)
+    mean = s1 / n
+    var = jnp.maximum(s2 / n - mean * mean, 0.0)
+    sigma = jnp.sqrt(var)
+    mn = jnp.min(jnp.where(valid, xs, 0.0), axis=-1)
+    return sigma, mn
+
+
+def clip_from_mode(xs, valid, mode: str, bits: int,
+                   slope=None, intercept=None):
+    """Per-row dynamic clip threshold. mode in {'exaq','naive'}."""
+    sigma, mn = _row_stats(xs, valid)
+    if mode == "exaq":
+        if slope is None or intercept is None:
+            slope, intercept = EXAQ_TABLE1[bits]
+        C = slope * sigma + intercept
+    elif mode == "naive":
+        C = mn / 2.0
+    else:
+        raise ValueError(f"unknown mode {mode}")
+    return jnp.minimum(C, -CLIP_EPS)
+
+
+def exact_softmax(x, valid_len):
+    """Masked exact softmax over the last axis. x: [..., S],
+    valid_len: [...] int — number of valid leading lanes per row."""
+    S = x.shape[-1]
+    lanes = jnp.arange(S)
+    valid = lanes < valid_len[..., None]
+    neg = jnp.finfo(jnp.float32).min
+    xm = jnp.where(valid, x, neg)
+    m = jnp.max(xm, axis=-1, keepdims=True)
+    e = jnp.where(valid, jnp.exp(x - m), 0.0)
+    denom = jnp.maximum(jnp.sum(e, axis=-1, keepdims=True), 1e-30)
+    return e / denom
+
+
+def quant_softmax(x, valid_len, bits: int, C=None, mode: str = "exaq",
+                  slope=None, intercept=None):
+    """Reference quantized softmax (static if C given, else dynamic).
+
+    x: [..., S] float32; valid_len: [...] int32; C: scalar (static) or None
+    (dynamic per-row). Returns probabilities with masked lanes exactly 0.
+    """
+    S = x.shape[-1]
+    lanes = jnp.arange(S)
+    valid = lanes < valid_len[..., None]
+    neg = jnp.finfo(jnp.float32).min
+    xm = jnp.where(valid, x, neg)
+    m = jnp.max(xm, axis=-1, keepdims=True)
+    xs = jnp.where(valid, x - m, 0.0)
+
+    if C is None:
+        C = clip_from_mode(xs, valid, mode, bits, slope, intercept)[..., None]
+    else:
+        C = jnp.minimum(jnp.asarray(C, jnp.float32), -CLIP_EPS)
+        C = jnp.broadcast_to(C, xs.shape[:-1])[..., None]
+
+    # masked lanes forced onto code 0 (value exactly C)
+    xs = jnp.where(valid, jnp.clip(xs, C, 0.0), C)
+    codes = quant_codes(xs, C, bits)
+    e = jnp.exp(dequant(codes, C, bits))
+    denom = jnp.maximum(
+        jnp.sum(jnp.where(valid, e, 0.0), axis=-1, keepdims=True), 1e-30)
+    return jnp.where(valid, e / denom, 0.0)
+
+
+def causal_valid_len(q_len: int, k_len: int):
+    """valid_len vector for causal attention: row i attends to k-positions
+    0..(k_len - q_len + i). Standard prefill: q_len == k_len -> i+1."""
+    off = k_len - q_len
+    return jnp.arange(q_len, dtype=jnp.int32) + off + 1
+
+
+def attention_ref(q, k, v, bits=None, C=None, mode="exaq"):
+    """Reference causal MHA core. q: [B,H,Q,hd], k/v: [B,H,S,hd].
+    bits=None -> exact softmax; else quantized (static C or dynamic mode)."""
+    B, H, Q, hd = q.shape
+    S = k.shape[2]
+    scale = 1.0 / np.sqrt(hd)
+    scores = jnp.einsum("bhqd,bhsd->bhqs", q, k) * scale
+    vlen = jnp.broadcast_to(causal_valid_len(Q, S), (B, H, Q))
+    if bits is None:
+        p = exact_softmax(scores, vlen)
+    else:
+        p = quant_softmax(scores, vlen, bits, C=C, mode=mode)
+    return jnp.einsum("bhqs,bhsd->bhqd", p, v)

@@ -1,0 +1,356 @@
+"""tinyllama — a LLaMA-architecture decoder in JAX (Layer 2).
+
+Faithful LLaMA structure (the paper evaluates LLaMA-1/2): RMSNorm ->
+attention with rotary position embeddings -> RMSNorm -> SwiGLU MLP, tied
+input/output embedding. The attention softmax is pluggable (QuantSpec):
+
+  kind = "none"          exact softmax                  (Table 2 NONE rows)
+  kind = "static"        EXAQ kernel, calibrated per-layer clip C passed at
+                         runtime as a [n_layers] vector — the same lowered
+                         executable serves both the EXAQ and NAIVE rows of
+                         Table 2 (they differ only in how Rust computes C
+                         from calibration stats)
+  kind = "dynamic_exaq"  per-row sigma -> C = slope*sigma + intercept
+  kind = "dynamic_naive" per-row C = min/2                (ablation)
+
+Entry points lowered by aot.py (all fixed-shape, batch/seq static):
+
+  prefill(weights.., tokens[B,S], c_vec[L])        -> logits[B,S,V], kv
+  decode (weights.., token[B], pos[B], kv, c_vec)  -> logits[B,V], kv'
+  prefill_stats(weights.., tokens[B,S], lengths[B])-> logits, stats[L,4]
+
+Stats rows are (sum, sum_sq, count, min) of the max-shifted softmax inputs
+over valid causal lanes — the sufficient statistics the Rust calibration
+driver (rust/src/calib) folds into per-layer sigma/min for Fig. 6 and the
+EXAQ/NAIVE clip thresholds.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import ref
+from .kernels.exaq_softmax import exaq_softmax_static, quant_softmax_dynamic
+from .kernels.flash_attention import fused_attention
+from . import corpus
+
+_NEG = jnp.finfo(jnp.float32).min
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    d_ff: int
+    vocab_size: int = corpus.VOCAB_SIZE
+    max_seq: int = 128
+    rope_base: float = 10000.0
+    norm_eps: float = 1e-5
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def n_params(self) -> int:
+        d, f, l = self.d_model, self.d_ff, self.n_layers
+        per_layer = 4 * d * d + 3 * d * f + 2 * d
+        return self.vocab_size * d + l * per_layer + d
+
+
+#: The family-1 scale ladder mirrors the paper's 7B->65B axis (Table 2);
+#: family-2 ("v2", Table 5) has a wider FFN and a different world seed.
+SIZES = {
+    "s":  ModelConfig("s",  n_layers=2, d_model=96,  n_heads=4, d_ff=256),
+    "m":  ModelConfig("m",  n_layers=4, d_model=128, n_heads=4, d_ff=352),
+    "l":  ModelConfig("l",  n_layers=5, d_model=192, n_heads=6, d_ff=512),
+    "xl": ModelConfig("xl", n_layers=6, d_model=256, n_heads=8, d_ff=704),
+}
+V2_SIZES = {
+    "s":  ModelConfig("v2-s", n_layers=2, d_model=96,  n_heads=4, d_ff=384),
+    "m":  ModelConfig("v2-m", n_layers=4, d_model=128, n_heads=4, d_ff=512),
+    "l":  ModelConfig("v2-l", n_layers=5, d_model=192, n_heads=6, d_ff=768),
+}
+
+
+@dataclass(frozen=True)
+class QuantSpec:
+    kind: str = "none"   # none|static|dynamic_exaq|dynamic_naive
+    bits: int = 2
+
+    def tag(self) -> str:
+        if self.kind == "none":
+            return "none"
+        short = {"static": "q", "dynamic_exaq": "dynexaq",
+                 "dynamic_naive": "dynnaive"}[self.kind]
+        return f"{short}{self.bits}"
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+def param_names(cfg: ModelConfig) -> list[str]:
+    """Canonical flat ordering — the AOT manifest and the Rust weight
+    loader both follow this exact order."""
+    names = ["tok_emb"]
+    for i in range(cfg.n_layers):
+        names += [f"l{i}.rms1", f"l{i}.wq", f"l{i}.wk", f"l{i}.wv",
+                  f"l{i}.wo", f"l{i}.rms2", f"l{i}.w1", f"l{i}.w2",
+                  f"l{i}.w3"]
+    names.append("norm_f")
+    return names
+
+
+def param_shape(cfg: ModelConfig, name: str) -> tuple[int, ...]:
+    d, f = cfg.d_model, cfg.d_ff
+    if name == "tok_emb":
+        return (cfg.vocab_size, d)
+    if name == "norm_f" or name.endswith((".rms1", ".rms2")):
+        return (d,)
+    if name.endswith((".wq", ".wk", ".wv", ".wo")):
+        return (d, d)
+    if name.endswith(".w1") or name.endswith(".w3"):
+        return (d, f)
+    if name.endswith(".w2"):
+        return (f, d)
+    raise KeyError(name)
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> dict[str, jnp.ndarray]:
+    key = jax.random.PRNGKey(seed)
+    params = {}
+    for name in param_names(cfg):
+        shape = param_shape(cfg, name)
+        if len(shape) == 1:
+            params[name] = jnp.ones(shape, jnp.float32)
+        else:
+            key, sub = jax.random.split(key)
+            fan_in = shape[0]
+            params[name] = (jax.random.normal(sub, shape, jnp.float32)
+                            * (1.0 / np.sqrt(fan_in)))
+    return params
+
+
+def params_to_flat(cfg: ModelConfig, params: dict) -> list[jnp.ndarray]:
+    return [params[n] for n in param_names(cfg)]
+
+
+def flat_to_params(cfg: ModelConfig, flat) -> dict:
+    return dict(zip(param_names(cfg), flat))
+
+
+# ---------------------------------------------------------------------------
+# Building blocks
+# ---------------------------------------------------------------------------
+def rmsnorm(x, w, eps):
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * w * jax.lax.rsqrt(ms + eps)
+
+
+def rope_tables(cfg: ModelConfig):
+    hd = cfg.head_dim
+    inv = 1.0 / (cfg.rope_base ** (np.arange(0, hd, 2) / hd))
+    t = np.arange(cfg.max_seq)
+    ang = np.einsum("s,k->sk", t, inv)           # [S, hd/2]
+    return jnp.asarray(np.cos(ang), jnp.float32), \
+        jnp.asarray(np.sin(ang), jnp.float32)
+
+
+def apply_rope(x, cos, sin):
+    """x: [..., T, hd]; cos/sin: [..., T, hd/2] (already gathered)."""
+    x1, x2 = x[..., 0::2], x[..., 1::2]
+    r1 = x1 * cos - x2 * sin
+    r2 = x1 * sin + x2 * cos
+    out = jnp.stack([r1, r2], axis=-1)
+    return out.reshape(x.shape)
+
+
+def _split_heads(x, H):
+    B, T, D = x.shape
+    return x.reshape(B, T, H, D // H).transpose(0, 2, 1, 3)  # [B,H,T,hd]
+
+
+def _merge_heads(x):
+    B, H, T, hd = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(B, T, H * hd)
+
+
+def _softmax_rows(scores, vlen_rows, quant: QuantSpec, c_layer):
+    """scores: [B,H,Q,S]; vlen_rows: [B,H,Q] int32. Dispatch by QuantSpec."""
+    B, H, Q, S = scores.shape
+    flat = scores.reshape(B * H * Q, S)
+    vflat = vlen_rows.reshape(B * H * Q)
+    if quant.kind == "none":
+        p = ref.exact_softmax(flat, vflat)
+    elif quant.kind == "static":
+        p = exaq_softmax_static(flat, vflat, c_layer, bits=quant.bits)
+    elif quant.kind == "dynamic_exaq":
+        p = quant_softmax_dynamic(flat, vflat, bits=quant.bits, mode="exaq")
+    elif quant.kind == "dynamic_naive":
+        p = quant_softmax_dynamic(flat, vflat, bits=quant.bits, mode="naive")
+    else:
+        raise ValueError(quant.kind)
+    return p.reshape(B, H, Q, S)
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+def _attn_prefill(cfg, params, i, h, cos, sin, quant, c_layer, fused):
+    """h: [B,S,D] -> (attn_out [B,S,D], k [B,H,S,hd], v [B,H,S,hd])."""
+    B, S, D = h.shape
+    H = cfg.n_heads
+    q = _split_heads(h @ params[f"l{i}.wq"], H)
+    k = _split_heads(h @ params[f"l{i}.wk"], H)
+    v = _split_heads(h @ params[f"l{i}.wv"], H)
+    q = apply_rope(q, cos[None, None, :S], sin[None, None, :S])
+    k = apply_rope(k, cos[None, None, :S], sin[None, None, :S])
+
+    if fused and quant.kind in ("none", "static"):
+        bits = None if quant.kind == "none" else quant.bits
+        o = fused_attention(q, k, v, c_layer, bits=bits,
+                            block_q=min(16, S), q_offset=0)
+    else:
+        scale = 1.0 / np.sqrt(cfg.head_dim)
+        scores = jnp.einsum("bhqd,bhsd->bhqs", q, k) * scale
+        vlen = jnp.broadcast_to(
+            ref.causal_valid_len(S, S), (B, H, S)).astype(jnp.int32)
+        p = _softmax_rows(scores, vlen, quant, c_layer)
+        o = jnp.einsum("bhqs,bhsd->bhqd", p, v)
+    return _merge_heads(o) @ params[f"l{i}.wo"], k, v
+
+
+def _mlp(params, i, h):
+    gate = jax.nn.silu(h @ params[f"l{i}.w1"])
+    up = h @ params[f"l{i}.w3"]
+    return (gate * up) @ params[f"l{i}.w2"]
+
+
+def prefill(cfg: ModelConfig, params: dict, tokens, c_vec=None,
+            quant: QuantSpec = QuantSpec(), fused: bool = True):
+    """tokens: [B,S] int32 -> (logits [B,S,V], kc, vc [L,B,H,S,hd])."""
+    B, S = tokens.shape
+    cos, sin = rope_tables(cfg)
+    h = params["tok_emb"][tokens]
+    kcs, vcs = [], []
+    for i in range(cfg.n_layers):
+        cl = None if c_vec is None else c_vec[i]
+        a, k, v = _attn_prefill(cfg, params, i,
+                                rmsnorm(h, params[f"l{i}.rms1"],
+                                        cfg.norm_eps),
+                                cos, sin, quant, cl, fused)
+        h = h + a
+        h = h + _mlp(params, i, rmsnorm(h, params[f"l{i}.rms2"],
+                                        cfg.norm_eps))
+        kcs.append(k)
+        vcs.append(v)
+    h = rmsnorm(h, params["norm_f"], cfg.norm_eps)
+    logits = h @ params["tok_emb"].T
+    return logits, jnp.stack(kcs), jnp.stack(vcs)
+
+
+def decode(cfg: ModelConfig, params: dict, token, pos, kc, vc,
+           c_vec=None, quant: QuantSpec = QuantSpec()):
+    """Single-token step with per-row positions (continuous batching).
+
+    token: [B] int32; pos: [B] int32 (0-based write position);
+    kc/vc: [L,B,H,Smax,hd]. Returns (logits [B,V], kc', vc').
+    """
+    B = token.shape[0]
+    H, Smax, hd = cfg.n_heads, kc.shape[3], cfg.head_dim
+    cos, sin = rope_tables(cfg)
+    cos_p, sin_p = cos[pos], sin[pos]            # [B, hd/2]
+    h = params["tok_emb"][token][:, None, :]     # [B,1,D]
+    kcs, vcs = [], []
+    for i in range(cfg.n_layers):
+        x = rmsnorm(h, params[f"l{i}.rms1"], cfg.norm_eps)
+        q = _split_heads(x @ params[f"l{i}.wq"], H)   # [B,H,1,hd]
+        k = _split_heads(x @ params[f"l{i}.wk"], H)
+        v = _split_heads(x @ params[f"l{i}.wv"], H)
+        q = apply_rope(q, cos_p[:, None, None], sin_p[:, None, None])
+        k = apply_rope(k, cos_p[:, None, None], sin_p[:, None, None])
+
+        # scatter k,v into the cache at per-row positions
+        def put(cache, val, p):                  # [H,Smax,hd],[H,1,hd]
+            return jax.lax.dynamic_update_slice(cache, val, (0, p, 0))
+        kc_i = jax.vmap(put)(kc[i], k, pos)
+        vc_i = jax.vmap(put)(vc[i], v, pos)
+
+        scale = 1.0 / np.sqrt(hd)
+        scores = jnp.einsum("bhqd,bhsd->bhqs", q, kc_i) * scale
+        vlen = jnp.broadcast_to((pos + 1)[:, None, None],
+                                (B, H, 1)).astype(jnp.int32)
+        cl = None if c_vec is None else c_vec[i]
+        p = _softmax_rows(scores, vlen, quant, cl)
+        o = jnp.einsum("bhqs,bhsd->bhqd", p, vc_i)
+        h = h + _merge_heads(o) @ params[f"l{i}.wo"]
+        h = h + _mlp(params, i, rmsnorm(h, params[f"l{i}.rms2"],
+                                        cfg.norm_eps))
+        kcs.append(kc_i)
+        vcs.append(vc_i)
+    h = rmsnorm(h, params["norm_f"], cfg.norm_eps)
+    logits = (h @ params["tok_emb"].T)[:, 0]
+    return logits, jnp.stack(kcs), jnp.stack(vcs)
+
+
+def prefill_stats(cfg: ModelConfig, params: dict, tokens, lengths):
+    """Exact-softmax prefill that also emits per-layer calibration stats.
+
+    Returns (logits [B,S,V], stats [L,4]) with stats rows
+    (count, mean, M2, min) of max-shifted softmax inputs over lanes that
+    are causally valid AND inside the per-sequence length. mean/M2 are
+    combined across rows with the parallel-Welford rule (numerically safe
+    in f32 even when |mean| is large); Rust merges batches the same way
+    (rust/src/calib/welford.rs)."""
+    B, S = tokens.shape
+    H = cfg.n_heads
+    cos, sin = rope_tables(cfg)
+    h = params["tok_emb"][tokens]
+    stats = []
+    for i in range(cfg.n_layers):
+        x = rmsnorm(h, params[f"l{i}.rms1"], cfg.norm_eps)
+        q = _split_heads(x @ params[f"l{i}.wq"], H)
+        k = _split_heads(x @ params[f"l{i}.wk"], H)
+        v = _split_heads(x @ params[f"l{i}.wv"], H)
+        q = apply_rope(q, cos[None, None, :S], sin[None, None, :S])
+        k = apply_rope(k, cos[None, None, :S], sin[None, None, :S])
+        scale = 1.0 / np.sqrt(cfg.head_dim)
+        scores = jnp.einsum("bhqd,bhsd->bhqs", q, k) * scale
+
+        rows = jnp.arange(S)[:, None]
+        cols = jnp.arange(S)[None, :]
+        causal = cols <= rows                              # [S,S]
+        inlen = (rows < lengths[:, None, None, None]) & \
+                (cols < lengths[:, None, None, None])      # [B,1,S,S]
+        valid = jnp.broadcast_to(causal[None, None] & inlen, scores.shape)
+
+        m = jnp.max(jnp.where(valid, scores, _NEG), axis=-1, keepdims=True)
+        xs = jnp.where(valid, scores - m, 0.0)
+        # Per-row moments (small, well-conditioned sums), then a
+        # parallel-Welford combine across rows weighted by lane count.
+        n_row = jnp.maximum(jnp.sum(valid, axis=-1), 1).astype(jnp.float32)
+        mean_row = jnp.sum(xs, axis=-1) / n_row
+        var_row = jnp.maximum(
+            jnp.sum(jnp.where(valid, (xs - mean_row[..., None]) ** 2, 0.0),
+                    axis=-1) / n_row, 0.0)
+        w = (jnp.sum(valid, axis=-1) > 0).astype(jnp.float32) * n_row
+        cnt = jnp.sum(w)
+        mean = jnp.sum(w * mean_row) / cnt
+        m2 = jnp.sum(w * (var_row + (mean_row - mean) ** 2))
+        stats.append(jnp.stack([
+            cnt, mean, m2, jnp.min(jnp.where(valid, xs, 0.0)),
+        ]))
+
+        e = jnp.where(valid, jnp.exp(jnp.where(valid, scores - m, 0.0)), 0.0)
+        denom = jnp.maximum(jnp.sum(e, axis=-1, keepdims=True), 1e-30)
+        o = jnp.einsum("bhqs,bhsd->bhqd", e / denom, v)
+        h = h + _merge_heads(o) @ params[f"l{i}.wo"]
+        h = h + _mlp(params, i, rmsnorm(h, params[f"l{i}.rms2"],
+                                        cfg.norm_eps))
+    h = rmsnorm(h, params["norm_f"], cfg.norm_eps)
+    return h @ params["tok_emb"].T, jnp.stack(stats)

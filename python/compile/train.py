@@ -1,0 +1,155 @@
+"""Build-time training of the tinyllama family on the procedural corpus.
+
+This is the build-path substitute for downloading pretrained LLaMA weights
+(DESIGN.md §2): the paper's method is post-training quantization, so all it
+needs from the model is a converged attention stack whose softmax-input
+distribution looks like Fig. 6 (sigma roughly in [0.9, 3.4]). Training uses
+exact softmax (quantization is applied only at inference, as in the paper).
+
+Hand-rolled AdamW + cosine schedule (no optax in the image). The step is
+jitted once and scanned in chunks so the Python overhead is negligible.
+
+Usage:  python -m compile.train --size s --family 1 --out ../artifacts
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import corpus, model as M
+from .weights_io import save_weights
+
+#: world seeds per family — family 2 ("LLaMA-2", Table 5) lives in a
+#: different world instance so its facts differ.
+FAMILY_WORLD_SEED = {1: 1, 2: 7}
+CORPUS_SEED = {1: 11, 2: 17}
+
+
+def make_dataset(family: int, n_tokens: int, seq: int) -> np.ndarray:
+    world = corpus.build_world(FAMILY_WORLD_SEED[family])
+    toks = corpus.generate_tokens(world, CORPUS_SEED[family], n_tokens)
+    n_rows = (len(toks) - 1) // seq
+    x = np.array(toks[: n_rows * seq + 1], dtype=np.int32)
+    rows = np.stack([x[i * seq: i * seq + seq + 1] for i in range(n_rows)])
+    return rows  # [N, seq+1]
+
+
+def loss_fn(cfg, params, batch):
+    tokens, targets = batch[:, :-1], batch[:, 1:]
+    logits, _, _ = M.prefill(cfg, params, tokens, fused=False,
+                             quant=M.QuantSpec("none"))
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)
+    return jnp.mean(nll)
+
+
+def adamw_init(params):
+    zeros = {k: jnp.zeros_like(v) for k, v in params.items()}
+    return {"m": zeros, "v": {k: jnp.zeros_like(v) for k, v in
+                              params.items()}, "t": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(params, grads, opt, lr, *, b1=0.9, b2=0.95, eps=1e-8,
+                 wd=0.01):
+    t = opt["t"] + 1
+    tf = t.astype(jnp.float32)
+    new_m, new_v, new_p = {}, {}, {}
+    for k in params:
+        m = b1 * opt["m"][k] + (1 - b1) * grads[k]
+        v = b2 * opt["v"][k] + (1 - b2) * grads[k] ** 2
+        mh = m / (1 - b1 ** tf)
+        vh = v / (1 - b2 ** tf)
+        decay = wd if params[k].ndim >= 2 else 0.0
+        new_p[k] = params[k] - lr * (mh / (jnp.sqrt(vh) + eps)
+                                     + decay * params[k])
+        new_m[k], new_v[k] = m, v
+    return new_p, {"m": new_m, "v": new_v, "t": t}
+
+
+def cosine_lr(step, total, peak, warmup=40, floor_frac=0.1):
+    warm = peak * (step + 1) / warmup
+    prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+    cos = peak * (floor_frac + (1 - floor_frac)
+                  * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+    return jnp.where(step < warmup, warm, cos)
+
+
+def train(cfg: M.ModelConfig, family: int, steps: int, batch: int,
+          seq: int, seed: int, peak_lr: float, log_every: int = 50):
+    data = make_dataset(family, n_tokens=steps * batch * seq + seq + 1,
+                        seq=seq)
+    params = M.init_params(cfg, seed)
+    opt = adamw_init(params)
+
+    def step_fn(carry, idx):
+        params, opt = carry
+        rows = jax.lax.dynamic_slice_in_dim(all_rows, idx * batch, batch)
+        loss, grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, rows))(params)
+        # global-norm gradient clipping (deeper configs diverge without it)
+        gn = jnp.sqrt(sum(jnp.sum(g * g) for g in grads.values()))
+        scale = jnp.minimum(1.0, 1.0 / jnp.maximum(gn, 1e-8))
+        grads = {k: g * scale for k, g in grads.items()}
+        lr = cosine_lr(idx, steps, peak_lr)
+        params, opt = adamw_update(params, grads, opt, lr)
+        return (params, opt), loss
+
+    all_rows = jnp.asarray(data[: steps * batch])
+    scan_chunk = log_every
+    losses = []
+    t0 = time.time()
+    jstep = jax.jit(lambda c, xs: jax.lax.scan(step_fn, c, xs))
+    carry = (params, opt)
+    for start in range(0, steps, scan_chunk):
+        idxs = jnp.arange(start, min(start + scan_chunk, steps))
+        carry, ls = jstep(carry, idxs)
+        ls = np.asarray(ls)
+        losses.extend(ls.tolist())
+        print(f"[{cfg.name}] step {start + len(ls):4d}/{steps} "
+              f"loss {ls[-1]:.4f}  ({time.time() - t0:.1f}s)", flush=True)
+    return carry[0], losses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--size", required=True)
+    ap.add_argument("--family", type=int, default=1)
+    ap.add_argument("--steps", type=int, default=350)
+    ap.add_argument("--batch", type=int, default=12)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=2.5e-3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+
+    table = M.SIZES if args.family == 1 else M.V2_SIZES
+    cfg = table[args.size]
+    os.makedirs(args.out, exist_ok=True)
+
+    params, losses = train(cfg, args.family, args.steps, args.batch,
+                           args.seq, args.seed, args.lr)
+    named = [(n, np.asarray(params[n])) for n in M.param_names(cfg)]
+    wpath = os.path.join(args.out, f"weights_{cfg.name}.bin")
+    save_weights(wpath, named)
+    lpath = os.path.join(args.out, f"trainlog_{cfg.name}.json")
+    with open(lpath, "w") as f:
+        json.dump({"config": cfg.name, "n_params": cfg.n_params(),
+                   "steps": args.steps, "batch": args.batch,
+                   "seq": args.seq, "loss": losses}, f)
+    print(f"saved {wpath} ({cfg.n_params()} params), "
+          f"final loss {losses[-1]:.4f}")
+
+    # world golden dump (once per family)
+    world = corpus.build_world(FAMILY_WORLD_SEED[args.family])
+    corpus.dump_world(world, os.path.join(
+        args.out, f"world_family{args.family}.json"))
+
+
+if __name__ == "__main__":
+    main()

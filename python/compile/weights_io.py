@@ -1,0 +1,51 @@
+"""Flat binary weight format shared with rust/src/runtime/weights.rs.
+
+Layout (little-endian):
+  magic   4 bytes  b"TLW1"
+  u32     n_tensors
+  per tensor:
+    u32       name_len, then name bytes (utf-8)
+    u32       ndim, then ndim * u32 dims
+    f32 data  prod(dims) * 4 bytes
+
+Tensor order is `model.param_names(cfg)` — the same order the AOT manifest
+lists executable inputs, so the Rust loader can feed buffers positionally.
+"""
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+
+MAGIC = b"TLW1"
+
+
+def save_weights(path: str, named: list[tuple[str, np.ndarray]]) -> None:
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", len(named)))
+        for name, arr in named:
+            arr = np.ascontiguousarray(arr, dtype=np.float32)
+            nb = name.encode()
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<I", arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            f.write(arr.tobytes())
+
+
+def load_weights(path: str) -> list[tuple[str, np.ndarray]]:
+    out = []
+    with open(path, "rb") as f:
+        assert f.read(4) == MAGIC, "bad magic"
+        (n,) = struct.unpack("<I", f.read(4))
+        for _ in range(n):
+            (ln,) = struct.unpack("<I", f.read(4))
+            name = f.read(ln).decode()
+            (nd,) = struct.unpack("<I", f.read(4))
+            dims = struct.unpack(f"<{nd}I", f.read(4 * nd))
+            cnt = int(np.prod(dims)) if nd else 1
+            data = np.frombuffer(f.read(4 * cnt), dtype="<f4").reshape(dims)
+            out.append((name, data))
+    return out

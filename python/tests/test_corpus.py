@@ -1,0 +1,73 @@
+"""Corpus / world spec tests (the cross-language contract)."""
+import numpy as np
+
+from compile import corpus
+
+
+def test_splitmix_determinism():
+    a = corpus.SplitMix64(42)
+    b = corpus.SplitMix64(42)
+    assert [a.next_u64() for _ in range(10)] == \
+        [b.next_u64() for _ in range(10)]
+
+
+def test_vocab_covers_all_templates():
+    w = corpus.build_world(1)
+    rng = corpus.SplitMix64(3)
+    for _ in range(500):
+        for word in corpus.sample_sentence(w, rng):
+            assert word in corpus.TOK, f"{word} missing from vocab"
+
+
+def test_world_ownership_injective():
+    w = corpus.build_world(1)
+    assert len(set(w.owned)) == len(w.owned)
+
+
+def test_world_facts_consistent():
+    w = corpus.build_world(1)
+    for obj in range(corpus.N_OBJECTS):
+        assert w.object_color(obj) in corpus.COLORS
+        mat = w.object_material(obj)
+        assert corpus.MATERIAL_PROP[mat] == w.object_property(obj)
+
+
+def test_generate_tokens_deterministic_and_bounded():
+    w = corpus.build_world(1)
+    a = corpus.generate_tokens(w, 5, 500)
+    b = corpus.generate_tokens(w, 5, 500)
+    assert a == b
+    assert len(a) == 500
+    assert all(0 <= t < corpus.VOCAB_SIZE for t in a)
+    assert a[0] == corpus.BOS
+
+
+def test_comparison_sentences_are_true():
+    w = corpus.build_world(1)
+    rng = corpus.SplitMix64(9)
+    seen = 0
+    for _ in range(2000):
+        s = corpus.sample_sentence(w, rng)
+        if "harder" in s and s[0] == "the":
+            i = s.index("harder")
+            a = corpus.OBJECTS.index(s[1])
+            b = corpus.OBJECTS.index(s[i + 3])
+            assert w.object_hardness(a) > w.object_hardness(b)
+            seen += 1
+    assert seen > 10
+
+
+def test_bool_qa_answers_are_correct():
+    w = corpus.build_world(1)
+    rng = corpus.SplitMix64(11)
+    seen = 0
+    for _ in range(2000):
+        s = corpus.sample_sentence(w, rng)
+        if s[:2] == ["question", ":"] and "is" == s[2]:
+            obj = corpus.OBJECTS.index(s[4])
+            color = s[5]
+            ans = s[-2]
+            want = "yes" if w.object_color(obj) == color else "no"
+            assert ans == want
+            seen += 1
+    assert seen > 10

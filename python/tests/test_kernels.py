@@ -1,0 +1,101 @@
+"""Kernel vs reference-oracle correctness — the core L1 signal.
+
+Hypothesis sweeps shapes, bit-widths, clip thresholds and valid-length
+masks; every case must match the pure-jnp oracle in kernels/ref.py."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.exaq_softmax import (exaq_softmax_static,
+                                          quant_softmax_dynamic)
+from compile.kernels.flash_attention import fused_attention
+
+SHAPES = st.tuples(st.integers(1, 17), st.sampled_from([8, 16, 32, 64]))
+
+
+@settings(max_examples=25, deadline=None)
+@given(shape=SHAPES, bits=st.sampled_from([2, 3, 4]),
+       c=st.floats(-12.0, -0.5), seed=st.integers(0, 2**31 - 1))
+def test_static_kernel_matches_ref(shape, bits, c, seed):
+    R, S = shape
+    rng = np.random.default_rng(seed)
+    x = rng.normal(0, 2.0, (R, S)).astype(np.float32)
+    vlen = rng.integers(1, S + 1, R).astype(np.int32)
+    got = exaq_softmax_static(jnp.array(x), jnp.array(vlen), c, bits=bits)
+    want = ref.quant_softmax(jnp.array(x), jnp.array(vlen), bits, C=c)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=2e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(shape=SHAPES, bits=st.sampled_from([2, 3]),
+       mode=st.sampled_from(["exaq", "naive"]),
+       seed=st.integers(0, 2**31 - 1))
+def test_dynamic_kernel_matches_ref(shape, bits, mode, seed):
+    R, S = shape
+    rng = np.random.default_rng(seed)
+    x = rng.normal(0, 1.5, (R, S)).astype(np.float32)
+    vlen = rng.integers(1, S + 1, R).astype(np.int32)
+    got = quant_softmax_dynamic(jnp.array(x), jnp.array(vlen), bits=bits,
+                                mode=mode)
+    want = ref.quant_softmax(jnp.array(x), jnp.array(vlen), bits, C=None,
+                             mode=mode)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=2e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(bits=st.sampled_from([None, 2, 3]), seed=st.integers(0, 2**31 - 1))
+def test_fused_attention_matches_ref(bits, seed):
+    rng = np.random.default_rng(seed)
+    B, H, S, hd = 2, 2, 16, 8
+    q = jnp.array(rng.normal(0, 1, (B, H, S, hd)), jnp.float32)
+    k = jnp.array(rng.normal(0, 1, (B, H, S, hd)), jnp.float32)
+    v = jnp.array(rng.normal(0, 1, (B, H, S, hd)), jnp.float32)
+    C = None if bits is None else -5.0
+    got = fused_attention(q, k, v, C, bits=bits, block_q=8)
+    want = ref.attention_ref(q, k, v, bits=bits, C=C)
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-6)
+
+
+def test_probabilities_sum_to_one_over_valid_lanes():
+    rng = np.random.default_rng(0)
+    x = rng.normal(0, 3, (5, 32)).astype(np.float32)
+    vlen = np.array([1, 7, 15, 31, 32], np.int32)
+    p = np.asarray(exaq_softmax_static(jnp.array(x), jnp.array(vlen),
+                                       -6.0, bits=2))
+    np.testing.assert_allclose(p.sum(1), 1.0, atol=1e-5)
+    for i, n in enumerate(vlen):
+        assert (p[i, n:] == 0).all()
+
+
+def test_lut_sum_equals_sum_of_lut_exp():
+    for bits in (2, 3, 4):
+        C = jnp.float32(-4.5)
+        le = np.asarray(ref.lut_exp_table(C, bits))
+        ls = np.asarray(ref.lut_sum_table(C, bits))
+        g = ref.lut_group(bits)
+        n = 1 << bits
+        for key in range(len(ls)):
+            want = sum(le[(key >> (bits * j)) % n] for j in range(g))
+            assert abs(ls[key] - want) < 1e-5
+
+
+def test_row_max_is_exactly_representable():
+    # mid-tread spec: xs=0 must map to exp(0)=1 before normalisation
+    for bits in (2, 3, 4):
+        codes = ref.quant_codes(jnp.zeros(()), jnp.float32(-5.0), bits)
+        val = ref.dequant(codes, jnp.float32(-5.0), bits)
+        assert float(val) == 0.0
+
+
+def test_degenerate_all_equal_row_is_uniform():
+    x = jnp.zeros((1, 8), jnp.float32)
+    p = np.asarray(exaq_softmax_static(x, jnp.array([8]), -3.0, bits=2))
+    np.testing.assert_allclose(p, 1.0 / 8.0, atol=1e-6)
+
+
+def test_bad_group_divisibility_raises():
+    x = jnp.zeros((2, 10), jnp.float32)  # 10 % 4 != 0 at 2 bits
+    with pytest.raises(ValueError):
+        exaq_softmax_static(x, jnp.array([10, 10]), -3.0, bits=2)

@@ -1,0 +1,112 @@
+"""Model-level tests: shapes, fused/unfused agreement, decode==prefill,
+stats correctness."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from compile import corpus, model as M
+
+CFG = M.ModelConfig("test", n_layers=2, d_model=64, n_heads=4, d_ff=128,
+                    max_seq=32)
+
+
+def _params():
+    return M.init_params(CFG, 0)
+
+
+def _tokens(B, S, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.array(rng.integers(0, CFG.vocab_size, (B, S)), jnp.int32)
+
+
+def test_prefill_shapes():
+    p = _params()
+    lg, kc, vc = M.prefill(CFG, p, _tokens(2, 16), fused=False)
+    assert lg.shape == (2, 16, CFG.vocab_size)
+    assert kc.shape == (CFG.n_layers, 2, CFG.n_heads, 16, CFG.head_dim)
+    assert vc.shape == kc.shape
+    assert np.isfinite(np.asarray(lg)).all()
+
+
+def test_fused_equals_unfused():
+    p = _params()
+    t = _tokens(2, 16)
+    for quant, cv in [(M.QuantSpec("none"), None),
+                      (M.QuantSpec("static", 2),
+                       jnp.full((CFG.n_layers,), -5.0)),
+                      (M.QuantSpec("static", 3),
+                       jnp.full((CFG.n_layers,), -6.0))]:
+        a, _, _ = M.prefill(CFG, p, t, cv, quant, fused=True)
+        b, _, _ = M.prefill(CFG, p, t, cv, quant, fused=False)
+        np.testing.assert_allclose(a, b, rtol=2e-4, atol=2e-5)
+
+
+def test_decode_matches_prefill():
+    p = _params()
+    S = 12
+    t = _tokens(2, S + 1, seed=3)
+    full, _, _ = M.prefill(CFG, p, t, fused=False)
+    lg, kc, vc = M.prefill(CFG, p, t[:, :S], fused=False)
+    pad = CFG.max_seq - S
+    kc = jnp.pad(kc, ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0)))
+    vc = jnp.pad(vc, ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0)))
+    ld, kc2, vc2 = M.decode(CFG, p, t[:, S], jnp.array([S, S]), kc, vc)
+    np.testing.assert_allclose(ld, full[:, S], rtol=2e-4, atol=2e-5)
+    # cache row S was written
+    assert not np.allclose(np.asarray(kc2)[:, :, :, S], 0)
+
+
+def test_decode_per_row_positions():
+    """Continuous batching: rows at different positions must each match
+    their own prefill."""
+    p = _params()
+    t = _tokens(2, 13, seed=5)
+    pos = [7, 11]
+    kcs, vcs = [], []
+    for b, pl in enumerate(pos):
+        _, kc, vc = M.prefill(CFG, p, t[b:b + 1, :pl], fused=False)
+        pad = CFG.max_seq - pl
+        kcs.append(jnp.pad(kc, ((0, 0), (0, 0), (0, 0), (0, pad),
+                                (0, 0))))
+        vcs.append(jnp.pad(vc, ((0, 0), (0, 0), (0, 0), (0, pad),
+                                (0, 0))))
+    kc = jnp.concatenate(kcs, axis=1)
+    vc = jnp.concatenate(vcs, axis=1)
+    tok = jnp.array([t[0, pos[0]], t[1, pos[1]]], jnp.int32)
+    ld, _, _ = M.decode(CFG, p, tok, jnp.array(pos, jnp.int32), kc, vc)
+    for b, pl in enumerate(pos):
+        want, _, _ = M.prefill(CFG, p, t[b:b + 1, :pl + 1], fused=False)
+        np.testing.assert_allclose(ld[b], want[0, pl], rtol=2e-4,
+                                   atol=2e-5)
+
+
+def test_prefill_stats_match_bruteforce():
+    p = _params()
+    t = _tokens(2, 16, seed=7)
+    lengths = jnp.array([16, 10], jnp.int32)
+    _, stats = M.prefill_stats(CFG, p, t, lengths)
+    s = np.asarray(stats)
+    assert s.shape == (CFG.n_layers, 4)
+    # counts: sum over batch of masked causal triangle * heads
+    want_count = CFG.n_heads * (16 * 17 // 2 + 10 * 11 // 2)
+    assert int(s[0, 0]) == want_count
+    assert (s[:, 2] >= 0).all()      # M2
+    assert (s[:, 3] <= 0).all()      # min of shifted values
+    # sigma should be positive and finite
+    sig = np.sqrt(s[:, 2] / s[:, 0])
+    assert np.isfinite(sig).all() and (sig > 0).all()
+
+
+def test_quant_spec_tags():
+    assert M.QuantSpec("none").tag() == "none"
+    assert M.QuantSpec("static", 2).tag() == "q2"
+    assert M.QuantSpec("dynamic_exaq", 3).tag() == "dynexaq3"
+
+
+def test_param_names_order_and_shapes():
+    names = M.param_names(CFG)
+    assert names[0] == "tok_emb"
+    assert names[-1] == "norm_f"
+    assert len(names) == 2 + 9 * CFG.n_layers
+    for n in names:
+        assert M.param_shape(CFG, n)

@@ -1,0 +1,24 @@
+"""TLW1 weight format roundtrip (mirrors rust/src/runtime/weights.rs)."""
+import numpy as np
+
+from compile.weights_io import load_weights, save_weights
+
+
+def test_roundtrip(tmp_path):
+    p = tmp_path / "w.bin"
+    named = [
+        ("tok_emb", np.arange(12, dtype=np.float32).reshape(3, 4)),
+        ("norm_f", np.ones(4, dtype=np.float32)),
+    ]
+    save_weights(str(p), named)
+    out = load_weights(str(p))
+    assert [n for n, _ in out] == ["tok_emb", "norm_f"]
+    np.testing.assert_array_equal(out[0][1], named[0][1])
+    np.testing.assert_array_equal(out[1][1], named[1][1])
+
+
+def test_float64_is_downcast(tmp_path):
+    p = tmp_path / "w.bin"
+    save_weights(str(p), [("x", np.array([1.5, 2.5], dtype=np.float64))])
+    out = load_weights(str(p))
+    assert out[0][1].dtype == np.float32

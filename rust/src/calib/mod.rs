@@ -1,0 +1,174 @@
+//! Runtime calibration driver (paper §5.1.1: 25 iterations × batch 4).
+//!
+//! Runs the `prefill_stats` artifact over a deterministic calibration
+//! stream, folds per-batch (count, mean, M2, min) with the
+//! parallel-Welford rule, and derives per-layer clip thresholds. Also
+//! regenerates the Fig. 6 series (sigma across layers and iterations)
+//! and can read the build-time `calibration.json` produced by
+//! `python -m compile.calibrate` (the two paths agree; tested).
+
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use crate::eval::corpus::generate_tokens;
+use crate::eval::{family_world_seed, World};
+use crate::exaq::clip::LayerStats;
+use crate::model::Tokenizer;
+use crate::runtime::{Engine, HostTensor};
+use crate::util::json::Json;
+
+pub const CALIB_ITERS: usize = 25;
+pub const CALIB_BATCH: usize = 4;
+/// Matches python compile/calibrate.py CALIB_SEED.
+pub const CALIB_SEED: u64 = 20240555;
+
+/// Welford accumulator for one layer.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Welford {
+    pub count: f64,
+    pub mean: f64,
+    pub m2: f64,
+    pub min: f64,
+}
+
+impl Welford {
+    pub fn merge(&mut self, count: f64, mean: f64, m2: f64, min: f64) {
+        if self.count == 0.0 {
+            *self = Welford { count, mean, m2, min };
+            return;
+        }
+        let n = self.count + count;
+        let d = mean - self.mean;
+        self.mean += d * count / n;
+        self.m2 += m2 + d * d * self.count * count / n;
+        self.count = n;
+        self.min = self.min.min(min);
+    }
+
+    pub fn sigma(&self) -> f64 {
+        if self.count > 0.0 { (self.m2 / self.count).sqrt() } else { 0.0 }
+    }
+
+    pub fn stats(&self) -> LayerStats {
+        LayerStats {
+            sigma: self.sigma(),
+            min: self.min,
+            mean: self.mean,
+            count: self.count,
+        }
+    }
+}
+
+/// Full calibration output for one model.
+#[derive(Clone, Debug)]
+pub struct Calibration {
+    pub model: String,
+    pub layers: Vec<LayerStats>,
+    /// Fig. 6 raw series: per-iteration, per-layer sigma.
+    pub fig6_sigma: Vec<Vec<f64>>,
+}
+
+/// Run the calibration protocol against the engine.
+pub fn calibrate(engine: &mut Engine, model: &str) -> Result<Calibration> {
+    let entry = engine.manifest.model(model)?.clone();
+    let seq = engine.manifest.seq;
+    let tok = Tokenizer::from_manifest(&engine.manifest);
+    let world = World::build(family_world_seed(entry.family));
+    let stream = generate_tokens(&world, &tok, CALIB_SEED,
+                                 CALIB_ITERS * CALIB_BATCH * seq + 1);
+
+    let n_layers = entry.config.n_layers;
+    let mut acc = vec![Welford::default(); n_layers];
+    let mut fig6 = Vec::with_capacity(CALIB_ITERS);
+    for it in 0..CALIB_ITERS {
+        let lo = it * CALIB_BATCH * seq;
+        let tokens = HostTensor::i32(
+            stream[lo..lo + CALIB_BATCH * seq].to_vec(),
+            &[CALIB_BATCH, seq]);
+        let lengths = vec![seq as i32; CALIB_BATCH];
+        let (_, stats) = engine.prefill_stats(model, &tokens, &lengths)?;
+        let s = stats.as_f32()?;
+        let mut iter_sigma = Vec::with_capacity(n_layers);
+        for (layer, acc_l) in acc.iter_mut().enumerate() {
+            let row = &s[layer * 4..layer * 4 + 4];
+            let (count, mean, m2, min) =
+                (row[0] as f64, row[1] as f64, row[2] as f64,
+                 row[3] as f64);
+            iter_sigma.push(if count > 0.0 { (m2 / count).sqrt() }
+                            else { 0.0 });
+            acc_l.merge(count, mean, m2, min);
+        }
+        fig6.push(iter_sigma);
+    }
+    Ok(Calibration {
+        model: model.to_string(),
+        layers: acc.iter().map(Welford::stats).collect(),
+        fig6_sigma: fig6,
+    })
+}
+
+/// Read the build-time calibration.json for a model.
+pub fn load_calibration(dir: &Path, model: &str) -> Result<Calibration> {
+    let j = Json::parse(&std::fs::read_to_string(
+        dir.join("calibration.json"))?)?;
+    let m = j
+        .at(&["models", model])
+        .ok_or_else(|| anyhow!("model {model} not in calibration.json"))?;
+    let mut layers = Vec::new();
+    for l in m.get("layers").and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("layers missing"))?
+    {
+        layers.push(LayerStats {
+            sigma: l.get("sigma").and_then(Json::as_f64).unwrap_or(0.0),
+            min: l.get("min").and_then(Json::as_f64).unwrap_or(0.0),
+            mean: l.get("mean").and_then(Json::as_f64).unwrap_or(0.0),
+            count: l.get("count").and_then(Json::as_f64).unwrap_or(0.0),
+        });
+    }
+    let fig6_sigma = m
+        .get("fig6_sigma")
+        .and_then(Json::as_arr)
+        .map(|rows| {
+            rows.iter().filter_map(Json::as_f64_vec).collect()
+        })
+        .unwrap_or_default();
+    Ok(Calibration { model: model.to_string(), layers, fig6_sigma })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn welford_merge_matches_direct_computation() {
+        // two chunks of known data
+        let a = [1.0, 2.0, 3.0];
+        let b = [10.0, 11.0];
+        let all: Vec<f64> = a.iter().chain(b.iter()).copied().collect();
+        let stats = |xs: &[f64]| {
+            let n = xs.len() as f64;
+            let mean = xs.iter().sum::<f64>() / n;
+            let m2 = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>();
+            let min = xs.iter().copied().fold(f64::INFINITY, f64::min);
+            (n, mean, m2, min)
+        };
+        let (n1, m1, q1, mn1) = stats(&a);
+        let (n2, m2v, q2, mn2) = stats(&b);
+        let mut w = Welford::default();
+        w.merge(n1, m1, q1, mn1);
+        w.merge(n2, m2v, q2, mn2);
+        let (n, mean, m2, min) = stats(&all);
+        assert!((w.count - n).abs() < 1e-12);
+        assert!((w.mean - mean).abs() < 1e-12);
+        assert!((w.m2 - m2).abs() < 1e-9);
+        assert!((w.min - min).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sigma_of_constant_data_is_zero() {
+        let mut w = Welford::default();
+        w.merge(10.0, 5.0, 0.0, 5.0);
+        assert_eq!(w.sigma(), 0.0);
+    }
+}

@@ -1,0 +1,107 @@
+//! Serving metrics: counters + a fixed-bucket latency histogram.
+
+/// Simple log-scale latency histogram (seconds).
+#[derive(Clone, Debug, Default)]
+pub struct Histogram {
+    /// bucket i counts samples < 1e-4 * 2^i seconds.
+    counts: [u64; 24],
+    sum: f64,
+    n: u64,
+    max: f64,
+}
+
+impl Histogram {
+    pub fn record(&mut self, secs: f64) {
+        let mut b = 0usize;
+        let mut edge = 1e-4;
+        while secs >= edge && b + 1 < self.counts.len() {
+            edge *= 2.0;
+            b += 1;
+        }
+        self.counts[b] += 1;
+        self.sum += secs;
+        self.n += 1;
+        self.max = self.max.max(secs);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 { 0.0 } else { self.sum / self.n as f64 }
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Approximate quantile from bucket upper edges.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        let target = (q * self.n as f64).ceil() as u64;
+        let mut acc = 0u64;
+        let mut edge = 1e-4;
+        for &c in &self.counts {
+            acc += c;
+            if acc >= target {
+                return edge;
+            }
+            edge *= 2.0;
+        }
+        self.max
+    }
+}
+
+/// Aggregate serving metrics.
+#[derive(Clone, Debug, Default)]
+pub struct Metrics {
+    pub requests_in: u64,
+    pub requests_done: u64,
+    pub prefills: u64,
+    pub decode_steps: u64,
+    pub decode_tokens: u64,
+    pub batch_occupancy_sum: u64,
+    pub ttft: Histogram,
+    pub total_latency: Histogram,
+}
+
+impl Metrics {
+    /// Mean decode-batch occupancy (tokens per decode step).
+    pub fn mean_occupancy(&self) -> f64 {
+        if self.decode_steps == 0 {
+            0.0
+        } else {
+            self.batch_occupancy_sum as f64 / self.decode_steps as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_statistics() {
+        let mut h = Histogram::default();
+        for i in 1..=100 {
+            h.record(i as f64 * 1e-3);
+        }
+        assert_eq!(h.count(), 100);
+        assert!((h.mean() - 0.0505).abs() < 1e-9);
+        assert!(h.quantile(0.5) >= 0.04 && h.quantile(0.5) <= 0.13,
+                "p50 {}", h.quantile(0.5));
+        assert!(h.quantile(1.0) >= 0.1);
+        assert_eq!(h.max(), 0.1);
+    }
+
+    #[test]
+    fn occupancy() {
+        let mut m = Metrics::default();
+        m.decode_steps = 4;
+        m.batch_occupancy_sum = 10;
+        assert!((m.mean_occupancy() - 2.5).abs() < 1e-12);
+    }
+}

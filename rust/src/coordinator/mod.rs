@@ -1,0 +1,20 @@
+//! L3 serving coordinator: continuous batching over the PJRT engine.
+//!
+//! Shape: requests enter an admission queue; the scheduler claims a KV
+//! slot per sequence, runs batch-1 prefill to fill the slot, then steps
+//! ALL active slots together through the batch-8 decode executable
+//! (inactive rows are padded and ignored) — the prefill/decode interleave
+//! of vLLM-style continuous batching, scaled to this bundle's fixed
+//! artifact batch sizes.
+
+pub mod batcher;
+pub mod kv;
+pub mod metrics;
+pub mod request;
+pub mod server;
+
+pub use batcher::Scheduler;
+pub use kv::KvPool;
+pub use metrics::Metrics;
+pub use request::{Request, Response};
+pub use server::{serve_until_drained, ServeConfig};

@@ -1,0 +1,38 @@
+//! Request/response types of the serving API.
+
+use std::time::Instant;
+
+use crate::model::SamplingParams;
+
+/// An inference request (tokenized prompt).
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+    pub params: SamplingParams,
+}
+
+/// Completion of one request, with timing for the latency report.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub prompt_len: usize,
+    pub tokens: Vec<i32>,
+    /// queue-in -> first token (seconds).
+    pub ttft: f64,
+    /// queue-in -> completion (seconds).
+    pub total_latency: f64,
+}
+
+/// Internal lifecycle record.
+#[derive(Debug)]
+pub struct InFlight {
+    pub req: Request,
+    pub enqueued: Instant,
+    pub first_token: Option<Instant>,
+    pub generated: Vec<i32>,
+    pub slot: usize,
+    /// next decode position (= tokens written into the KV so far).
+    pub pos: usize,
+}

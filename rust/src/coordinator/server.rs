@@ -1,0 +1,39 @@
+//! Serve loop: drain a workload through the scheduler and collect
+//! responses + throughput (the serving examples and benches drive this).
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::runtime::{Engine, QuantMode};
+
+use super::batcher::Scheduler;
+use super::request::{Request, Response};
+
+/// Configuration of a serve run.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    pub model: String,
+    pub quant: QuantMode,
+    pub c_vec: Option<Vec<f32>>,
+    pub decode_batch: usize,
+}
+
+/// Run all `requests` to completion; returns (responses, wall seconds,
+/// scheduler with final metrics).
+pub fn serve_until_drained(engine: &mut Engine, cfg: &ServeConfig,
+                           requests: Vec<Request>)
+                           -> Result<(Vec<Response>, f64, Scheduler)> {
+    let mut sched = Scheduler::new(engine, &cfg.model, cfg.quant,
+                                   cfg.c_vec.clone(), cfg.decode_batch)?;
+    for r in requests {
+        sched.submit(r);
+    }
+    let t0 = Instant::now();
+    let mut out = Vec::new();
+    while sched.has_work() {
+        out.extend(sched.tick(engine)?);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    Ok((out, wall, sched))
+}

@@ -1,0 +1,276 @@
+//! Cycle-accurate cost model — the accounting substrate for paper Fig. 1
+//! (runtime share by layer type) and Table 3 (softmax runtime).
+//!
+//! The paper measures on Gaudi-2; we reproduce the *accounting structure*
+//! with a configurable cycle table (paper §4.1: direct exponent 5–12
+//! cycles, LUT access 1 cycle, quantize 3 cycles) plus a simple
+//! vector-width/MXU throughput model for the surrounding transformer ops.
+//! Absolute numbers are not the target — the claims are ratios (softmax
+//! ~39% of BF16 inference, Algo. 2 ≈ 36.9% faster softmax) and those are
+//! structural.
+
+/// Per-operation cycle costs. Defaults follow the paper's footnotes:
+/// exp = 8 (mid of 5–12), LUT = 1, quantize = 3, add = 1, div = 4.
+#[derive(Clone, Copy, Debug)]
+pub struct CycleTable {
+    pub exp: f64,
+    pub lut: f64,
+    pub quant: f64,
+    pub add: f64,
+    pub div: f64,
+}
+
+impl Default for CycleTable {
+    fn default() -> Self {
+        Self { exp: 8.0, lut: 1.0, quant: 3.0, add: 1.0, div: 4.0 }
+    }
+}
+
+/// Softmax cycle accounting for a row of `n` elements.
+impl CycleTable {
+    /// Algorithm 1: per-element exp, N accumulations, N divides.
+    pub fn algo1_softmax(&self, n: usize) -> f64 {
+        let n = n as f64;
+        n * self.exp + n * self.add + n * self.div
+    }
+
+    /// Algorithm 2 at `bits`: per-element quantize + LUT_exp, N/group
+    /// LUT_sum accumulations, N divides. group = 4 at 2 bits, 2 at 3/4.
+    pub fn algo2_softmax(&self, n: usize, bits: u32) -> f64 {
+        let group = crate::exaq::lut::lut_group(bits) as f64;
+        let n = n as f64;
+        n * self.quant + n * self.lut + (n / group) * self.lut
+            + n * self.div
+    }
+
+    /// Fractional runtime saving of Algo. 2 over Algo. 1 (Table 3's
+    /// 36.9% figure is (3.274 − 2.066) / 3.274).
+    pub fn softmax_saving(&self, n: usize, bits: u32) -> f64 {
+        let a1 = self.algo1_softmax(n);
+        let a2 = self.algo2_softmax(n, bits);
+        (a1 - a2) / a1
+    }
+
+    /// Speedup of the *accumulation phase* alone (paper §4.2: ~4x at
+    /// 2 bits, 2x at 4 bits).
+    pub fn accumulation_speedup(&self, n: usize, bits: u32) -> f64 {
+        let group = crate::exaq::lut::lut_group(bits) as f64;
+        (n as f64 * self.add) / ((n as f64 / group) * self.lut)
+    }
+}
+
+/// GEMM precision scenarios for the Fig. 1 breakdown.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GemmPrecision {
+    Bf16,
+    Fp8,
+}
+
+/// Simple accelerator throughput model: MXU-style matmul engine, a vector
+/// unit running the softmax cycle program, and an HBM byte budget for the
+/// memory-bound element-wise bucket, in abstract "cycles".
+///
+/// Default constants are *fitted* so that the LLaMA-2-7B/BF16/Algo-1
+/// scenario reproduces the paper's measured Fig. 1 shares (~39% softmax,
+/// ~24% GEMM); everything else (FP8 scenario, Algo-2 scenario, other
+/// shapes) is then prediction, not fit.
+#[derive(Clone, Copy, Debug)]
+pub struct MachineModel {
+    /// MAC/cycle for BF16 matmuls (systolic array).
+    pub mxu_bf16_macs: f64,
+    /// MAC/cycle for FP8 matmuls (modern accelerators: 2x BF16).
+    pub mxu_fp8_macs: f64,
+    /// Vector lanes per cycle for the softmax cycle program.
+    pub vpu_lanes: f64,
+    /// HBM bytes per cycle for memory-bound element-wise ops.
+    pub hbm_bytes_per_cycle: f64,
+    pub cycles: CycleTable,
+}
+
+impl Default for MachineModel {
+    fn default() -> Self {
+        Self {
+            mxu_bf16_macs: 27_000.0,
+            mxu_fp8_macs: 54_000.0,
+            vpu_lanes: 64.0,
+            hbm_bytes_per_cycle: 57.0,
+            cycles: CycleTable::default(),
+        }
+    }
+}
+
+/// One transformer-op bucket of the Fig. 1 pie.
+#[derive(Clone, Debug)]
+pub struct OpShare {
+    pub name: &'static str,
+    pub cycles: f64,
+    pub share: f64,
+}
+
+/// Transformer shape for the breakdown (decoder inference, one step over
+/// a sequence of length `s` with batch `b`).
+#[derive(Clone, Copy, Debug)]
+pub struct TransformerShape {
+    pub layers: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub seq: usize,
+    pub batch: usize,
+    pub vocab: usize,
+}
+
+impl MachineModel {
+    fn gemm_cycles(&self, macs: f64, prec: GemmPrecision) -> f64 {
+        match prec {
+            GemmPrecision::Bf16 => macs / self.mxu_bf16_macs,
+            GemmPrecision::Fp8 => macs / self.mxu_fp8_macs,
+        }
+    }
+
+    /// Fig. 1: per-op-type cycle shares for a full prefill pass.
+    /// `softmax_algo2_bits = None` -> original softmax (Algo. 1).
+    pub fn breakdown(
+        &self,
+        shape: TransformerShape,
+        prec: GemmPrecision,
+        softmax_algo2_bits: Option<u32>,
+    ) -> Vec<OpShare> {
+        let TransformerShape { layers, d_model, n_heads, d_ff, seq, batch,
+                               vocab } = shape;
+        let (l, d, f, s, b) = (layers as f64, d_model as f64, d_ff as f64,
+                               seq as f64, batch as f64);
+        let hd = d / n_heads as f64;
+
+        // GEMMs: qkv+o projections, attention score/value matmuls, MLP.
+        let proj = 4.0 * b * s * d * d;
+        let attn_mm = 2.0 * b * n_heads as f64 * s * s * hd;
+        let mlp = 3.0 * b * s * d * f;
+        let head = b * s * d * vocab as f64;
+        let gemm = self.gemm_cycles(l * (proj + attn_mm + mlp) + head, prec);
+
+        // softmax: one row of length `s` per (batch, head, query)
+        let rows = b * n_heads as f64 * s;
+        let softmax = l * rows
+            * match softmax_algo2_bits {
+                None => self.cycles.algo1_softmax(seq),
+                Some(bits) => self.cycles.algo2_softmax(seq, bits),
+            }
+            / self.vpu_lanes;
+
+        // element-wise bucket is memory-bound: norms (2/layer), rope,
+        // residuals, KV writes, activation traffic — modelled as HBM
+        // bytes moved (f32): ~20 d-wide accesses + ~6 ff-wide accesses
+        // per token per layer.
+        let elemwise = l * (b * s * d * 20.0 + b * s * f * 6.0) * 4.0
+            / self.hbm_bytes_per_cycle;
+
+        let total = gemm + softmax + elemwise;
+        vec![
+            OpShare { name: "gemm", cycles: gemm, share: gemm / total },
+            OpShare { name: "softmax", cycles: softmax,
+                      share: softmax / total },
+            OpShare { name: "elementwise", cycles: elemwise,
+                      share: elemwise / total },
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_cycles_reproduce_table3_magnitude() {
+        // Table 3: 3.274ms -> 2.066ms is a 36.9% saving. Our default
+        // cycle table should land in the same regime at 2 bits.
+        let t = CycleTable::default();
+        let saving = t.softmax_saving(2048, 2);
+        assert!((saving - 0.369).abs() < 0.05,
+                "saving {saving:.4} vs paper 0.369");
+    }
+
+    #[test]
+    fn accumulation_speedup_matches_paper_claims() {
+        let t = CycleTable::default();
+        // §4.2: ~4x at 2 bits (byte packs 4 codes)…
+        let s2 = t.accumulation_speedup(4096, 2);
+        assert!((s2 - 4.0).abs() < 1e-9, "{s2}");
+        // …and 2x at 4 bits (byte packs 2 codes).
+        let s4 = t.accumulation_speedup(4096, 4);
+        assert!((s4 - 2.0).abs() < 1e-9, "{s4}");
+    }
+
+    #[test]
+    fn algo2_cheaper_for_all_row_sizes() {
+        let t = CycleTable::default();
+        for n in [16usize, 64, 256, 2048, 8192] {
+            for bits in [2, 3, 4] {
+                assert!(t.algo2_softmax(n, bits) < t.algo1_softmax(n),
+                        "n={n} bits={bits}");
+            }
+        }
+    }
+
+    #[test]
+    fn fig1_softmax_dominates_in_bf16() {
+        // The motivation claim: with BF16 GEMMs, softmax is the largest
+        // single op bucket (~39% on Gaudi-2 for LLaMA-2-7B).
+        let m = MachineModel::default();
+        let shape = TransformerShape {
+            layers: 32, d_model: 4096, n_heads: 32, d_ff: 11008,
+            seq: 2048, batch: 1, vocab: 32000,
+        };
+        let shares = m.breakdown(shape, GemmPrecision::Bf16, None);
+        let softmax = shares.iter().find(|o| o.name == "softmax").unwrap();
+        let gemm = shares.iter().find(|o| o.name == "gemm").unwrap();
+        assert!(softmax.share > 0.25 && softmax.share < 0.55,
+                "softmax share {:.3}", softmax.share);
+        assert!(softmax.share > gemm.share * 0.8,
+                "softmax {:.3} should rival gemm {:.3}",
+                softmax.share, gemm.share);
+    }
+
+    #[test]
+    fn fp8_inflates_softmax_share() {
+        // §2: as GEMMs accelerate, softmax's share grows.
+        let m = MachineModel::default();
+        let shape = TransformerShape {
+            layers: 32, d_model: 4096, n_heads: 32, d_ff: 11008,
+            seq: 2048, batch: 1, vocab: 32000,
+        };
+        let bf16 = m.breakdown(shape, GemmPrecision::Bf16, None);
+        let fp8 = m.breakdown(shape, GemmPrecision::Fp8, None);
+        let s16 = bf16.iter().find(|o| o.name == "softmax").unwrap().share;
+        let s8 = fp8.iter().find(|o| o.name == "softmax").unwrap().share;
+        assert!(s8 > s16);
+    }
+
+    #[test]
+    fn algo2_shrinks_softmax_share() {
+        let m = MachineModel::default();
+        let shape = TransformerShape {
+            layers: 32, d_model: 4096, n_heads: 32, d_ff: 11008,
+            seq: 2048, batch: 1, vocab: 32000,
+        };
+        let before = m.breakdown(shape, GemmPrecision::Bf16, None);
+        let after = m.breakdown(shape, GemmPrecision::Bf16, Some(2));
+        let sb = before.iter().find(|o| o.name == "softmax").unwrap();
+        let sa = after.iter().find(|o| o.name == "softmax").unwrap();
+        assert!(sa.cycles < sb.cycles * 0.75);
+    }
+
+    #[test]
+    fn shares_sum_to_one() {
+        let m = MachineModel::default();
+        let shape = TransformerShape {
+            layers: 4, d_model: 128, n_heads: 4, d_ff: 352,
+            seq: 64, batch: 8, vocab: 104,
+        };
+        for prec in [GemmPrecision::Bf16, GemmPrecision::Fp8] {
+            let total: f64 = m.breakdown(shape, prec, None)
+                .iter().map(|o| o.share).sum();
+            assert!((total - 1.0).abs() < 1e-9);
+        }
+    }
+}

@@ -1,0 +1,174 @@
+//! Sentence sampler — mirror of `corpus.py::sample_sentence` /
+//! `generate_tokens` (template ids and RNG call order are part of the
+//! cross-language spec; the `corpus_prefix` field of the golden dump pins
+//! it).
+
+use crate::model::Tokenizer;
+use crate::util::rng::SplitMix64;
+
+use super::world::{
+    material_prop, World, COLORS, MATERIALS, NAMES, OBJECTS, PLACES,
+};
+
+const N_TEMPLATES: usize = 11;
+
+/// One sampled sentence, as words.
+pub fn sample_sentence(w: &World, rng: &mut SplitMix64) -> Vec<String> {
+    let s = |v: Vec<&str>| v.into_iter().map(str::to_string).collect();
+    match rng.below(N_TEMPLATES) {
+        0 => {
+            let o = rng.below(OBJECTS.len());
+            s(vec!["the", OBJECTS[o], "is", w.object_color(o), "."])
+        }
+        1 => {
+            let o = rng.below(OBJECTS.len());
+            s(vec!["the", OBJECTS[o], "is", "made", "of",
+                   w.object_material(o), "."])
+        }
+        2 => {
+            let m = rng.below(MATERIALS.len());
+            s(vec![MATERIALS[m], "is", material_prop(m), "."])
+        }
+        3 => {
+            let p = rng.below(NAMES.len());
+            s(vec![NAMES[p], "is", "in", "the", PLACES[w.place[p]], "."])
+        }
+        4 => {
+            let p = rng.below(NAMES.len());
+            s(vec![NAMES[p], "has", "the", OBJECTS[w.owned[p]], "."])
+        }
+        5 => {
+            let p = rng.below(NAMES.len());
+            s(vec!["the", OBJECTS[w.owned[p]], "belongs", "to", NAMES[p],
+                   "."])
+        }
+        6 => {
+            let a = rng.below(OBJECTS.len());
+            let mut b = rng.below(OBJECTS.len());
+            while w.object_hardness(a) == w.object_hardness(b) {
+                b = rng.below(OBJECTS.len());
+            }
+            let (hi, lo) = if w.object_hardness(a) > w.object_hardness(b) {
+                (a, b)
+            } else {
+                (b, a)
+            };
+            s(vec!["the", OBJECTS[hi], "is", "harder", "than", "the",
+                   OBJECTS[lo], "."])
+        }
+        7 => {
+            let o = rng.below(OBJECTS.len());
+            let mut color = rng.below(COLORS.len());
+            if rng.below(2) == 0 {
+                color = w.color[o];
+            }
+            let ans = if w.color[o] == color { "yes" } else { "no" };
+            s(vec!["question", ":", "is", "the", OBJECTS[o],
+                   COLORS[color], "?", "answer", ":", ans, "."])
+        }
+        8 => {
+            let a = rng.below(OBJECTS.len());
+            let mut b = rng.below(OBJECTS.len());
+            while w.object_hardness(a) == w.object_hardness(b) {
+                b = rng.below(OBJECTS.len());
+            }
+            let winner = if w.object_hardness(a) > w.object_hardness(b) {
+                a
+            } else {
+                b
+            };
+            s(vec!["question", ":", "which", "is", "harder", ":",
+                   OBJECTS[a], "or", OBJECTS[b], "?", "answer", ":",
+                   OBJECTS[winner], "."])
+        }
+        9 => {
+            let p = rng.below(NAMES.len());
+            let o = w.owned[p];
+            s(vec![NAMES[p], "has", "the", OBJECTS[o], ".", "it", "is",
+                   w.object_color(o), "."])
+        }
+        _ => {
+            let o = rng.below(OBJECTS.len());
+            let m = w.object_material(o);
+            let pr = w.object_property(o);
+            s(vec!["the", OBJECTS[o], "is", "made", "of", m, ".", m,
+                   "is", pr, ".", "the", OBJECTS[o], "is", pr, "."])
+        }
+    }
+}
+
+/// Token stream mirroring corpus.py::generate_tokens.
+pub fn generate_tokens(w: &World, tok: &Tokenizer, corpus_seed: u64,
+                       n_tokens: usize) -> Vec<i32> {
+    let mut rng = SplitMix64::new(corpus_seed);
+    let mut out = vec![tok.bos];
+    let mut sent_in_doc = 0;
+    while out.len() < n_tokens {
+        for word in sample_sentence(w, &mut rng) {
+            out.push(tok.id(&word).expect("corpus word in vocab"));
+        }
+        sent_in_doc += 1;
+        if sent_in_doc == 8 {
+            out.push(tok.sep);
+            sent_in_doc = 0;
+        }
+    }
+    out.truncate(n_tokens);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+    use std::path::Path;
+
+    #[test]
+    fn corpus_prefix_matches_python_golden() {
+        let p = Path::new(concat!(env!("CARGO_MANIFEST_DIR"),
+                                  "/artifacts/world_family1.json"));
+        if !p.exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let j = Json::parse(&std::fs::read_to_string(p).unwrap()).unwrap();
+        let vocab = j.get("vocab").unwrap().as_str_vec().unwrap();
+        let tok = Tokenizer::new(vocab, 0, 1, 2, 3);
+        let seed = j.get("seed").unwrap().as_usize().unwrap() as u64;
+        let w = World::build(seed);
+        let want: Vec<i32> = j.get("corpus_prefix").unwrap()
+            .as_f64_vec().unwrap().into_iter().map(|x| x as i32)
+            .collect();
+        let got = generate_tokens(&w, &tok, seed + 1, want.len());
+        assert_eq!(got, want, "corpus sampler diverged from python spec");
+    }
+
+    #[test]
+    fn tokens_deterministic_and_in_range() {
+        let w = World::build(1);
+        let vocab: Vec<String> = {
+            // minimal vocab: build from the known layout
+            let mut v: Vec<String> =
+                ["<pad>", "<bos>", "<eos>", "<sep>"]
+                    .iter().map(|s| s.to_string()).collect();
+            for w_ in NAMES.iter().chain(OBJECTS.iter())
+                .chain(PLACES.iter()).chain(COLORS.iter())
+                .chain(MATERIALS.iter())
+                .chain(super::super::world::PROPERTIES.iter())
+                .chain(["the", "is", "in", "has", "made", "of", "than",
+                        "harder", "softer", "question", "answer", "yes",
+                        "no", "it", "belongs", "to", "a", "which", "or",
+                        ".", "?", ":"].iter())
+            {
+                v.push(w_.to_string());
+            }
+            v
+        };
+        let tok = Tokenizer::new(vocab, 0, 1, 2, 3);
+        let a = generate_tokens(&w, &tok, 7, 300);
+        let b = generate_tokens(&w, &tok, 7, 300);
+        assert_eq!(a, b);
+        assert_eq!(a[0], tok.bos);
+        assert!(a.iter().all(|&t| (t as usize) < tok.vocab_size()));
+    }
+}

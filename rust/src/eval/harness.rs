@@ -1,0 +1,167 @@
+//! lm-evaluation-harness-style scorer: batched log-likelihood of each
+//! choice, argmax -> accuracy (Tables 2/4/5/6 of the paper).
+
+use anyhow::Result;
+
+use crate::model::Tokenizer;
+use crate::runtime::{Engine, HostTensor, QuantMode};
+use crate::util::rng::SplitMix64;
+
+use super::tasks::{Instance, Task};
+use super::world::World;
+
+/// One (prompt, choice) scoring request flattened for batching.
+struct Request {
+    tokens: Vec<i32>,
+    /// logits positions [start, start+len) predict the choice tokens.
+    start: usize,
+    len: usize,
+    instance: usize,
+    choice: usize,
+}
+
+/// Accuracy of one task under one quantization configuration.
+#[derive(Clone, Debug)]
+pub struct TaskResult {
+    pub task: Task,
+    pub accuracy: f64,
+    pub n: usize,
+}
+
+/// Evaluate `task` on `n` instances. `c_vec` is required for Static
+/// quant modes (computed by `exaq::clip` from calibration stats).
+pub fn eval_task(engine: &mut Engine, model: &str, quant: QuantMode,
+                 c_vec: Option<&[f32]>, task: Task, world: &World,
+                 n: usize, seed: u64) -> Result<TaskResult> {
+    let tok = Tokenizer::from_manifest(&engine.manifest);
+    let seq = engine.manifest.seq;
+    let mut rng = SplitMix64::new(seed ^ (task as u64).wrapping_mul(0x9e37));
+
+    let mut instances = Vec::with_capacity(n);
+    while instances.len() < n {
+        let inst = task.generate(world, &mut rng);
+        if fits(&inst, seq) {
+            instances.push(inst);
+        }
+    }
+
+    // flatten to requests
+    let mut requests = Vec::new();
+    for (ii, inst) in instances.iter().enumerate() {
+        let prompt: Vec<i32> = inst
+            .prompt
+            .iter()
+            .map(|w| tok.id(w))
+            .collect::<Result<_>>()?;
+        for (ci, choice) in inst.choices.iter().enumerate() {
+            let choice_ids: Vec<i32> = choice
+                .iter()
+                .map(|w| tok.id(w))
+                .collect::<Result<_>>()?;
+            let mut tokens = prompt.clone();
+            tokens.extend_from_slice(&choice_ids);
+            let padded = tok.pad_to(&tokens, seq)?;
+            requests.push(Request {
+                tokens: padded,
+                // with <bos> at index 0, logits index (1 + prompt_len - 1
+                // + j) predicts choice token j
+                start: prompt.len(),
+                len: choice_ids.len(),
+                instance: ii,
+                choice: ci,
+            });
+        }
+    }
+
+    // batched prefill scoring (batch 8 artifacts; remainder via batch 1)
+    let vocab = tok.vocab_size();
+    let mut lls: Vec<Vec<f64>> = instances
+        .iter()
+        .map(|i| vec![f64::NEG_INFINITY; i.choices.len()])
+        .collect();
+    let mut i = 0;
+    while i < requests.len() {
+        let bsz = if requests.len() - i >= 8 { 8 } else { 1 };
+        let chunk = &requests[i..i + bsz];
+        let mut flat = Vec::with_capacity(bsz * seq);
+        for r in chunk {
+            flat.extend_from_slice(&r.tokens);
+        }
+        let tokens = HostTensor::i32(flat, &[bsz, seq]);
+        let (logits, _) = engine.prefill(model, quant, &tokens, c_vec)?;
+        let lg = logits.as_f32()?;
+        for (bi, r) in chunk.iter().enumerate() {
+            let mut total = 0.0f64;
+            for j in 0..r.len {
+                let pos = r.start + j;
+                let row = &lg[(bi * seq + pos) * vocab
+                    ..(bi * seq + pos + 1) * vocab];
+                let target = r.tokens[pos + 1] as usize;
+                total += log_softmax_at(row, target);
+            }
+            lls[r.instance][r.choice] = total / r.len as f64;
+        }
+        i += bsz;
+    }
+
+    let mut correct = 0usize;
+    for (inst, ll) in instances.iter().zip(&lls) {
+        let best = ll
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap();
+        if best == inst.gold {
+            correct += 1;
+        }
+    }
+    Ok(TaskResult {
+        task,
+        accuracy: correct as f64 / instances.len() as f64,
+        n: instances.len(),
+    })
+}
+
+fn fits(inst: &Instance, seq: usize) -> bool {
+    let longest = inst.choices.iter().map(Vec::len).max().unwrap_or(0);
+    1 + inst.prompt.len() + longest + 1 <= seq
+}
+
+fn log_softmax_at(row: &[f32], target: usize) -> f64 {
+    let m = row.iter().copied().fold(f32::NEG_INFINITY, f32::max) as f64;
+    let mut sum = 0.0f64;
+    for &x in row {
+        sum += ((x as f64) - m).exp();
+    }
+    (row[target] as f64) - m - sum.ln()
+}
+
+/// Mean and population std over per-seed accuracies (Tables 4/6).
+pub fn mean_std(xs: &[f64]) -> (f64, f64) {
+    let n = xs.len() as f64;
+    let mean = xs.iter().sum::<f64>() / n;
+    let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n;
+    (mean, var.sqrt())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn log_softmax_is_normalised() {
+        let row = vec![1.0f32, 2.0, 3.0];
+        let total: f64 = (0..3).map(|t| log_softmax_at(&row, t).exp())
+            .sum();
+        assert!((total - 1.0).abs() < 1e-9);
+        assert!(log_softmax_at(&row, 2) > log_softmax_at(&row, 0));
+    }
+
+    #[test]
+    fn mean_std_basic() {
+        let (m, s) = mean_std(&[1.0, 2.0, 3.0]);
+        assert!((m - 2.0).abs() < 1e-12);
+        assert!((s - (2.0f64 / 3.0).sqrt()).abs() < 1e-12);
+    }
+}

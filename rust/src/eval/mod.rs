@@ -1,0 +1,20 @@
+//! Evaluation stack: procedural world, corpus sampler, seven task
+//! families, and the lm-eval-style scoring harness (paper §5.1).
+
+pub mod corpus;
+pub mod harness;
+pub mod tasks;
+pub mod world;
+
+pub use harness::{eval_task, mean_std, TaskResult};
+pub use tasks::{Task, ALL_TASKS};
+pub use world::World;
+
+/// World seeds per family (mirror of train.py FAMILY_WORLD_SEED).
+pub fn family_world_seed(family: u32) -> u64 {
+    match family {
+        1 => 1,
+        2 => 7,
+        other => panic!("unknown family {other}"),
+    }
+}

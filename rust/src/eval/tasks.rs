@@ -1,0 +1,335 @@
+//! The seven evaluation task families — the substitution for the paper's
+//! BoolQ / HellaSwag / PIQA / WinoGrande / ARC-c / ARC-e / OpenBookQA
+//! suite (DESIGN.md §2). Every task is multiple-choice and scored by
+//! length-normalised log-likelihood, exactly like lm-evaluation-harness.
+//!
+//! Context-retrieval families (openbook, completion) prepend distractor
+//! facts so the answer requires attention over competing keys — the
+//! mechanism through which softmax-input quantization damages accuracy.
+
+use crate::util::rng::SplitMix64;
+
+use super::world::{
+    hardness, material_prop, World, COLORS, NAMES, OBJECTS,
+    PLACES, PROPERTIES,
+};
+
+/// One multiple-choice instance (word-level, pre-tokenizer).
+#[derive(Clone, Debug)]
+pub struct Instance {
+    pub prompt: Vec<String>,
+    pub choices: Vec<Vec<String>>,
+    pub gold: usize,
+}
+
+/// The seven families, mapped to the paper's Table 2 columns.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Task {
+    /// BoolQ analogue: yes/no colour question.
+    BoolQa,
+    /// HellaSwag analogue: location completion with distractor context.
+    Completion,
+    /// PIQA analogue: which of two objects is harder.
+    Physical,
+    /// WinoGrande analogue: pronoun-style property binding ("it is ...").
+    Coref,
+    /// ARC-Challenge analogue: two-hop property (object -> material ->
+    /// property) WITHOUT the chain in context.
+    ArcChallenge,
+    /// ARC-Easy analogue: direct colour attribute.
+    ArcEasy,
+    /// OpenBookQA analogue: property chain stated in context, answer
+    /// requires in-context retrieval under distraction.
+    OpenBook,
+}
+
+pub const ALL_TASKS: [Task; 7] = [
+    Task::BoolQa,
+    Task::Completion,
+    Task::Physical,
+    Task::Coref,
+    Task::ArcChallenge,
+    Task::ArcEasy,
+    Task::OpenBook,
+];
+
+impl Task {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Task::BoolQa => "bool-qa",
+            Task::Completion => "completion",
+            Task::Physical => "physical",
+            Task::Coref => "coref",
+            Task::ArcChallenge => "arc-challenge",
+            Task::ArcEasy => "arc-easy",
+            Task::OpenBook => "openbook",
+        }
+    }
+
+    /// Paper column this family substitutes for.
+    pub fn paper_column(&self) -> &'static str {
+        match self {
+            Task::BoolQa => "BoolQ",
+            Task::Completion => "HellaSwag",
+            Task::Physical => "PIQA",
+            Task::Coref => "WinoGrande",
+            Task::ArcChallenge => "ARC Challenge",
+            Task::ArcEasy => "ARC Easy",
+            Task::OpenBook => "OpenBookQA",
+        }
+    }
+
+    /// Generate one instance.
+    pub fn generate(&self, w: &World, rng: &mut SplitMix64) -> Instance {
+        match self {
+            Task::BoolQa => bool_qa(w, rng),
+            Task::Completion => completion(w, rng),
+            Task::Physical => physical(w, rng),
+            Task::Coref => coref(w, rng),
+            Task::ArcChallenge => arc_challenge(w, rng),
+            Task::ArcEasy => arc_easy(w, rng),
+            Task::OpenBook => openbook(w, rng),
+        }
+    }
+}
+
+fn words(v: &[&str]) -> Vec<String> {
+    v.iter().map(|s| s.to_string()).collect()
+}
+
+fn bool_qa(w: &World, rng: &mut SplitMix64) -> Instance {
+    let obj = rng.below(OBJECTS.len());
+    let mut color = rng.below(COLORS.len());
+    if rng.below(2) == 0 {
+        color = w.color[obj];
+    }
+    let truth = w.color[obj] == color;
+    Instance {
+        prompt: words(&["question", ":", "is", "the", OBJECTS[obj],
+                        COLORS[color], "?", "answer", ":"]),
+        choices: vec![words(&["yes"]), words(&["no"])],
+        gold: if truth { 0 } else { 1 },
+    }
+}
+
+fn completion(w: &World, rng: &mut SplitMix64) -> Instance {
+    // distractor people + their places, then the query person
+    let p = rng.below(NAMES.len());
+    let mut prompt = Vec::new();
+    for _ in 0..2 {
+        let mut q = rng.below(NAMES.len());
+        while q == p {
+            q = rng.below(NAMES.len());
+        }
+        prompt.extend(words(&[NAMES[q], "is", "in", "the",
+                              PLACES[w.place[q]], "."]));
+    }
+    prompt.extend(words(&[NAMES[p], "is", "in", "the"]));
+    let gold_place = w.place[p];
+    let mut choices = vec![words(&[PLACES[gold_place]])];
+    let mut used = vec![gold_place];
+    while choices.len() < 4 {
+        let c = rng.below(PLACES.len());
+        if !used.contains(&c) {
+            used.push(c);
+            choices.push(words(&[PLACES[c]]));
+        }
+    }
+    Instance { prompt, choices, gold: 0 }
+}
+
+fn physical(w: &World, rng: &mut SplitMix64) -> Instance {
+    let a = rng.below(OBJECTS.len());
+    let mut b = rng.below(OBJECTS.len());
+    while w.object_hardness(a) == w.object_hardness(b) {
+        b = rng.below(OBJECTS.len());
+    }
+    let winner = if w.object_hardness(a) > w.object_hardness(b) { 0 }
+                 else { 1 };
+    Instance {
+        prompt: words(&["question", ":", "which", "is", "harder", ":",
+                        OBJECTS[a], "or", OBJECTS[b], "?", "answer", ":"]),
+        choices: vec![words(&[OBJECTS[a]]), words(&[OBJECTS[b]])],
+        gold: winner,
+    }
+}
+
+fn coref(w: &World, rng: &mut SplitMix64) -> Instance {
+    let p = rng.below(NAMES.len());
+    let obj = w.owned[p];
+    let right = w.color[obj];
+    let mut wrong = rng.below(COLORS.len());
+    while wrong == right {
+        wrong = rng.below(COLORS.len());
+    }
+    // 2-choice, randomised order like WinoGrande
+    let flip = rng.below(2) == 1;
+    let (c0, c1, gold) = if flip {
+        (COLORS[wrong], COLORS[right], 1)
+    } else {
+        (COLORS[right], COLORS[wrong], 0)
+    };
+    Instance {
+        prompt: words(&[NAMES[p], "has", "the", OBJECTS[obj], ".", "it",
+                        "is"]),
+        choices: vec![words(&[c0]), words(&[c1])],
+        gold,
+    }
+}
+
+fn arc_challenge(w: &World, rng: &mut SplitMix64) -> Instance {
+    // two-hop: object -> material -> property, no chain in context
+    let obj = rng.below(OBJECTS.len());
+    let gold_prop = w.object_property(obj);
+    let mut choices = vec![words(&[gold_prop])];
+    let mut used = vec![gold_prop];
+    while choices.len() < 4 {
+        let c = PROPERTIES[rng.below(PROPERTIES.len())];
+        if !used.contains(&c) {
+            used.push(c);
+            choices.push(words(&[c]));
+        }
+    }
+    Instance {
+        prompt: words(&["the", OBJECTS[obj], "is"]),
+        choices,
+        gold: 0,
+    }
+}
+
+fn arc_easy(w: &World, rng: &mut SplitMix64) -> Instance {
+    let obj = rng.below(OBJECTS.len());
+    let gold_color = w.color[obj];
+    let mut choices = vec![words(&[COLORS[gold_color]])];
+    let mut used = vec![gold_color];
+    while choices.len() < 4 {
+        let c = rng.below(COLORS.len());
+        if !used.contains(&c) {
+            used.push(c);
+            choices.push(words(&[COLORS[c]]));
+        }
+    }
+    Instance {
+        prompt: words(&["the", OBJECTS[obj], "is"]),
+        choices,
+        gold: 0,
+    }
+}
+
+fn openbook(w: &World, rng: &mut SplitMix64) -> Instance {
+    // distractor chains for other objects, then the query object's chain
+    // WITHOUT its conclusion — in-context retrieval under distraction.
+    let obj = rng.below(OBJECTS.len());
+    let mut prompt = Vec::new();
+    let mut used = vec![obj];
+    for _ in 0..2 {
+        let mut o = rng.below(OBJECTS.len());
+        while used.contains(&o) {
+            o = rng.below(OBJECTS.len());
+        }
+        used.push(o);
+        let m = w.object_material(o);
+        prompt.extend(words(&["the", OBJECTS[o], "is", "made", "of", m,
+                              ".", m, "is", material_prop(w.material[o]),
+                              "."]));
+    }
+    let m = w.object_material(obj);
+    let gold_prop = w.object_property(obj);
+    prompt.extend(words(&["the", OBJECTS[obj], "is", "made", "of", m, ".",
+                          m, "is", gold_prop, ".", "the", OBJECTS[obj],
+                          "is"]));
+    let mut choices = vec![words(&[gold_prop])];
+    let mut usedp = vec![gold_prop];
+    while choices.len() < 4 {
+        let c = PROPERTIES[rng.below(PROPERTIES.len())];
+        if !usedp.contains(&c) {
+            usedp.push(c);
+            choices.push(words(&[c]));
+        }
+    }
+    Instance { prompt, choices, gold: 0 }
+}
+
+// keep clippy quiet about the unused import when tests are off
+#[allow(unused_imports)]
+use hardness as _hardness_used;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn instances_are_well_formed() {
+        let w = World::build(1);
+        let mut rng = SplitMix64::new(9);
+        for task in ALL_TASKS {
+            for _ in 0..50 {
+                let inst = task.generate(&w, &mut rng);
+                assert!(!inst.prompt.is_empty());
+                assert!(inst.choices.len() >= 2);
+                assert!(inst.gold < inst.choices.len());
+                // choices distinct
+                for i in 0..inst.choices.len() {
+                    for j in i + 1..inst.choices.len() {
+                        assert_ne!(inst.choices[i], inst.choices[j],
+                                   "{:?}", task);
+                    }
+                }
+                // prompt fits the model context with room for a choice
+                assert!(inst.prompt.len() + 3 <= 63,
+                        "{:?} prompt too long: {}", task,
+                        inst.prompt.len());
+            }
+        }
+    }
+
+    #[test]
+    fn gold_answers_are_correct_facts() {
+        let w = World::build(1);
+        let mut rng = SplitMix64::new(11);
+        for _ in 0..50 {
+            let inst = Task::ArcEasy.generate(&w, &mut rng);
+            // choice[gold] is the actual colour of the object in prompt
+            let obj_word = &inst.prompt[1];
+            let obj = OBJECTS.iter().position(|o| o == obj_word).unwrap();
+            assert_eq!(inst.choices[inst.gold][0], w.object_color(obj));
+        }
+        for _ in 0..50 {
+            let inst = Task::Physical.generate(&w, &mut rng);
+            let a = OBJECTS.iter()
+                .position(|o| *o == inst.prompt[6]).unwrap();
+            let b = OBJECTS.iter()
+                .position(|o| *o == inst.prompt[8]).unwrap();
+            let winner_word = &inst.choices[inst.gold][0];
+            let winner = OBJECTS.iter()
+                .position(|o| o == winner_word).unwrap();
+            assert!(winner == a || winner == b);
+            let loser = if winner == a { b } else { a };
+            assert!(w.object_hardness(winner) > w.object_hardness(loser));
+        }
+    }
+
+    #[test]
+    fn generation_is_seed_deterministic() {
+        let w = World::build(1);
+        let mut a = SplitMix64::new(5);
+        let mut b = SplitMix64::new(5);
+        for task in ALL_TASKS {
+            let ia = task.generate(&w, &mut a);
+            let ib = task.generate(&w, &mut b);
+            assert_eq!(ia.prompt, ib.prompt);
+            assert_eq!(ia.gold, ib.gold);
+        }
+    }
+
+    #[test]
+    fn coref_gold_position_varies() {
+        let w = World::build(1);
+        let mut rng = SplitMix64::new(13);
+        let golds: Vec<usize> = (0..40)
+            .map(|_| Task::Coref.generate(&w, &mut rng).gold)
+            .collect();
+        assert!(golds.iter().any(|&g| g == 0));
+        assert!(golds.iter().any(|&g| g == 1));
+    }
+}

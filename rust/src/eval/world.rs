@@ -1,0 +1,141 @@
+//! The procedural world — bit-for-bit mirror of
+//! `python/compile/corpus.py` (derivation order is part of the spec; the
+//! golden dump `artifacts/world_family*.json` pins both sides).
+
+use crate::util::rng::SplitMix64;
+
+pub const NAMES: [&str; 20] = [
+    "alice", "bob", "carol", "david", "erin", "frank", "grace", "henry",
+    "iris", "jack", "karen", "leo", "mona", "nina", "oscar", "paul",
+    "quinn", "rosa", "sam", "tina",
+];
+pub const OBJECTS: [&str; 24] = [
+    "ball", "cup", "book", "knife", "hammer", "pillow", "bottle", "lamp",
+    "chair", "rope", "coin", "plate", "shirt", "box", "mirror", "brick",
+    "blanket", "spoon", "vase", "drum", "kite", "glove", "candle",
+    "basket",
+];
+pub const PLACES: [&str; 12] = [
+    "kitchen", "garden", "library", "garage", "park", "office", "attic",
+    "cellar", "market", "station", "museum", "bakery",
+];
+pub const COLORS: [&str; 8] =
+    ["red", "blue", "green", "yellow", "black", "white", "purple",
+     "orange"];
+pub const MATERIALS: [&str; 8] = [
+    "wood", "metal", "glass", "stone", "cloth", "plastic", "rubber",
+    "paper",
+];
+pub const PROPERTIES: [&str; 6] =
+    ["hard", "soft", "fragile", "sturdy", "heavy", "light"];
+
+/// material index -> characteristic property.
+pub fn material_prop(mat: usize) -> &'static str {
+    ["sturdy", "heavy", "fragile", "hard", "soft", "light", "soft",
+     "fragile"][mat]
+}
+
+/// material index -> hardness rank (higher = harder).
+pub fn hardness(mat: usize) -> u32 {
+    [5, 6, 4, 7, 0, 3, 2, 1][mat]
+}
+
+/// World-fact assignments (see corpus.py `build_world`).
+#[derive(Clone, Debug)]
+pub struct World {
+    pub seed: u64,
+    pub color: Vec<usize>,
+    pub material: Vec<usize>,
+    pub owned: Vec<usize>,
+    pub place: Vec<usize>,
+}
+
+impl World {
+    pub fn build(seed: u64) -> World {
+        let mut rng = SplitMix64::new(seed);
+        let mut color = Vec::with_capacity(OBJECTS.len());
+        let mut material = Vec::with_capacity(OBJECTS.len());
+        for _ in 0..OBJECTS.len() {
+            color.push(rng.below(COLORS.len()));
+            material.push(rng.below(MATERIALS.len()));
+        }
+        let mut perm: Vec<usize> = (0..OBJECTS.len()).collect();
+        for i in (1..OBJECTS.len()).rev() {
+            let j = rng.below(i + 1);
+            perm.swap(i, j);
+        }
+        let owned = perm[..NAMES.len()].to_vec();
+        let place =
+            (0..NAMES.len()).map(|_| rng.below(PLACES.len())).collect();
+        World { seed, color, material, owned, place }
+    }
+
+    pub fn object_color(&self, obj: usize) -> &'static str {
+        COLORS[self.color[obj]]
+    }
+
+    pub fn object_material(&self, obj: usize) -> &'static str {
+        MATERIALS[self.material[obj]]
+    }
+
+    pub fn object_property(&self, obj: usize) -> &'static str {
+        material_prop(self.material[obj])
+    }
+
+    pub fn object_hardness(&self, obj: usize) -> u32 {
+        hardness(self.material[obj])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+    use std::path::Path;
+
+    #[test]
+    fn world_is_deterministic() {
+        let a = World::build(1);
+        let b = World::build(1);
+        assert_eq!(a.color, b.color);
+        assert_eq!(a.owned, b.owned);
+        let c = World::build(2);
+        assert_ne!(a.color, c.color);
+    }
+
+    #[test]
+    fn ownership_is_injective() {
+        let w = World::build(1);
+        let mut seen = std::collections::HashSet::new();
+        for &o in &w.owned {
+            assert!(seen.insert(o), "object {o} owned twice");
+        }
+    }
+
+    #[test]
+    fn matches_python_golden_dump() {
+        // The cross-language contract: artifacts/world_family1.json was
+        // derived by corpus.py; our derivation must agree exactly.
+        let p = Path::new(concat!(env!("CARGO_MANIFEST_DIR"),
+                                  "/artifacts/world_family1.json"));
+        if !p.exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let j = Json::parse(&std::fs::read_to_string(p).unwrap()).unwrap();
+        let seed = j.get("seed").unwrap().as_usize().unwrap() as u64;
+        let w = World::build(seed);
+        let as_usize = |key: &str| -> Vec<usize> {
+            j.get(key).unwrap().as_f64_vec().unwrap()
+                .into_iter().map(|x| x as usize).collect()
+        };
+        assert_eq!(w.color, as_usize("color"));
+        assert_eq!(w.material, as_usize("material"));
+        assert_eq!(w.owned, as_usize("owned"));
+        assert_eq!(w.place, as_usize("place"));
+        // vocab layout agrees with the tokenizer's expectations
+        let vocab = j.get("vocab").unwrap().as_str_vec().unwrap();
+        assert_eq!(vocab[4], NAMES[0]);
+        assert_eq!(vocab[4 + NAMES.len()], OBJECTS[0]);
+    }
+}

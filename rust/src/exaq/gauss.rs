@@ -1,0 +1,134 @@
+//! Gauss–Legendre quadrature and the Gaussian density — the numeric
+//! substrate of the analytic clipping model (paper §3.1).
+
+/// Gaussian pdf with mean 0 and standard deviation `sigma`.
+#[inline]
+pub fn normal_pdf(x: f64, sigma: f64) -> f64 {
+    let z = x / sigma;
+    (-(z * z) / 2.0).exp() / (sigma * (2.0 * std::f64::consts::PI).sqrt())
+}
+
+/// Nodes and weights of the n-point Gauss–Legendre rule on [-1, 1],
+/// computed by Newton iteration on the Legendre polynomial (standard
+/// Golub-free construction; accurate to ~1e-15 for n <= 128).
+pub fn legendre_nodes(n: usize) -> (Vec<f64>, Vec<f64>) {
+    let mut xs = vec![0.0; n];
+    let mut ws = vec![0.0; n];
+    let m = n.div_ceil(2);
+    for i in 0..m {
+        // Chebyshev-like initial guess
+        let mut x = (std::f64::consts::PI * (i as f64 + 0.75)
+            / (n as f64 + 0.5))
+            .cos();
+        let mut dp;
+        loop {
+            // evaluate P_n(x) and P'_n(x) by recurrence
+            let (mut p0, mut p1) = (1.0_f64, x);
+            for k in 2..=n {
+                let p2 = ((2 * k - 1) as f64 * x * p1
+                    - (k - 1) as f64 * p0)
+                    / k as f64;
+                p0 = p1;
+                p1 = p2;
+            }
+            dp = n as f64 * (x * p1 - p0) / (x * x - 1.0);
+            let dx = p1 / dp;
+            x -= dx;
+            if dx.abs() < 1e-15 {
+                break;
+            }
+        }
+        xs[i] = -x;
+        xs[n - 1 - i] = x;
+        let w = 2.0 / ((1.0 - x * x) * dp * dp);
+        ws[i] = w;
+        ws[n - 1 - i] = w;
+    }
+    (xs, ws)
+}
+
+/// Fixed-order Gauss–Legendre integrator, reusable across many intervals.
+pub struct GaussLegendre {
+    nodes: Vec<f64>,
+    weights: Vec<f64>,
+}
+
+impl GaussLegendre {
+    pub fn new(n: usize) -> Self {
+        let (nodes, weights) = legendre_nodes(n);
+        Self { nodes, weights }
+    }
+
+    /// ∫_a^b f(x) dx.
+    pub fn integrate(&self, a: f64, b: f64, f: impl Fn(f64) -> f64) -> f64 {
+        if a >= b {
+            return 0.0;
+        }
+        let c = 0.5 * (a + b);
+        let h = 0.5 * (b - a);
+        let mut acc = 0.0;
+        for (x, w) in self.nodes.iter().zip(&self.weights) {
+            acc += w * f(c + h * x);
+        }
+        acc * h
+    }
+
+    /// Panel-subdivided integration (for wide or peaked integrands).
+    pub fn integrate_panels(
+        &self,
+        a: f64,
+        b: f64,
+        panels: usize,
+        f: impl Fn(f64) -> f64,
+    ) -> f64 {
+        let step = (b - a) / panels as f64;
+        (0..panels)
+            .map(|i| {
+                self.integrate(a + i as f64 * step,
+                               a + (i + 1) as f64 * step, &f)
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn integrates_polynomials_exactly() {
+        let gl = GaussLegendre::new(16);
+        // 16-point rule is exact through degree 31
+        let got = gl.integrate(0.0, 2.0, |x| 3.0 * x * x);
+        assert!((got - 8.0).abs() < 1e-12, "{got}");
+        let got = gl.integrate(-1.0, 3.0, |x| x.powi(5) - x);
+        let want = (3.0f64.powi(6) - 1.0) / 6.0 - (9.0 - 1.0) / 2.0;
+        assert!((got - want).abs() < 1e-10, "{got} vs {want}");
+    }
+
+    #[test]
+    fn integrates_exp() {
+        let gl = GaussLegendre::new(32);
+        let got = gl.integrate(0.0, 1.0, f64::exp);
+        assert!((got - (std::f64::consts::E - 1.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gaussian_mass_is_one() {
+        let gl = GaussLegendre::new(64);
+        for sigma in [0.5, 1.0, 3.0] {
+            let got = gl.integrate_panels(-12.0 * sigma, 12.0 * sigma, 8,
+                                          |x| normal_pdf(x, sigma));
+            assert!((got - 1.0).abs() < 1e-10, "sigma={sigma} got {got}");
+        }
+    }
+
+    #[test]
+    fn gaussian_second_moment() {
+        let gl = GaussLegendre::new(64);
+        let sigma = 2.5;
+        let got = gl.integrate_panels(-30.0, 30.0, 16,
+                                      |x| x * x * normal_pdf(x, sigma));
+        assert!((got - sigma * sigma).abs() < 1e-8, "{got}");
+    }
+}

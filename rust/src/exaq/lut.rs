@@ -1,0 +1,155 @@
+//! The paper's two lookup tables (§4, Fig. 5).
+//!
+//! * `LUT_exp`  — code -> exp(value(code)). 2^M entries (4 at M = 2).
+//! * `LUT_sum`  — packed key of `group` consecutive codes -> the sum of
+//!   their exponents. At M = 2 a byte holds 4 codes (group = 4, 256
+//!   entries); at M = 3/4 a byte holds 2 codes (group = 2).
+//!
+//! Key layout matches `python/compile/kernels/ref.py::lut_sum_table`:
+//! low code first — key = Σ_j code[j] << (bits · j).
+
+use super::quant::Quantizer;
+
+/// LUT_exp: single-cycle exponent lookup (paper §4.1).
+#[derive(Clone, Debug)]
+pub struct LutExp {
+    pub table: Vec<f32>,
+    pub bits: u32,
+}
+
+impl LutExp {
+    pub fn build(q: &Quantizer) -> Self {
+        let table = (0..q.n_levels())
+            .map(|k| q.value(k as u8).exp())
+            .collect();
+        Self { table, bits: q.bits }
+    }
+
+    #[inline]
+    pub fn get(&self, code: u8) -> f32 {
+        self.table[code as usize]
+    }
+
+    /// exp(C) — the contribution of a masked/saturated lane (code 0).
+    #[inline]
+    pub fn floor_value(&self) -> f32 {
+        self.table[0]
+    }
+}
+
+/// How many codes pack into one LUT_sum key at each bit-width (paper:
+/// byte-keys -> 4 codes at 2 bits, 2 codes at 3/4 bits).
+pub fn lut_group(bits: u32) -> usize {
+    match bits {
+        2 => 4,
+        3 | 4 => 2,
+        _ => 1,
+    }
+}
+
+/// LUT_sum: packed multi-code accumulation table (paper §4.2).
+#[derive(Clone, Debug)]
+pub struct LutSum {
+    pub table: Vec<f32>,
+    pub bits: u32,
+    pub group: usize,
+}
+
+impl LutSum {
+    pub fn build(q: &Quantizer) -> Self {
+        let bits = q.bits;
+        let group = lut_group(bits);
+        let n = q.n_levels();
+        let size = n.pow(group as u32);
+        let exp: Vec<f32> = (0..n).map(|k| q.value(k as u8).exp()).collect();
+        let mut table = vec![0.0f32; size];
+        for (key, slot) in table.iter_mut().enumerate() {
+            let mut acc = 0.0f32;
+            for j in 0..group {
+                let digit = (key >> (bits as usize * j)) & (n - 1);
+                acc += exp[digit];
+            }
+            *slot = acc;
+        }
+        Self { table, bits, group }
+    }
+
+    /// Pack `group` codes into a key (low code first).
+    #[inline]
+    pub fn pack(&self, codes: &[u8]) -> usize {
+        debug_assert_eq!(codes.len(), self.group);
+        let mut key = 0usize;
+        for (j, &c) in codes.iter().enumerate() {
+            key |= (c as usize) << (self.bits as usize * j);
+        }
+        key
+    }
+
+    #[inline]
+    pub fn get(&self, key: usize) -> f32 {
+        self.table[key]
+    }
+
+    /// Sum of exponents of a packed code group — one "cycle" instead of
+    /// `group` accumulations (Fig. 5).
+    #[inline]
+    pub fn lookup(&self, codes: &[u8]) -> f32 {
+        self.table[self.pack(codes)]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lut_exp_matches_direct_exp() {
+        let q = Quantizer::new(2, -3.0);
+        let lut = LutExp::build(&q);
+        assert_eq!(lut.table.len(), 4);
+        for k in 0..4u8 {
+            let want = q.value(k).exp();
+            assert!((lut.get(k) - want).abs() < 1e-7);
+        }
+        assert!((lut.floor_value() - (-3.0f32).exp()).abs() < 1e-7);
+    }
+
+    #[test]
+    fn lut_sum_sizes() {
+        assert_eq!(LutSum::build(&Quantizer::new(2, -4.0)).table.len(), 256);
+        assert_eq!(LutSum::build(&Quantizer::new(3, -4.0)).table.len(), 64);
+        assert_eq!(LutSum::build(&Quantizer::new(4, -4.0)).table.len(), 256);
+    }
+
+    #[test]
+    fn lut_sum_equals_sum_of_lut_exp() {
+        // The Fig. 5 identity: LUT_sum[pack(c0..c3)] == Σ LUT_exp[ci].
+        for bits in [2u32, 3, 4] {
+            let q = Quantizer::new(bits, -5.5);
+            let le = LutExp::build(&q);
+            let ls = LutSum::build(&q);
+            let n = q.n_levels();
+            // exhaustive over all keys
+            for key in 0..ls.table.len() {
+                let mut want = 0.0f32;
+                for j in 0..ls.group {
+                    let digit = ((key >> (bits as usize * j)) & (n - 1)) as u8;
+                    want += le.get(digit);
+                }
+                assert!((ls.get(key) - want).abs() < 1e-6,
+                        "bits={bits} key={key}");
+            }
+        }
+    }
+
+    #[test]
+    fn pack_matches_paper_fig5_example() {
+        // Fig. 5: codes [0,3,0,3] at 2 bits -> key byte 0b11001100 = 204
+        // with low-code-first layout: 0 | 3<<2 | 0<<4 | 3<<6 = 12 + 192.
+        let q = Quantizer::new(2, -4.0);
+        let ls = LutSum::build(&q);
+        assert_eq!(ls.pack(&[0, 3, 0, 3]), 0b1100_1100);
+        let want = 2.0 * q.value(0).exp() + 2.0 * q.value(3).exp();
+        assert!((ls.lookup(&[0, 3, 0, 3]) - want).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,122 @@
+//! Monte-Carlo validation of the analytic clipping model — the
+//! "simulation" series of paper Fig. 3.
+//!
+//! Protocol: draw 1000 samples from N(0, sigma^2), subtract the sample
+//! maximum (the softmax pipeline's numeric-stability shift, §3 — without
+//! it the empirical optimum sits near −0.2 and nowhere near Table 1; see
+//! the soundness note in `mse.rs`), sweep the clip threshold C, measure
+//! the empirical post-exponent MSE of the clip+quantize pipeline, and
+//! report the empirically optimal C. The analytic solver and this
+//! simulation should agree (Fig. 3 shows them overlapping).
+
+use crate::util::rng::SplitMix64;
+
+/// Empirical post-exponent MSE of clipping at `c` and mid-rise M-bit
+/// quantization (the paper's Δ = −C/2^M convention, matching the model).
+pub fn empirical_mse(samples: &[f64], c: f64, bits: u32) -> f64 {
+    let delta = -c / (1u64 << bits) as f64;
+    let max_code = (1u64 << bits) as f64 - 1.0;
+    let mut acc = 0.0;
+    for &x in samples {
+        let xc = x.clamp(c, 0.0);
+        let k = ((xc - c) / delta).floor().min(max_code);
+        let q = c + (k + 0.5) * delta;
+        let d = q.exp() - x.exp();
+        acc += d * d;
+    }
+    acc / samples.len() as f64
+}
+
+/// Draw the paper's simulation sample set: N(0, sigma), max-subtracted.
+pub fn draw_samples(sigma: f64, n: usize, seed: u64) -> Vec<f64> {
+    let mut rng = SplitMix64::new(seed);
+    let mut xs: Vec<f64> = (0..n).map(|_| rng.normal() * sigma).collect();
+    let mx = xs.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+    for x in &mut xs {
+        *x -= mx;
+    }
+    xs
+}
+
+/// Size of each simulation draw — the paper's Fig. 3 caption uses 1000
+/// samples, and the max-subtraction shift depends on this count, so it is
+/// part of the protocol (see mse.rs).
+pub const DRAW_SIZE: usize = crate::exaq::mse::FIG3_N_SAMPLES;
+
+/// Empirically optimal clip for one sigma: `reps` independent draws of
+/// [`DRAW_SIZE`] samples (each max-subtracted separately), pooled
+/// empirical MSE, grid search over C.
+pub fn simulated_optimal_clip(sigma: f64, bits: u32, reps: usize,
+                              seed: u64) -> f64 {
+    let draws: Vec<Vec<f64>> = (0..reps)
+        .map(|r| draw_samples(sigma, DRAW_SIZE, seed + 1 + r as u64))
+        .collect();
+    let lo = -10.0 * sigma - 6.0;
+    let hi = -1e-3;
+    let n = 400;
+    let (mut best_c, mut best) = (hi, f64::INFINITY);
+    for i in 0..=n {
+        let c = lo + (hi - lo) * i as f64 / n as f64;
+        let v: f64 = draws.iter().map(|d| empirical_mse(d, c, bits)).sum();
+        if v < best {
+            best = v;
+            best_c = c;
+        }
+    }
+    best_c
+}
+
+/// The Fig. 3 simulation series over a sigma grid.
+pub fn simulation_series(sigma_lo: f64, sigma_hi: f64, n_points: usize,
+                         bits: u32, n_samples: usize,
+                         seed: u64) -> Vec<(f64, f64)> {
+    (0..n_points)
+        .map(|i| {
+            let s = sigma_lo
+                + (sigma_hi - sigma_lo) * i as f64 / (n_points - 1) as f64;
+            (s, simulated_optimal_clip(s, bits, n_samples, seed + 1000 * i as u64))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exaq::solver::optimal_clip;
+
+    #[test]
+    fn empirical_mse_zero_when_exactly_representable() {
+        // samples exactly on reconstruction points -> zero error
+        let c = -4.0;
+        let bits = 2;
+        let delta = -c / 4.0;
+        let samples: Vec<f64> = (0..4).map(|k| c + (k as f64 + 0.5) * delta)
+            .collect();
+        assert!(empirical_mse(&samples, c, bits) < 1e-30);
+    }
+
+    #[test]
+    fn simulation_agrees_with_analytic_solver() {
+        // Fig. 3's headline: analysis and simulation overlap. Use a large
+        // sample so the empirical optimum is stable.
+        for bits in [2u32, 3] {
+            for sigma in [1.0, 2.0, 3.0] {
+                let analytic = optimal_clip(sigma, bits);
+                let sim = simulated_optimal_clip(sigma, bits, 20, 99);
+                assert!(
+                    (analytic - sim).abs() < 0.7,
+                    "bits={bits} sigma={sigma}: {analytic:.3} vs {sim:.3}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn simulated_clip_monotonic_in_sigma() {
+        let series = simulation_series(0.5, 3.5, 7, 2, 10, 5);
+        for w in series.windows(2) {
+            assert!(w[1].1 < w[0].1 + 0.3,
+                    "roughly decreasing: {:?}", series);
+        }
+    }
+}

@@ -1,0 +1,34 @@
+//! The paper's method (EXAQ, §3–§4) implemented natively in Rust.
+//!
+//! * [`gauss`]  — Gauss–Legendre quadrature + Gaussian pdf substrate.
+//! * [`mse`]    — the analytic distortion model: `MSE(C) = MSE_clip +
+//!   MSE_quant` (paper Eq. 1–14, Fig. 2).
+//! * [`solver`] — numeric minimisation of `MSE(C)` -> optimal clip
+//!   `C*(sigma, M)` (Fig. 3).
+//! * [`fit`]    — linear approximation of `C*(sigma)` over the practical
+//!   sigma range (Table 1).
+//! * [`mc`]     — Monte-Carlo validation of the analytic model (the
+//!   "simulation" series of Fig. 3).
+//! * [`quant`]  — the runtime mid-tread quantizer (spec shared with
+//!   `python/compile/kernels/ref.py`).
+//! * [`lut`]    — LUT_exp / LUT_sum construction and key packing (Fig. 5).
+//! * [`softmax`]— Algorithm 1 (original) and Algorithm 2 (2-bit LUT)
+//!   softmax implementations — the Table 3 subjects and the L3 sampling
+//!   hot path.
+//! * [`clip`]   — calibration-statistics -> per-layer clip thresholds
+//!   (EXAQ via Table 1; NAIVE via min/max midpoint).
+
+pub mod clip;
+pub mod fit;
+pub mod gauss;
+pub mod lut;
+pub mod mc;
+pub mod mse;
+pub mod quant;
+pub mod softmax;
+pub mod solver;
+
+pub use clip::{clip_exaq, clip_naive, Table1};
+pub use lut::{LutExp, LutSum};
+pub use quant::Quantizer;
+pub use solver::optimal_clip;

@@ -1,0 +1,280 @@
+//! The analytic distortion model of EXAQ (paper §3.1, Eqs. 1–14, Fig. 2).
+//!
+//! Inputs to the softmax exponent are modelled as Gaussian after
+//! max-subtraction. Clipping at C < 0 and M-bit uniform quantization of
+//! [C, 0] produce two error terms:
+//!
+//!   MSE_quant(C) = Δ²/12 ∫_C^0 e^{2x} f(x) dx        (Eq. 11)
+//!   MSE_clip(C)  = ∫_{-∞}^C (e^C − e^x)² f(x) dx     (Eq. 2)
+//!   Δ = −C / 2^M                                      (paper's mid-rise)
+//!
+//! # Reproduction note (soundness)
+//!
+//! The paper states f = N(μ, σ) and the Fig. 3 caption says the
+//! validation simulation draws "1000 samples from a normal distribution
+//! with mean 0". Taken literally (μ = 0, no shift), minimising Eq. 12
+//! yields C*(σ=1, M=2) ≈ −1.46 — nowhere near Table 1's −3.51. The
+//! published coefficients are only recovered when the samples are
+//! max-subtracted first (as the softmax pipeline in §3 prescribes),
+//! which shifts the effective mean to −E[max of n]·σ ≈ −3.24σ for
+//! n = 1000. We therefore expose both variants:
+//!
+//! * [`MseModel::mean_zero`]  — the equations exactly as printed.
+//! * [`MseModel::max_shifted`] — the protocol that reproduces Fig. 3 /
+//!   Table 1 (mean = −E[max_n]·σ). This is the default used by the
+//!   solver, the Fig. 3 bench and the Table 1 fit.
+//!
+//! The mismatch of the literal reading is recorded in EXPERIMENTS.md.
+//!
+//! Integrals are evaluated with panel-subdivided Gauss–Legendre; the
+//! lower clip integral is truncated 12σ below the mean, where the
+//! Gaussian mass (< 1e-32) is negligible against the bounded integrand.
+
+use super::gauss::{normal_pdf, GaussLegendre};
+
+/// E[max of n iid standard normals], by numeric integration of
+/// x · n·φ(x)·Φ(x)^{n−1}. Used to derive the max-subtraction shift.
+pub fn expected_max_std_normal(n: usize) -> f64 {
+    assert!(n >= 1);
+    let gl = GaussLegendre::new(64);
+    // Φ via integral of φ from -12 (adequate for the range we integrate).
+    let phi_cdf = |x: f64| -> f64 {
+        0.5 * (1.0 + erf_approx(x / std::f64::consts::SQRT_2))
+    };
+    gl.integrate_panels(-8.0, 8.0, 32, |x| {
+        let cdf = phi_cdf(x);
+        x * n as f64 * normal_pdf(x, 1.0) * cdf.powi(n as i32 - 1)
+    })
+}
+
+/// Abramowitz–Stegun 7.1.26 rational approximation of erf (|err| < 1.5e-7,
+/// ample for the shift constant and pdf tails we need).
+pub fn erf_approx(x: f64) -> f64 {
+    const A: [f64; 5] = [
+        0.254_829_592,
+        -0.284_496_736,
+        1.421_413_741,
+        -1.453_152_027,
+        1.061_405_429,
+    ];
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.327_591_1 * x);
+    let poly = t * (A[0] + t * (A[1] + t * (A[2] + t * (A[3] + t * A[4]))));
+    sign * (1.0 - poly * (-x * x).exp())
+}
+
+/// Distortion model for a given sigma and bit-width.
+pub struct MseModel {
+    pub sigma: f64,
+    pub bits: u32,
+    /// Mean of the Gaussian input model (0 for the literal paper model;
+    /// −E[max_n]·σ for the max-subtracted protocol).
+    pub mu: f64,
+    gl: GaussLegendre,
+}
+
+/// Sample count of the paper's Fig. 3 simulation (caption: 1000 samples).
+pub const FIG3_N_SAMPLES: usize = 1000;
+
+impl MseModel {
+    /// Paper Eqs. 1–14 with f = N(mu, sigma).
+    pub fn with_mean(sigma: f64, bits: u32, mu: f64) -> Self {
+        assert!(sigma > 0.0, "sigma must be positive");
+        assert!((1..=8).contains(&bits));
+        Self { sigma, bits, mu, gl: GaussLegendre::new(48) }
+    }
+
+    /// The equations exactly as printed (μ = 0).
+    pub fn mean_zero(sigma: f64, bits: u32) -> Self {
+        Self::with_mean(sigma, bits, 0.0)
+    }
+
+    /// The max-subtracted protocol that reproduces Fig. 3 / Table 1:
+    /// μ = −E[max of FIG3_N_SAMPLES]·σ ≈ −3.24σ.
+    pub fn max_shifted(sigma: f64, bits: u32) -> Self {
+        let shift = expected_max_std_normal(FIG3_N_SAMPLES);
+        Self::with_mean(sigma, bits, -shift * sigma)
+    }
+
+    /// Quantization step for clip threshold C (paper: Δ = −C / 2^M).
+    pub fn step(&self, c: f64) -> f64 {
+        -c / (1u32 << self.bits) as f64
+    }
+
+    fn pdf(&self, x: f64) -> f64 {
+        normal_pdf(x - self.mu, self.sigma)
+    }
+
+    /// Eq. 11: rounding error inside the kept range [C, 0].
+    pub fn mse_quant(&self, c: f64) -> f64 {
+        assert!(c < 0.0);
+        let d = self.step(c);
+        let integral = self.gl.integrate_panels(c, 0.0, 6, |x| {
+            (2.0 * x).exp() * self.pdf(x)
+        });
+        d * d / 12.0 * integral
+    }
+
+    /// Eq. 2: saturation error below the clip threshold.
+    pub fn mse_clip(&self, c: f64) -> f64 {
+        assert!(c < 0.0);
+        let lo = (self.mu - 12.0 * self.sigma).min(c);
+        if lo >= c {
+            return 0.0;
+        }
+        let ec = c.exp();
+        self.gl.integrate_panels(lo, c, 8, |x| {
+            let d = ec - x.exp();
+            d * d * self.pdf(x)
+        })
+    }
+
+    /// Eq. 12: total distortion at clip threshold C.
+    pub fn mse(&self, c: f64) -> f64 {
+        self.mse_quant(c) + self.mse_clip(c)
+    }
+
+    /// The (C, MSE_quant, MSE_clip, MSE_total) curve used by Fig. 2.
+    pub fn curve(&self, c_lo: f64, c_hi: f64, n: usize) -> Vec<MsePoint> {
+        assert!(c_lo < c_hi && c_hi < 0.0);
+        (0..n)
+            .map(|i| {
+                let c = c_lo + (c_hi - c_lo) * i as f64 / (n - 1) as f64;
+                let q = self.mse_quant(c);
+                let cl = self.mse_clip(c);
+                MsePoint { c, quant: q, clip: cl, total: q + cl }
+            })
+            .collect()
+    }
+}
+
+/// One sample of the Fig. 2 distortion curve.
+#[derive(Clone, Copy, Debug)]
+pub struct MsePoint {
+    pub c: f64,
+    pub quant: f64,
+    pub clip: f64,
+    pub total: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn expected_max_reference_values() {
+        // Known values: E[max of 1] = 0; E[max of 2] = 1/sqrt(pi);
+        // E[max of 1000] ≈ 3.2414.
+        assert!(expected_max_std_normal(1).abs() < 1e-6);
+        let m2 = expected_max_std_normal(2);
+        assert!((m2 - 1.0 / std::f64::consts::PI.sqrt()).abs() < 1e-5,
+                "{m2}");
+        let m1000 = expected_max_std_normal(1000);
+        assert!((m1000 - 3.2414).abs() < 0.01, "{m1000}");
+    }
+
+    #[test]
+    fn erf_reference_values() {
+        assert!(erf_approx(0.0).abs() < 1e-7);
+        assert!((erf_approx(1.0) - 0.842_700_79).abs() < 2e-7);
+        assert!((erf_approx(-2.0) + 0.995_322_27).abs() < 2e-7);
+        assert!((erf_approx(5.0) - 1.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn quant_error_grows_with_coarser_clip() {
+        // A more negative C widens Δ, so the rounding term must grow.
+        let m = MseModel::max_shifted(1.0, 2);
+        assert!(m.mse_quant(-8.0) > m.mse_quant(-2.0));
+    }
+
+    #[test]
+    fn clip_error_shrinks_with_more_negative_clip() {
+        let m = MseModel::max_shifted(1.0, 2);
+        assert!(m.mse_clip(-2.0) > m.mse_clip(-4.0));
+        assert!(m.mse_clip(-4.0) > m.mse_clip(-8.0));
+        // far below the distribution the clip error vanishes
+        assert!(m.mse_clip(-16.0) < 1e-12);
+    }
+
+    #[test]
+    fn more_bits_reduce_quant_error_fourfold() {
+        // Δ halves per extra bit -> Δ²/12 term drops 4x at equal C.
+        let c = -4.0;
+        let m2 = MseModel::max_shifted(1.5, 2).mse_quant(c);
+        let m3 = MseModel::max_shifted(1.5, 3).mse_quant(c);
+        let ratio = m2 / m3;
+        assert!((ratio - 4.0).abs() < 1e-9, "ratio {ratio}");
+    }
+
+    #[test]
+    fn total_curve_has_interior_minimum() {
+        let m = MseModel::max_shifted(2.0, 2);
+        let pts = m.curve(-20.0, -0.5, 80);
+        let (mut best_i, mut best) = (0usize, f64::INFINITY);
+        for (i, p) in pts.iter().enumerate() {
+            if p.total < best {
+                best = p.total;
+                best_i = i;
+            }
+        }
+        assert!(best_i > 0 && best_i < pts.len() - 1,
+                "minimum should be interior, got index {best_i}");
+    }
+
+    #[test]
+    fn literal_mean_zero_model_disagrees_with_table1() {
+        // The documented soundness finding: the equations as printed
+        // (μ = 0) place the optimum far above Table 1's magnitude.
+        let m = MseModel::mean_zero(1.0, 2);
+        let shifted = MseModel::max_shifted(1.0, 2);
+        // compare total at the paper's C* = -3.51 vs a mild clip:
+        assert!(m.mse(-1.46) < m.mse(-3.51),
+                "mean-zero model should prefer a mild clip");
+        assert!(shifted.mse(-3.51) < shifted.mse(-1.46),
+                "max-shifted model should prefer the paper's clip");
+    }
+
+    #[test]
+    fn mse_matches_monte_carlo() {
+        // Validate the analytic model against a direct simulation of the
+        // max-subtracted quantize+clip pipeline with the paper's mid-rise
+        // quantizer.
+        use crate::util::rng::SplitMix64;
+        let sigma = 1.5;
+        let bits = 2u32;
+        let c = -6.0_f64;
+        let model = MseModel::max_shifted(sigma, bits);
+        let analytic = model.mse(c);
+
+        let mut rng = SplitMix64::new(123);
+        let reps = 600;
+        let n = FIG3_N_SAMPLES;
+        let delta = -c / (1u32 << bits) as f64;
+        let mut acc = 0.0;
+        let mut count = 0usize;
+        for _ in 0..reps {
+            let xs: Vec<f64> =
+                (0..n).map(|_| rng.normal() * sigma).collect();
+            let mx = xs.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+            for &x0 in &xs {
+                let x = x0 - mx;
+                let xc = x.clamp(c, 0.0);
+                let k = ((xc - c) / delta)
+                    .floor()
+                    .min((1 << bits) as f64 - 1.0);
+                let q = c + (k + 0.5) * delta; // mid-rise reconstruction
+                let d = q.exp() - x.exp();
+                acc += d * d;
+                count += 1;
+            }
+        }
+        let mc = acc / count as f64;
+        let rel = (analytic - mc).abs() / mc;
+        // The analytic model linearises e^{x+ε} (Eq. 7) and idealises the
+        // max-shift as a fixed mean move, so the tolerance is generous
+        // but still meaningfully binding (order-of-magnitude + shape).
+        assert!(rel < 0.5, "analytic {analytic} vs mc {mc} (rel {rel})");
+    }
+}

@@ -1,0 +1,143 @@
+//! Runtime mid-tread quantizer — the Rust mirror of the kernel spec in
+//! `python/compile/kernels/ref.py` (keep the two in sync).
+//!
+//! Levels are uniform on [C, 0] *inclusive*: step = −C/(2^M − 1),
+//! v_k = C + k·step. The row maximum (x = 0 after shift) is exactly
+//! representable, which matters at M = 2. Codes are produced by
+//! round-to-nearest with clamping; inputs below C saturate to code 0
+//! (value exactly C).
+
+/// Clamp bound shared with the Python side (ref.CLIP_EPS).
+pub const CLIP_EPS: f32 = 1e-3;
+
+/// An M-bit mid-tread quantizer over [C, 0].
+#[derive(Clone, Copy, Debug)]
+pub struct Quantizer {
+    pub bits: u32,
+    /// Clip threshold (negative, magnitude >= CLIP_EPS).
+    pub c: f32,
+    step: f32,
+    inv_step: f32,
+    max_code: u8,
+}
+
+impl Quantizer {
+    pub fn new(bits: u32, c: f32) -> Self {
+        assert!((1..=8).contains(&bits), "bits out of range");
+        let c = c.min(-CLIP_EPS);
+        let nlev = ((1u32 << bits) - 1) as f32;
+        let step = -c / nlev;
+        Self {
+            bits,
+            c,
+            step,
+            inv_step: 1.0 / step,
+            max_code: ((1u32 << bits) - 1) as u8,
+        }
+    }
+
+    #[inline]
+    pub fn step(&self) -> f32 {
+        self.step
+    }
+
+    #[inline]
+    pub fn n_levels(&self) -> usize {
+        1usize << self.bits
+    }
+
+    /// Quantize a (max-shifted, <= 0) value to its code.
+    /// Branchless round-to-nearest: add 0.5 and truncate (argument is
+    /// clamped non-negative first), which the hot loops rely on — `round`
+    /// is an order of magnitude slower than a float->int cast on x86.
+    #[inline]
+    pub fn code(&self, xs: f32) -> u8 {
+        let k = (xs - self.c) * self.inv_step + 0.5;
+        (k.max(0.0) as u32).min(self.max_code as u32) as u8
+    }
+
+    /// Reconstruction value of a code.
+    #[inline]
+    pub fn value(&self, code: u8) -> f32 {
+        self.c + code as f32 * self.step
+    }
+
+    /// Quantize a whole row in place into a code buffer.
+    pub fn encode_row(&self, xs: &[f32], out: &mut Vec<u8>) {
+        out.clear();
+        out.extend(xs.iter().map(|&x| self.code(x)));
+    }
+
+    /// Round-trip a value through quantization.
+    #[inline]
+    pub fn dequant(&self, xs: f32) -> f32 {
+        self.value(self.code(xs))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn endpoints_are_exact() {
+        for bits in [2u32, 3, 4] {
+            let q = Quantizer::new(bits, -6.0);
+            assert_eq!(q.code(0.0), ((1u32 << bits) - 1) as u8);
+            assert_eq!(q.value(q.code(0.0)), 0.0);
+            assert_eq!(q.code(-6.0), 0);
+            assert_eq!(q.value(0), -6.0);
+        }
+    }
+
+    #[test]
+    fn saturates_below_clip() {
+        let q = Quantizer::new(2, -4.0);
+        assert_eq!(q.code(-100.0), 0);
+        assert_eq!(q.dequant(-100.0), -4.0);
+    }
+
+    #[test]
+    fn max_error_half_step_inside_range() {
+        let q = Quantizer::new(3, -5.0);
+        let half = q.step() / 2.0 + 1e-6;
+        let mut x = -5.0f32;
+        while x <= 0.0 {
+            let err = (q.dequant(x) - x).abs();
+            assert!(err <= half, "x={x} err={err} > {half}");
+            x += 0.01;
+        }
+    }
+
+    #[test]
+    fn codes_are_monotonic() {
+        let q = Quantizer::new(2, -8.0);
+        let mut prev = 0u8;
+        let mut x = -9.0f32;
+        while x <= 0.0 {
+            let c = q.code(x);
+            assert!(c >= prev, "non-monotonic at {x}");
+            prev = c;
+            x += 0.05;
+        }
+    }
+
+    #[test]
+    fn degenerate_clip_is_clamped() {
+        let q = Quantizer::new(2, 0.5); // nonsense input
+        assert!(q.c <= -CLIP_EPS);
+        assert!(q.step() > 0.0);
+    }
+
+    #[test]
+    fn matches_python_spec_examples() {
+        // Golden values mirrored from ref.quant_codes semantics:
+        // bits=2, C=-3 -> levels {-3, -2, -1, 0}
+        let q = Quantizer::new(2, -3.0);
+        assert_eq!(q.code(-3.0), 0);
+        assert_eq!(q.code(-2.4), 1);
+        assert_eq!(q.code(-1.1), 2);
+        assert_eq!(q.code(-0.4), 3);
+        assert_eq!(q.value(1), -2.0);
+    }
+}

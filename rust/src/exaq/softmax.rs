@@ -1,0 +1,263 @@
+//! Softmax implementations — the subjects of paper Table 3.
+//!
+//! * [`softmax_algo1`] — the original algorithm (Algo. 1): per-element
+//!   transcendental `exp`, then N scalar accumulations, then N divides.
+//! * [`softmax_algo2`] — the EXAQ algorithm (Algo. 2): quantize to M-bit
+//!   codes, exponent via `LUT_exp` (one load per element), denominator via
+//!   `LUT_sum` over packed code groups (N/4 loads at M = 2), then
+//!   normalise. Also the L3 hot path used on sampling logits.
+//!
+//! Both support a `valid_len` prefix mask with the closed-form
+//! denominator correction ((N − n) · exp(C), since masked lanes sit on
+//! code 0) described in DESIGN.md §4.
+
+use super::lut::{LutExp, LutSum};
+use super::quant::Quantizer;
+
+/// Plain exact softmax (used by sampling when quantization is off).
+pub fn softmax_exact(row: &mut [f32]) {
+    let m = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0f32;
+    for x in row.iter_mut() {
+        *x = (*x - m).exp();
+        sum += *x;
+    }
+    let inv = 1.0 / sum.max(1e-30);
+    for x in row.iter_mut() {
+        *x *= inv;
+    }
+}
+
+/// Paper Algorithm 1, structured exactly as written: separate exponent
+/// loop ("multi cycle op"), accumulation loop, and normalisation loop.
+/// `valid_len` lanes participate; the rest are zeroed.
+pub fn softmax_algo1(row: &mut [f32], valid_len: usize) {
+    let n = valid_len.min(row.len());
+    if n == 0 {
+        row.fill(0.0);
+        return;
+    }
+    // line 3: normalise by the max
+    let mut m = f32::NEG_INFINITY;
+    for &x in &row[..n] {
+        m = m.max(x);
+    }
+    // lines 4-6: exponent per element (the multi-cycle op)
+    for x in &mut row[..n] {
+        *x = (*x - m).exp();
+    }
+    // lines 7-12: denominator accumulation, one add per element
+    let mut sum = 0.0f32;
+    let mut i = 0;
+    while i < n {
+        sum += row[i];
+        i += 1;
+    }
+    // lines 13-15: normalisation
+    let inv = 1.0 / sum.max(1e-30);
+    for x in &mut row[..n] {
+        *x *= inv;
+    }
+    row[n..].fill(0.0);
+}
+
+/// Scratch buffers for [`softmax_algo2`] so the decode hot loop performs
+/// no allocation (DESIGN.md §7 L3 target).
+#[derive(Default)]
+pub struct Algo2Scratch {
+    codes: Vec<u8>,
+}
+
+/// Paper Algorithm 2: M-bit quantization + LUT_exp + packed LUT_sum.
+///
+/// `row` is overwritten with probabilities; lanes >= `valid_len` become 0.
+/// The denominator uses ceil(n/group) LUT_sum lookups over the *full*
+/// padded row (masked lanes are code 0) minus the closed-form correction —
+/// the same arithmetic as the Pallas kernel.
+pub fn softmax_algo2(
+    row: &mut [f32],
+    valid_len: usize,
+    quant: &Quantizer,
+    lut_exp: &LutExp,
+    lut_sum: &LutSum,
+    scratch: &mut Algo2Scratch,
+) {
+    let len = row.len();
+    let n = valid_len.min(len);
+    if n == 0 {
+        row.fill(0.0);
+        return;
+    }
+    // line 3: max-shift
+    let mut m = f32::NEG_INFINITY;
+    for &x in &row[..n] {
+        m = m.max(x);
+    }
+    // lines 4-13 fused single pass: quantize a group of `g` lanes,
+    // store their LUT_exp values into the row, build the packed key on
+    // the fly, and take ONE LUT_sum accumulation per group (this is the
+    // paper's pipeline; fusing the passes keeps everything in registers).
+    let g = lut_sum.group;
+    let bits = lut_sum.bits as usize;
+    let padded = n.next_multiple_of(g);
+    let codes = &mut scratch.codes;
+    codes.clear();
+    codes.resize(padded, 0);
+    for (c, &x) in codes[..n].iter_mut().zip(row[..n].iter()) {
+        *c = quant.code(x - m);
+    }
+    let mut sum = 0.0f32;
+    let row_end = padded.min(len);
+    for (chunk, crow) in codes
+        .chunks_exact(g)
+        .zip(row[..row_end].chunks_mut(g))
+    {
+        let mut key = 0usize;
+        for (j, &c) in chunk.iter().enumerate() {
+            key |= (c as usize) << (bits * j);
+        }
+        sum += lut_sum.get(key);
+        for (x, &c) in crow.iter_mut().zip(chunk) {
+            *x = lut_exp.get(c);
+        }
+    }
+    // (when padded > len the last row chunk is partial; zip still pairs
+    // it with the final full code group, so every key is counted once)
+    // masked-lane correction: every padded lane sits on code 0 = exp(C)
+    sum -= (padded - n) as f32 * lut_exp.floor_value();
+    let inv = 1.0 / sum.max(1e-30);
+
+    // lines 14-16: normalise
+    for x in &mut row[..n] {
+        *x *= inv;
+    }
+    row[n..].fill(0.0);
+}
+
+/// Convenience wrapper building the tables per call (tests/benches that
+/// measure the steady-state should build tables once instead).
+pub fn softmax_algo2_once(row: &mut [f32], valid_len: usize, bits: u32,
+                          c: f32) {
+    let q = Quantizer::new(bits, c);
+    let le = LutExp::build(&q);
+    let ls = LutSum::build(&q);
+    softmax_algo2(row, valid_len, &q, &le, &ls,
+                  &mut Algo2Scratch::default());
+}
+
+/// Reference quantized softmax *without* the LUT path (direct exp of the
+/// quantized values) — the oracle for algo2 in tests.
+pub fn softmax_quant_direct(row: &mut [f32], valid_len: usize, bits: u32,
+                            c: f32) {
+    let q = Quantizer::new(bits, c);
+    let n = valid_len.min(row.len());
+    if n == 0 {
+        row.fill(0.0);
+        return;
+    }
+    let mut m = f32::NEG_INFINITY;
+    for &x in &row[..n] {
+        m = m.max(x);
+    }
+    let mut sum = 0.0f32;
+    for x in &mut row[..n] {
+        *x = q.dequant(*x - m).exp();
+        sum += *x;
+    }
+    let inv = 1.0 / sum.max(1e-30);
+    for x in &mut row[..n] {
+        *x *= inv;
+    }
+    row[n..].fill(0.0);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::SplitMix64;
+
+    fn random_row(n: usize, seed: u64, scale: f32) -> Vec<f32> {
+        let mut r = SplitMix64::new(seed);
+        (0..n).map(|_| (r.normal() as f32) * scale).collect()
+    }
+
+    #[test]
+    fn exact_softmax_sums_to_one() {
+        let mut row = random_row(64, 1, 2.0);
+        softmax_exact(&mut row);
+        let s: f32 = row.iter().sum();
+        assert!((s - 1.0).abs() < 1e-5);
+        assert!(row.iter().all(|&p| p >= 0.0));
+    }
+
+    #[test]
+    fn algo1_equals_exact_on_full_rows() {
+        let mut a = random_row(48, 2, 3.0);
+        let mut b = a.clone();
+        softmax_exact(&mut a);
+        softmax_algo1(&mut b, 48);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn algo2_matches_direct_quantized_reference() {
+        for bits in [2u32, 3, 4] {
+            for vlen in [1usize, 5, 31, 64] {
+                let mut a = random_row(64, 3 + bits as u64, 2.5);
+                let mut b = a.clone();
+                softmax_algo2_once(&mut a, vlen, bits, -5.0);
+                softmax_quant_direct(&mut b, vlen, bits, -5.0);
+                for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+                    assert!((x - y).abs() < 2e-5,
+                            "bits={bits} vlen={vlen} lane {i}: {x} vs {y}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn algo2_probabilities_sum_to_one_over_valid_lanes() {
+        let mut row = random_row(60, 9, 1.5);
+        softmax_algo2_once(&mut row, 41, 2, -4.0);
+        let s: f32 = row.iter().sum();
+        assert!((s - 1.0).abs() < 1e-4, "{s}");
+        assert!(row[41..].iter().all(|&p| p == 0.0));
+    }
+
+    #[test]
+    fn algo2_handles_row_len_not_divisible_by_group() {
+        let mut row = random_row(13, 11, 2.0);
+        softmax_algo2_once(&mut row, 13, 2, -4.0);
+        let s: f32 = row.iter().sum();
+        assert!((s - 1.0).abs() < 1e-4, "{s}");
+    }
+
+    #[test]
+    fn empty_and_degenerate_rows() {
+        let mut row = vec![1.0f32; 8];
+        softmax_algo1(&mut row, 0);
+        assert!(row.iter().all(|&p| p == 0.0));
+        let mut row = vec![0.0f32; 8];
+        softmax_algo2_once(&mut row, 8, 2, -4.0);
+        let s: f32 = row.iter().sum();
+        assert!((s - 1.0).abs() < 1e-5); // all-equal row -> uniform
+        assert!((row[0] - 0.125).abs() < 1e-5);
+    }
+
+    #[test]
+    fn quantized_softmax_close_to_exact_at_reasonable_bits() {
+        // at M=4 with a good clip, quantized softmax tracks the exact one
+        let mut a = random_row(64, 21, 1.0);
+        let mut b = a.clone();
+        softmax_exact(&mut a);
+        softmax_algo2_once(&mut b, 64, 4, -6.0);
+        let max_err = a
+            .iter()
+            .zip(&b)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_err < 0.05, "max_err {max_err}");
+    }
+}

@@ -1,0 +1,163 @@
+//! Numeric minimisation of the distortion model: the optimal clipping
+//! threshold C*(sigma, M) of paper Fig. 3.
+//!
+//! Strategy: coarse grid scan over a wide bracket (robust to any local
+//! wiggles of the model) followed by golden-section refinement around the
+//! best cell. The paper solves Eq. 12 "numerically" the same way.
+//!
+//! The default model is the max-subtracted protocol
+//! ([`MseModel::max_shifted`]) — the only reading that reproduces the
+//! paper's Fig. 3 / Table 1 scale; see the soundness note in `mse.rs`.
+
+use super::mse::MseModel;
+
+const GOLDEN: f64 = 0.618_033_988_749_894_8;
+
+/// Minimise `f` over [a, b] by golden-section search.
+pub fn golden_section(
+    mut a: f64,
+    mut b: f64,
+    tol: f64,
+    f: impl Fn(f64) -> f64,
+) -> f64 {
+    let mut c = b - GOLDEN * (b - a);
+    let mut d = a + GOLDEN * (b - a);
+    let (mut fc, mut fd) = (f(c), f(d));
+    while (b - a).abs() > tol {
+        if fc < fd {
+            b = d;
+            d = c;
+            fd = fc;
+            c = b - GOLDEN * (b - a);
+            fc = f(c);
+        } else {
+            a = c;
+            c = d;
+            fc = fd;
+            d = a + GOLDEN * (b - a);
+            fd = f(d);
+        }
+    }
+    0.5 * (a + b)
+}
+
+/// Minimise a model's MSE over C by scan + golden-section refinement.
+pub fn minimise_clip(model: &MseModel) -> f64 {
+    let lo = model.mu - 8.0 * model.sigma - 2.0;
+    let hi = -1e-3;
+    let n = 200usize;
+    let (mut best_i, mut best) = (0usize, f64::INFINITY);
+    for i in 0..=n {
+        let c = lo + (hi - lo) * i as f64 / n as f64;
+        let v = model.mse(c);
+        if v < best {
+            best = v;
+            best_i = i;
+        }
+    }
+    let cell = (hi - lo) / n as f64;
+    let a = lo + cell * best_i.saturating_sub(1) as f64;
+    let b = (lo + cell * (best_i + 1) as f64).min(hi);
+    golden_section(a, b, 1e-6, |c| model.mse(c))
+}
+
+/// Optimal clip threshold under the max-subtracted protocol (the Fig. 3 /
+/// Table 1 quantity). Returns C* < 0.
+pub fn optimal_clip(sigma: f64, bits: u32) -> f64 {
+    minimise_clip(&MseModel::max_shifted(sigma, bits))
+}
+
+/// Optimal clip under the equations exactly as printed (μ = 0); kept for
+/// the soundness analysis in EXPERIMENTS.md.
+pub fn optimal_clip_mean_zero(sigma: f64, bits: u32) -> f64 {
+    minimise_clip(&MseModel::mean_zero(sigma, bits))
+}
+
+/// The (sigma, C*) series of Fig. 3 over a sigma grid.
+pub fn clip_series(
+    sigma_lo: f64,
+    sigma_hi: f64,
+    n: usize,
+    bits: u32,
+) -> Vec<(f64, f64)> {
+    (0..n)
+        .map(|i| {
+            let s = sigma_lo + (sigma_hi - sigma_lo) * i as f64
+                / (n - 1) as f64;
+            (s, optimal_clip(s, bits))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn golden_section_finds_parabola_min() {
+        let x = golden_section(-10.0, 10.0, 1e-9, |x| (x - 3.0).powi(2));
+        assert!((x - 3.0).abs() < 1e-6, "{x}");
+    }
+
+    #[test]
+    fn optimal_clip_is_negative_and_monotonic_in_sigma() {
+        // Wider input distributions need a more negative clip.
+        let mut prev = 0.0;
+        for sigma in [0.5, 1.0, 2.0, 3.0, 4.0] {
+            let c = optimal_clip(sigma, 2);
+            assert!(c < 0.0);
+            assert!(c < prev, "C*({sigma})={c} should be < {prev}");
+            prev = c;
+        }
+    }
+
+    #[test]
+    fn more_bits_clip_more_negative() {
+        // With more levels the rounding penalty of a wide range shrinks,
+        // so the optimal clip keeps more of the tail (Fig. 3 ordering).
+        for sigma in [1.0, 2.0, 3.0] {
+            let c2 = optimal_clip(sigma, 2);
+            let c3 = optimal_clip(sigma, 3);
+            assert!(c3 < c2, "sigma={sigma}: C3*={c3} !< C2*={c2}");
+        }
+    }
+
+    #[test]
+    fn clip_is_global_minimum_on_grid() {
+        let sigma = 1.7;
+        let model = MseModel::max_shifted(sigma, 2);
+        let cstar = minimise_clip(&model);
+        let fstar = model.mse(cstar);
+        for i in 1..200 {
+            let c = -20.0 * i as f64 / 200.0;
+            assert!(model.mse(c) >= fstar - 1e-12,
+                    "mse({c}) < mse(C*={cstar})");
+        }
+    }
+
+    #[test]
+    fn matches_paper_table1_at_moderate_sigma() {
+        // Around sigma ∈ [1, 2] our solver lands on the paper's Table 1
+        // line; at larger sigma the published line is steeper than any
+        // reading of the model we could reconstruct (documented in
+        // EXPERIMENTS.md — the soundness band for this paper is 0/5).
+        for (bits, slope, icpt) in [(2u32, -1.66, -1.85), (3, -1.75, -2.06)] {
+            for sigma in [1.0, 1.5, 2.0] {
+                let c = optimal_clip(sigma, bits);
+                let lin = slope * sigma + icpt;
+                assert!(
+                    (c - lin).abs() < 0.6,
+                    "bits={bits} sigma={sigma}: C*={c:.3} vs table1 {lin:.3}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn mean_zero_reading_is_far_from_table1() {
+        // The documented discrepancy: the literal μ=0 equations give a
+        // much milder clip than Table 1.
+        let c = optimal_clip_mean_zero(1.0, 2);
+        assert!(c > -2.0, "got {c}, expected ≈ -1.46");
+    }
+}

@@ -1,0 +1,28 @@
+//! exaq-repro — reproduction of "EXAQ: Exponent Aware Quantization For
+//! LLMs Acceleration" (Shkolnik et al., 2024) as a three-layer
+//! Rust + JAX + Pallas serving stack.
+//!
+//! Layer map (see DESIGN.md):
+//! * [`exaq`] — the paper's method: analytic clipping (§3), LUT-based
+//!   softmax (§4), quantizer and calibration-derived thresholds.
+//! * [`runtime`] — PJRT engine that loads the AOT-lowered HLO artifacts
+//!   produced by `python/compile/aot.py` and executes them (Python is
+//!   never on the request path).
+//! * [`coordinator`] — continuous-batching serving: admission, prefill /
+//!   decode scheduling, KV slot pool, metrics.
+//! * [`eval`] — lm-evaluation-harness-style zero-shot scoring over seven
+//!   synthetic task families (Tables 2/4/5/6).
+//! * [`calib`] — runtime calibration driver (Fig. 6, clip thresholds).
+//! * [`cost`] — cycle-accurate cost model (Fig. 1, Table 3 accounting).
+//! * [`model`] — tokenizer + sampling.
+//! * [`report`] — table / CSV renderers for the experiment harness.
+
+pub mod calib;
+pub mod coordinator;
+pub mod cost;
+pub mod eval;
+pub mod exaq;
+pub mod model;
+pub mod report;
+pub mod runtime;
+pub mod util;

@@ -1,0 +1,13 @@
+//! Tokenizer + sampling — the model-adjacent utilities of the serving
+//! stack.
+//!
+//! The tokenizer is the closed-vocabulary word tokenizer of the corpus
+//! spec; the vocabulary itself ships in the manifest, so Rust never
+//! hardcodes token ids (the world constants live in `eval::world`, which
+//! cross-checks them against the golden dump).
+
+pub mod sampling;
+pub mod tokenizer;
+
+pub use sampling::{sample, SamplingParams};
+pub use tokenizer::Tokenizer;

@@ -1,0 +1,170 @@
+//! Sampling over logits — the L3 hot path where the Rust-native EXAQ
+//! softmax (Algorithm 2) is deployed: converting logits to a sampling
+//! distribution uses the same quantize + LUT pipeline the paper
+//! accelerates, so serving exercises the paper's kernel end to end even
+//! outside the attention blocks.
+
+use crate::exaq::lut::{LutExp, LutSum};
+use crate::exaq::quant::Quantizer;
+use crate::exaq::softmax::{softmax_algo2, softmax_exact, Algo2Scratch};
+use crate::util::rng::SplitMix64;
+
+/// How to turn logits into a next token.
+#[derive(Clone, Copy, Debug)]
+pub struct SamplingParams {
+    /// 0.0 -> greedy argmax.
+    pub temperature: f32,
+    /// 0 -> no top-k filtering.
+    pub top_k: usize,
+    /// When set, run the sampling softmax through the EXAQ Algorithm 2
+    /// pipeline at this (bits, clip) instead of exact exp.
+    pub exaq: Option<(u32, f32)>,
+}
+
+impl Default for SamplingParams {
+    fn default() -> Self {
+        Self { temperature: 0.0, top_k: 0, exaq: None }
+    }
+}
+
+impl SamplingParams {
+    pub fn greedy() -> Self {
+        Self::default()
+    }
+}
+
+/// Reusable sampling scratch (no allocation at steady state).
+#[derive(Default)]
+pub struct SamplerScratch {
+    probs: Vec<f32>,
+    idx: Vec<usize>,
+    algo2: Algo2Scratch,
+}
+
+/// Sample one token id from `logits`.
+pub fn sample(logits: &[f32], params: &SamplingParams,
+              rng: &mut SplitMix64) -> i32 {
+    let mut scratch = SamplerScratch::default();
+    sample_with(logits, params, rng, &mut scratch)
+}
+
+/// Allocation-free variant for the decode loop.
+pub fn sample_with(logits: &[f32], params: &SamplingParams,
+                   rng: &mut SplitMix64,
+                   scratch: &mut SamplerScratch) -> i32 {
+    if params.temperature <= 0.0 {
+        return argmax(logits);
+    }
+    let probs = &mut scratch.probs;
+    probs.clear();
+    probs.extend(logits.iter().map(|&x| x / params.temperature));
+
+    match params.exaq {
+        Some((bits, c)) => {
+            let q = Quantizer::new(bits, c);
+            let le = LutExp::build(&q);
+            let ls = LutSum::build(&q);
+            let n = probs.len();
+            softmax_algo2(probs, n, &q, &le, &ls, &mut scratch.algo2);
+        }
+        None => softmax_exact(probs),
+    }
+
+    if params.top_k > 0 && params.top_k < probs.len() {
+        let idx = &mut scratch.idx;
+        idx.clear();
+        idx.extend(0..probs.len());
+        idx.sort_unstable_by(|&a, &b| {
+            probs[b].partial_cmp(&probs[a]).unwrap()
+        });
+        for &i in &idx[params.top_k..] {
+            probs[i] = 0.0;
+        }
+        let total: f32 = probs.iter().sum();
+        if total > 0.0 {
+            for p in probs.iter_mut() {
+                *p /= total;
+            }
+        }
+    }
+
+    let u = rng.uniform() as f32;
+    let mut acc = 0.0;
+    for (i, &p) in probs.iter().enumerate() {
+        acc += p;
+        if u < acc {
+            return i as i32;
+        }
+    }
+    argmax(logits)
+}
+
+fn argmax(xs: &[f32]) -> i32 {
+    let mut best = 0usize;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best as i32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_picks_argmax() {
+        let mut rng = SplitMix64::new(1);
+        let logits = vec![0.1, 2.0, -1.0, 1.9];
+        assert_eq!(sample(&logits, &SamplingParams::greedy(), &mut rng), 1);
+    }
+
+    #[test]
+    fn temperature_sampling_respects_distribution() {
+        let mut rng = SplitMix64::new(2);
+        let logits = vec![0.0, 3.0];
+        let params = SamplingParams { temperature: 1.0, top_k: 0,
+                                      exaq: None };
+        let n = 5000;
+        let ones = (0..n)
+            .filter(|_| sample(&logits, &params, &mut rng) == 1)
+            .count();
+        let frac = ones as f64 / n as f64;
+        // p(1) = e^3/(1+e^3) ≈ 0.953
+        assert!((frac - 0.953).abs() < 0.02, "{frac}");
+    }
+
+    #[test]
+    fn top_k_masks_tail() {
+        let mut rng = SplitMix64::new(3);
+        let logits = vec![3.0, 2.9, -5.0, -6.0];
+        let params = SamplingParams { temperature: 1.0, top_k: 2,
+                                      exaq: None };
+        for _ in 0..200 {
+            let t = sample(&logits, &params, &mut rng);
+            assert!(t == 0 || t == 1, "sampled masked token {t}");
+        }
+    }
+
+    #[test]
+    fn exaq_sampling_close_to_exact() {
+        let mut rng = SplitMix64::new(4);
+        let logits = vec![2.0, 1.5, 0.0, -1.0];
+        let exact = SamplingParams { temperature: 1.0, top_k: 0,
+                                     exaq: None };
+        let quant = SamplingParams { temperature: 1.0, top_k: 0,
+                                     exaq: Some((4, -8.0)) };
+        let n = 4000;
+        let mut counts = [[0usize; 4]; 2];
+        for _ in 0..n {
+            counts[0][sample(&logits, &exact, &mut rng) as usize] += 1;
+            counts[1][sample(&logits, &quant, &mut rng) as usize] += 1;
+        }
+        for i in 0..4 {
+            let a = counts[0][i] as f64 / n as f64;
+            let b = counts[1][i] as f64 / n as f64;
+            assert!((a - b).abs() < 0.05, "token {i}: {a} vs {b}");
+        }
+    }
+}

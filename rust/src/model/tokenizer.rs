@@ -1,0 +1,114 @@
+//! Closed-vocabulary word tokenizer (manifest-driven).
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Result};
+
+/// Word-level tokenizer over the bundle vocabulary.
+#[derive(Clone, Debug)]
+pub struct Tokenizer {
+    vocab: Vec<String>,
+    index: HashMap<String, i32>,
+    pub pad: i32,
+    pub bos: i32,
+    pub eos: i32,
+    pub sep: i32,
+}
+
+impl Tokenizer {
+    pub fn new(vocab: Vec<String>, pad: usize, bos: usize, eos: usize,
+               sep: usize) -> Self {
+        let index = vocab
+            .iter()
+            .enumerate()
+            .map(|(i, w)| (w.clone(), i as i32))
+            .collect();
+        Self {
+            vocab,
+            index,
+            pad: pad as i32,
+            bos: bos as i32,
+            eos: eos as i32,
+            sep: sep as i32,
+        }
+    }
+
+    pub fn from_manifest(m: &crate::runtime::Manifest) -> Self {
+        Self::new(m.vocab.clone(), m.pad, m.bos, m.eos, m.sep)
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        self.vocab.len()
+    }
+
+    pub fn id(&self, word: &str) -> Result<i32> {
+        self.index
+            .get(word)
+            .copied()
+            .ok_or_else(|| anyhow!("word '{word}' not in vocabulary"))
+    }
+
+    pub fn word(&self, id: i32) -> &str {
+        self.vocab
+            .get(id as usize)
+            .map(String::as_str)
+            .unwrap_or("<unk>")
+    }
+
+    /// Encode a whitespace-separated sentence.
+    pub fn encode(&self, text: &str) -> Result<Vec<i32>> {
+        text.split_whitespace().map(|w| self.id(w)).collect()
+    }
+
+    pub fn decode(&self, ids: &[i32]) -> String {
+        ids.iter()
+            .map(|&i| self.word(i))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+
+    /// `<bos>` + tokens, padded with `<pad>` to `len`. Errors if too long.
+    pub fn pad_to(&self, tokens: &[i32], len: usize) -> Result<Vec<i32>> {
+        if tokens.len() + 1 > len {
+            return Err(anyhow!("sequence of {} tokens exceeds {len}",
+                               tokens.len()));
+        }
+        let mut out = Vec::with_capacity(len);
+        out.push(self.bos);
+        out.extend_from_slice(tokens);
+        out.resize(len, self.pad);
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tok() -> Tokenizer {
+        Tokenizer::new(
+            vec!["<pad>".into(), "<bos>".into(), "<eos>".into(),
+                 "<sep>".into(), "the".into(), "ball".into(), "is".into(),
+                 "red".into()],
+            0, 1, 2, 3,
+        )
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let t = tok();
+        let ids = t.encode("the ball is red").unwrap();
+        assert_eq!(ids, vec![4, 5, 6, 7]);
+        assert_eq!(t.decode(&ids), "the ball is red");
+        assert!(t.encode("the zebra").is_err());
+    }
+
+    #[test]
+    fn pad_to_shapes() {
+        let t = tok();
+        let ids = t.encode("the ball").unwrap();
+        let p = t.pad_to(&ids, 6).unwrap();
+        assert_eq!(p, vec![1, 4, 5, 0, 0, 0]);
+        assert!(t.pad_to(&ids, 2).is_err());
+    }
+}

@@ -1,0 +1,322 @@
+//! The PJRT execution engine.
+//!
+//! Owns the CPU PJRT client, lazily compiles HLO-text artifacts (cached
+//! per key), keeps each model's weights resident as device buffers, and
+//! exposes typed `prefill` / `decode` / `prefill_stats` calls.
+//!
+//! Outputs cross back to the host as a decomposed tuple literal (the xla
+//! crate cannot split a tuple buffer on-device, see DESIGN.md §Perf);
+//! weights never re-cross after load thanks to `execute_b`.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::manifest::{ArtifactSpec, Manifest, ModelEntry};
+use super::tensor::{HostTensor, TensorData};
+use super::weights::load_weights;
+
+/// Which softmax variant an inference call should run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum QuantMode {
+    /// Exact softmax (Table 2 "NONE").
+    None,
+    /// Calibrated clip thresholds, `bits`-bit LUT softmax. The clip
+    /// vector decides EXAQ vs NAIVE (computed by `exaq::clip`).
+    Static { bits: u32 },
+    /// Per-row dynamic statistics (ablation artifacts).
+    DynamicExaq { bits: u32 },
+    /// Per-row NAIVE min/2 (ablation artifacts).
+    DynamicNaive { bits: u32 },
+}
+
+impl QuantMode {
+    /// The artifact-key fragment this mode selects (matches aot.py tags).
+    pub fn tag(&self) -> String {
+        match self {
+            QuantMode::None => "none".into(),
+            QuantMode::Static { bits } => format!("q{bits}"),
+            QuantMode::DynamicExaq { bits } => format!("dynexaq{bits}"),
+            QuantMode::DynamicNaive { bits } => format!("dynnaive{bits}"),
+        }
+    }
+
+    /// Does this mode take a `c_vec` runtime input?
+    pub fn needs_cvec(&self) -> bool {
+        matches!(self, QuantMode::Static { .. })
+    }
+}
+
+/// Host-resident decode state (KV caches round-trip per step).
+#[derive(Clone, Debug)]
+pub struct DecodeState {
+    pub kc: HostTensor,
+    pub vc: HostTensor,
+}
+
+/// Aggregate execution metrics (inspected by the coordinator / benches).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EngineStats {
+    pub compiles: u64,
+    pub executions: u64,
+    pub exec_micros: u64,
+    pub upload_bytes: u64,
+    pub download_bytes: u64,
+}
+
+struct LoadedModel {
+    entry: ModelEntry,
+    weight_bufs: Vec<xla::PjRtBuffer>,
+}
+
+/// The engine. Single-owner (the worker thread); not Sync by design.
+pub struct Engine {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    models: HashMap<String, LoadedModel>,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    pub stats: EngineStats,
+}
+
+impl Engine {
+    /// Open an artifact bundle directory.
+    pub fn load(dir: &Path) -> Result<Engine> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
+        Ok(Engine {
+            client,
+            dir: dir.to_path_buf(),
+            manifest,
+            models: HashMap::new(),
+            executables: HashMap::new(),
+            stats: EngineStats::default(),
+        })
+    }
+
+    /// Ensure a model's weights are resident; idempotent.
+    pub fn load_model(&mut self, name: &str) -> Result<()> {
+        if self.models.contains_key(name) {
+            return Ok(());
+        }
+        let entry = self.manifest.model(name)?.clone();
+        let tensors = load_weights(&self.dir.join(&entry.weights_file))?;
+        if tensors.len() != entry.param_names.len() {
+            bail!("weight count {} != manifest {}", tensors.len(),
+                  entry.param_names.len());
+        }
+        let mut weight_bufs = Vec::with_capacity(tensors.len());
+        for (t, want) in tensors.iter().zip(&entry.param_names) {
+            if &t.name != want {
+                bail!("weight order mismatch: file has {}, manifest {}",
+                      t.name, want);
+            }
+            self.stats.upload_bytes += (t.data.len() * 4) as u64;
+            let buf = self
+                .client
+                .buffer_from_host_buffer::<f32>(&t.data, &t.dims, None)
+                .map_err(|e| anyhow!("uploading {}: {e}", t.name))?;
+            weight_bufs.push(buf);
+        }
+        self.models.insert(name.to_string(),
+                           LoadedModel { entry, weight_bufs });
+        Ok(())
+    }
+
+    pub fn model_entry(&self, name: &str) -> Result<&ModelEntry> {
+        self.manifest.model(name)
+    }
+
+    /// Find the artifact for (model, entry, quant, batch).
+    pub fn select_artifact(&self, model: &str, entry: &str,
+                           quant: QuantMode, batch: usize)
+                           -> Result<&ArtifactSpec> {
+        let m = self.manifest.model(model)?;
+        let tag = quant.tag();
+        let key = format!("{entry}_{model}_{tag}_b{batch}");
+        m.artifacts
+            .iter()
+            .find(|a| a.key == key)
+            .ok_or_else(|| anyhow!("no artifact '{key}' for model {model}"))
+    }
+
+    fn executable(&mut self, file: &str, key: &str)
+                  -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.executables.contains_key(key) {
+            let t0 = Instant::now();
+            let path = self.dir.join(file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().unwrap())
+                .map_err(|e| anyhow!("parsing HLO {path:?}: {e}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {key}: {e}"))?;
+            self.stats.compiles += 1;
+            eprintln!("[engine] compiled {key} in {:.2}s",
+                      t0.elapsed().as_secs_f64());
+            self.executables.insert(key.to_string(), exe);
+        }
+        Ok(&self.executables[key])
+    }
+
+    /// Run one artifact: weights (resident) ++ `extra` (uploaded) -> host
+    /// tensors of the output tuple.
+    pub fn run(&mut self, model: &str, artifact_key: &str,
+               extra: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        self.load_model(model)?;
+        let (file, n_inputs) = {
+            let m = self.manifest.model(model)?;
+            let a = m
+                .artifacts
+                .iter()
+                .find(|a| a.key == artifact_key)
+                .ok_or_else(|| anyhow!("unknown artifact {artifact_key}"))?;
+            (a.file.clone(), a.inputs.len())
+        };
+        let n_weights = self.models[model].weight_bufs.len();
+        if n_weights + extra.len() != n_inputs {
+            bail!("{artifact_key}: {} weights + {} extras != {} inputs",
+                  n_weights, extra.len(), n_inputs);
+        }
+
+        // upload the per-call inputs
+        let mut uploaded = Vec::with_capacity(extra.len());
+        for t in extra {
+            self.stats.upload_bytes += (t.len() * 4) as u64;
+            let buf = match &t.data {
+                TensorData::F32(v) => self
+                    .client
+                    .buffer_from_host_buffer::<f32>(v, &t.shape, None),
+                TensorData::I32(v) => self
+                    .client
+                    .buffer_from_host_buffer::<i32>(v, &t.shape, None),
+            }
+            .map_err(|e| anyhow!("uploading arg: {e}"))?;
+            uploaded.push(buf);
+        }
+
+        self.executable(&file, artifact_key)?;
+        let model_bufs = &self.models[model].weight_bufs;
+        let exe = &self.executables[artifact_key];
+        let mut args: Vec<&xla::PjRtBuffer> =
+            Vec::with_capacity(n_inputs);
+        args.extend(model_bufs.iter());
+        args.extend(uploaded.iter());
+
+        let t0 = Instant::now();
+        let outs = exe
+            .execute_b(&args)
+            .map_err(|e| anyhow!("executing {artifact_key}: {e}"))?;
+        self.stats.executions += 1;
+        self.stats.exec_micros += t0.elapsed().as_micros() as u64;
+
+        let lit = outs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching output: {e}"))?;
+        let parts = lit
+            .to_tuple()
+            .map_err(|e| anyhow!("decomposing output tuple: {e}"))?;
+        let mut tensors = Vec::with_capacity(parts.len());
+        for p in &parts {
+            let t = HostTensor::from_literal(p)?;
+            self.stats.download_bytes += (t.len() * 4) as u64;
+            tensors.push(t);
+        }
+        Ok(tensors)
+    }
+
+    // ---- typed entry points ---------------------------------------------
+
+    /// Prefill: tokens [B,S] (+ c_vec for quantized modes) ->
+    /// (logits [B,S,V], DecodeState).
+    pub fn prefill(&mut self, model: &str, quant: QuantMode,
+                   tokens: &HostTensor, c_vec: Option<&[f32]>)
+                   -> Result<(HostTensor, DecodeState)> {
+        let batch = tokens.shape[0];
+        let key = self
+            .select_artifact(model, "prefill", quant, batch)?
+            .key
+            .clone();
+        let mut extra = vec![tokens.clone()];
+        if quant.needs_cvec() {
+            let c = c_vec.ok_or_else(|| anyhow!("quant mode needs c_vec"))?;
+            extra.push(HostTensor::f32(c.to_vec(), &[c.len()]));
+        }
+        let mut outs = self.run(model, &key, &extra)?;
+        if outs.len() != 3 {
+            bail!("prefill returned {} outputs, expected 3", outs.len());
+        }
+        let vc = outs.pop().unwrap();
+        let kc = outs.pop().unwrap();
+        let logits = outs.pop().unwrap();
+        Ok((logits, DecodeState { kc, vc }))
+    }
+
+    /// One decode step: token [B], pos [B] -> logits [B,V]; state updated.
+    pub fn decode(&mut self, model: &str, quant: QuantMode,
+                  token: &[i32], pos: &[i32], state: &mut DecodeState,
+                  c_vec: Option<&[f32]>) -> Result<HostTensor> {
+        let batch = token.len();
+        let key = self
+            .select_artifact(model, "decode", quant, batch)?
+            .key
+            .clone();
+        let mut extra = vec![
+            HostTensor::i32(token.to_vec(), &[batch]),
+            HostTensor::i32(pos.to_vec(), &[batch]),
+            state.kc.clone(),
+            state.vc.clone(),
+        ];
+        if quant.needs_cvec() {
+            let c = c_vec.ok_or_else(|| anyhow!("quant mode needs c_vec"))?;
+            extra.push(HostTensor::f32(c.to_vec(), &[c.len()]));
+        }
+        let mut outs = self.run(model, &key, &extra)?;
+        if outs.len() != 3 {
+            bail!("decode returned {} outputs, expected 3", outs.len());
+        }
+        state.vc = outs.pop().unwrap();
+        state.kc = outs.pop().unwrap();
+        Ok(outs.pop().unwrap())
+    }
+
+    /// Calibration prefill: tokens [B,S], lengths [B] ->
+    /// (logits, stats [L,4] = (count, mean, M2, min) per layer).
+    pub fn prefill_stats(&mut self, model: &str, tokens: &HostTensor,
+                         lengths: &[i32])
+                         -> Result<(HostTensor, HostTensor)> {
+        let batch = tokens.shape[0];
+        let key = self
+            .select_artifact(model, "prefill_stats", QuantMode::None,
+                             batch)?
+            .key
+            .clone();
+        let extra = vec![
+            tokens.clone(),
+            HostTensor::i32(lengths.to_vec(), &[lengths.len()]),
+        ];
+        let mut outs = self.run(model, &key, &extra)?;
+        if outs.len() != 2 {
+            bail!("prefill_stats returned {} outputs", outs.len());
+        }
+        let stats = outs.pop().unwrap();
+        let logits = outs.pop().unwrap();
+        Ok((logits, stats))
+    }
+
+    /// Fresh all-zero decode state sized for `model` at `batch`.
+    pub fn empty_state(&self, model: &str, batch: usize)
+                       -> Result<DecodeState> {
+        let c = &self.manifest.model(model)?.config;
+        let shape = [c.n_layers, batch, c.n_heads, c.max_seq, c.head_dim];
+        Ok(DecodeState {
+            kc: HostTensor::zeros_f32(&shape),
+            vc: HostTensor::zeros_f32(&shape),
+        })
+    }
+}

@@ -1,0 +1,258 @@
+//! `artifacts/manifest.json` parser — the contract between the AOT
+//! pipeline (`python/compile/aot.py`) and the Rust runtime.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Model architecture parameters (mirrors python ModelConfig).
+#[derive(Clone, Debug)]
+pub struct ModelConfig {
+    pub name: String,
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub vocab_size: usize,
+    pub max_seq: usize,
+    pub head_dim: usize,
+    pub n_params: usize,
+}
+
+/// One tensor of an executable signature.
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+/// One lowered executable.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub key: String,
+    pub file: String,
+    /// prefill | decode | prefill_stats
+    pub entry: String,
+    /// none | static | dynamic_exaq | dynamic_naive
+    pub quant: String,
+    pub bits: u32,
+    pub batch: usize,
+    pub seq: usize,
+    pub inputs: Vec<TensorSpec>,
+}
+
+/// One model of the bundle.
+#[derive(Clone, Debug)]
+pub struct ModelEntry {
+    pub family: u32,
+    pub config: ModelConfig,
+    pub weights_file: String,
+    pub param_names: Vec<String>,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+/// The whole bundle.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub seq: usize,
+    pub vocab: Vec<String>,
+    pub pad: usize,
+    pub bos: usize,
+    pub eos: usize,
+    pub sep: usize,
+    /// bits -> (slope, intercept) of Table 1.
+    pub table1: BTreeMap<u32, (f64, f64)>,
+    pub models: BTreeMap<String, ModelEntry>,
+}
+
+fn req<'a>(j: &'a Json, key: &str) -> Result<&'a Json> {
+    j.get(key).ok_or_else(|| anyhow!("manifest: missing key '{key}'"))
+}
+
+fn req_usize(j: &Json, key: &str) -> Result<usize> {
+    req(j, key)?.as_usize()
+        .ok_or_else(|| anyhow!("manifest: '{key}' not a number"))
+}
+
+fn req_str(j: &Json, key: &str) -> Result<String> {
+    Ok(req(j, key)?
+        .as_str()
+        .ok_or_else(|| anyhow!("manifest: '{key}' not a string"))?
+        .to_string())
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?}"))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).context("parsing manifest.json")?;
+        let specials = req(&j, "specials")?;
+        let mut table1 = BTreeMap::new();
+        if let Some(t) = j.get("table1").and_then(Json::as_obj) {
+            for (k, v) in t {
+                let bits: u32 = k.parse().context("table1 bits key")?;
+                let arr = v.as_f64_vec()
+                    .ok_or_else(|| anyhow!("table1 row not numeric"))?;
+                if arr.len() != 2 {
+                    bail!("table1 row wrong arity");
+                }
+                table1.insert(bits, (arr[0], arr[1]));
+            }
+        }
+        let mut models = BTreeMap::new();
+        for (name, m) in req(&j, "models")?
+            .as_obj()
+            .ok_or_else(|| anyhow!("models not an object"))?
+        {
+            models.insert(name.clone(), parse_model(m)
+                .with_context(|| format!("model {name}"))?);
+        }
+        Ok(Manifest {
+            seq: req_usize(&j, "seq")?,
+            vocab: req(&j, "vocab")?
+                .as_str_vec()
+                .ok_or_else(|| anyhow!("vocab not a string array"))?,
+            pad: req_usize(specials, "pad")?,
+            bos: req_usize(specials, "bos")?,
+            eos: req_usize(specials, "eos")?,
+            sep: req_usize(specials, "sep")?,
+            table1,
+            models,
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelEntry> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow!(
+                "model '{name}' not in bundle (have: {:?})",
+                self.models.keys().collect::<Vec<_>>()))
+    }
+}
+
+fn parse_model(m: &Json) -> Result<ModelEntry> {
+    let c = req(m, "config")?;
+    let config = ModelConfig {
+        name: req_str(c, "name")?,
+        n_layers: req_usize(c, "n_layers")?,
+        d_model: req_usize(c, "d_model")?,
+        n_heads: req_usize(c, "n_heads")?,
+        d_ff: req_usize(c, "d_ff")?,
+        vocab_size: req_usize(c, "vocab_size")?,
+        max_seq: req_usize(c, "max_seq")?,
+        head_dim: req_usize(c, "head_dim")?,
+        n_params: req_usize(c, "n_params")?,
+    };
+    let mut artifacts = Vec::new();
+    for a in req(m, "artifacts")?
+        .as_arr()
+        .ok_or_else(|| anyhow!("artifacts not an array"))?
+    {
+        let mut inputs = Vec::new();
+        for t in req(a, "inputs")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("inputs not an array"))?
+        {
+            inputs.push(TensorSpec {
+                name: req_str(t, "name")?,
+                shape: req(t, "shape")?
+                    .as_f64_vec()
+                    .ok_or_else(|| anyhow!("shape not numeric"))?
+                    .into_iter()
+                    .map(|d| d as usize)
+                    .collect(),
+                dtype: req_str(t, "dtype")?,
+            });
+        }
+        artifacts.push(ArtifactSpec {
+            key: req_str(a, "key")?,
+            file: req_str(a, "file")?,
+            entry: req_str(a, "entry")?,
+            quant: req_str(a, "quant")?,
+            bits: req_usize(a, "bits")? as u32,
+            batch: req_usize(a, "batch")?,
+            seq: req_usize(a, "seq")?,
+            inputs,
+        });
+    }
+    Ok(ModelEntry {
+        family: req_usize(m, "family")? as u32,
+        config,
+        weights_file: req_str(m, "weights")?,
+        param_names: req(m, "param_names")?
+            .as_str_vec()
+            .ok_or_else(|| anyhow!("param_names not strings"))?,
+        artifacts,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format": 1, "seq": 64,
+      "vocab": ["<pad>", "<bos>", "<eos>", "<sep>", "the"],
+      "specials": {"pad": 0, "bos": 1, "eos": 2, "sep": 3},
+      "table1": {"2": [-1.66, -1.85], "3": [-1.75, -2.06]},
+      "models": {
+        "s": {
+          "family": 1,
+          "config": {"name": "s", "n_layers": 2, "d_model": 96,
+                     "n_heads": 4, "d_ff": 256, "vocab_size": 104,
+                     "max_seq": 64, "head_dim": 24, "n_params": 231648},
+          "weights": "weights_s.bin",
+          "param_names": ["tok_emb", "norm_f"],
+          "artifacts": [
+            {"key": "prefill_s_none_b1", "file": "prefill_s_none_b1.hlo.txt",
+             "entry": "prefill", "quant": "none", "bits": 0,
+             "batch": 1, "seq": 64,
+             "inputs": [{"name": "tok_emb", "shape": [104, 96],
+                         "dtype": "float32"}]}
+          ]
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.seq, 64);
+        assert_eq!(m.vocab.len(), 5);
+        assert_eq!(m.table1[&2], (-1.66, -1.85));
+        let s = m.model("s").unwrap();
+        assert_eq!(s.config.n_layers, 2);
+        assert_eq!(s.artifacts[0].inputs[0].shape, vec![104, 96]);
+        assert!(m.model("zz").is_err());
+    }
+
+    #[test]
+    fn parses_real_manifest_if_present() {
+        let p = std::path::Path::new(
+            concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"));
+        if !p.join("manifest.json").exists() {
+            return;
+        }
+        let m = Manifest::load(p).unwrap();
+        assert!(m.models.len() >= 4, "expected full family bundle");
+        for (name, entry) in &m.models {
+            assert!(!entry.artifacts.is_empty(), "{name} has no artifacts");
+            // every artifact's weight inputs match param_names order
+            for a in &entry.artifacts {
+                for (i, pn) in entry.param_names.iter().enumerate() {
+                    assert_eq!(&a.inputs[i].name, pn,
+                               "{}: weight order mismatch", a.key);
+                }
+            }
+        }
+    }
+}

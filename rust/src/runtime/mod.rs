@@ -1,0 +1,20 @@
+//! PJRT runtime: loads the AOT bundle (`artifacts/`) and executes the
+//! lowered HLO entry points. Python is never on this path — the bundle is
+//! self-contained (HLO text + weights + manifest + calibration).
+//!
+//! * [`manifest`] — parses `manifest.json` (models, configs, artifact
+//!   signatures).
+//! * [`weights`]  — the TLW1 flat weight format (mirror of
+//!   `python/compile/weights_io.py`).
+//! * [`tensor`]   — host-side tensors crossing the PJRT boundary.
+//! * [`engine`]   — PJRT client wrapper: compile cache, resident weight
+//!   buffers, typed prefill/decode/stats calls.
+
+pub mod engine;
+pub mod manifest;
+pub mod tensor;
+pub mod weights;
+
+pub use engine::{DecodeState, Engine, QuantMode};
+pub use manifest::{ArtifactSpec, Manifest, ModelConfig, ModelEntry};
+pub use tensor::HostTensor;

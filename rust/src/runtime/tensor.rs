@@ -1,0 +1,91 @@
+//! Host-side tensors crossing the PJRT boundary.
+
+use anyhow::{bail, Result};
+
+/// A dense host tensor (f32 or i32), row-major.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub data: TensorData,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl HostTensor {
+    pub fn f32(data: Vec<f32>, shape: &[usize]) -> Self {
+        assert_eq!(data.len(), shape.iter().product::<usize>());
+        Self { shape: shape.to_vec(), data: TensorData::F32(data) }
+    }
+
+    pub fn i32(data: Vec<i32>, shape: &[usize]) -> Self {
+        assert_eq!(data.len(), shape.iter().product::<usize>());
+        Self { shape: shape.to_vec(), data: TensorData::I32(data) }
+    }
+
+    pub fn zeros_f32(shape: &[usize]) -> Self {
+        Self::f32(vec![0.0; shape.iter().product()], shape)
+    }
+
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            TensorData::F32(v) => Ok(v),
+            TensorData::I32(_) => bail!("tensor is i32, expected f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match &self.data {
+            TensorData::I32(v) => Ok(v),
+            TensorData::F32(_) => bail!("tensor is f32, expected i32"),
+        }
+    }
+
+    /// Convert a PJRT literal (array, f32/s32) into a host tensor.
+    pub fn from_literal(lit: &xla::Literal) -> Result<Self> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize)
+            .collect();
+        match shape.ty() {
+            xla::ElementType::F32 => {
+                Ok(Self::f32(lit.to_vec::<f32>()?, &dims))
+            }
+            xla::ElementType::S32 => {
+                Ok(Self::i32(lit.to_vec::<i32>()?, &dims))
+            }
+            other => bail!("unsupported literal element type {other:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_accessors() {
+        let t = HostTensor::f32(vec![1.0, 2.0, 3.0, 4.0], &[2, 2]);
+        assert_eq!(t.len(), 4);
+        assert_eq!(t.as_f32().unwrap()[3], 4.0);
+        assert!(t.as_i32().is_err());
+        let t = HostTensor::i32(vec![7], &[1]);
+        assert_eq!(t.as_i32().unwrap(), &[7]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        HostTensor::f32(vec![1.0], &[2, 2]);
+    }
+}

@@ -1,0 +1,130 @@
+//! TLW1 flat weight format loader — byte-level mirror of
+//! `python/compile/weights_io.py` (little-endian, f32 tensors).
+
+use std::io::Read;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+const MAGIC: &[u8; 4] = b"TLW1";
+
+/// One named tensor from a weight file.
+#[derive(Clone, Debug)]
+pub struct WeightTensor {
+    pub name: String,
+    pub dims: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+/// Load every tensor from a TLW1 file, preserving file order (which is
+/// the executable input order per the manifest).
+pub fn load_weights(path: &Path) -> Result<Vec<WeightTensor>> {
+    let bytes = std::fs::read(path)
+        .with_context(|| format!("reading weights {path:?}"))?;
+    parse_weights(&bytes)
+}
+
+pub fn parse_weights(bytes: &[u8]) -> Result<Vec<WeightTensor>> {
+    let mut cur = std::io::Cursor::new(bytes);
+    let mut magic = [0u8; 4];
+    cur.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("bad weight file magic {magic:?}");
+    }
+    let n = read_u32(&mut cur)? as usize;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let name_len = read_u32(&mut cur)? as usize;
+        let mut name = vec![0u8; name_len];
+        cur.read_exact(&mut name)?;
+        let name = String::from_utf8(name).context("weight name utf8")?;
+        let ndim = read_u32(&mut cur)? as usize;
+        if ndim > 8 {
+            bail!("implausible ndim {ndim} for tensor {name}");
+        }
+        let mut dims = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            dims.push(read_u32(&mut cur)? as usize);
+        }
+        let count: usize = dims.iter().product();
+        let mut raw = vec![0u8; count * 4];
+        cur.read_exact(&mut raw)
+            .with_context(|| format!("data of tensor {name}"))?;
+        let data = raw
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect();
+        out.push(WeightTensor { name, dims, data });
+    }
+    Ok(out)
+}
+
+fn read_u32(cur: &mut std::io::Cursor<&[u8]>) -> Result<u32> {
+    let mut b = [0u8; 4];
+    cur.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn encode(tensors: &[(&str, &[usize], &[f32])]) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&(tensors.len() as u32).to_le_bytes());
+        for (name, dims, data) in tensors {
+            out.extend_from_slice(&(name.len() as u32).to_le_bytes());
+            out.extend_from_slice(name.as_bytes());
+            out.extend_from_slice(&(dims.len() as u32).to_le_bytes());
+            for d in *dims {
+                out.extend_from_slice(&(*d as u32).to_le_bytes());
+            }
+            for v in *data {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn roundtrip() {
+        let bytes = encode(&[
+            ("tok_emb", &[2, 3], &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]),
+            ("norm_f", &[3], &[1.0, 1.0, 1.0]),
+        ]);
+        let ws = parse_weights(&bytes).unwrap();
+        assert_eq!(ws.len(), 2);
+        assert_eq!(ws[0].name, "tok_emb");
+        assert_eq!(ws[0].dims, vec![2, 3]);
+        assert_eq!(ws[0].data[4], 5.0);
+        assert_eq!(ws[1].dims, vec![3]);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        assert!(parse_weights(b"XXXX\x00\x00\x00\x00").is_err());
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let mut bytes = encode(&[("w", &[4], &[1.0, 2.0, 3.0, 4.0])]);
+        bytes.truncate(bytes.len() - 3);
+        assert!(parse_weights(&bytes).is_err());
+    }
+
+    #[test]
+    fn loads_real_artifact_if_present() {
+        // Cross-language check against the Python writer.
+        let p = std::path::Path::new(
+            concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/weights_s.bin"));
+        if !p.exists() {
+            return; // artifacts not built in this checkout
+        }
+        let ws = load_weights(p).unwrap();
+        assert_eq!(ws[0].name, "tok_emb");
+        assert!(ws.len() > 10);
+        assert!(ws.iter().all(|w| !w.data.is_empty()));
+        assert!(ws.iter().all(|w| w.data.iter().all(|v| v.is_finite())));
+    }
+}

@@ -1,0 +1,6 @@
+//! Small shared substrates: deterministic RNG and a dependency-free JSON
+//! parser/writer (the image has no serde; artifacts/manifest.json and
+//! calibration.json are parsed with [`json`]).
+
+pub mod json;
+pub mod rng;
