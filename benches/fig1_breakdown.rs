@@ -13,8 +13,9 @@ use std::time::Instant;
 use exaq_repro::cost::{GemmPrecision, MachineModel, TransformerShape};
 use exaq_repro::report::{f as fnum, pct, Table};
 use exaq_repro::runtime::{Engine, HostTensor, QuantMode};
+use exaq_repro::util::error::Result;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let m = MachineModel::default();
     let llama7b = TransformerShape {
         layers: 32, d_model: 4096, n_heads: 32, d_ff: 11008, seq: 2048,
@@ -45,7 +46,7 @@ fn main() -> anyhow::Result<()> {
         let seq = engine.manifest.seq;
         let n_layers = engine.manifest.model(model)?.config.n_layers;
         let tokens = HostTensor::i32(vec![1; 8 * seq], &[8, seq]);
-        let mut time_of = |quant, c: Option<&[f32]>| -> anyhow::Result<f64> {
+        let mut time_of = |quant, c: Option<&[f32]>| -> Result<f64> {
             engine.prefill(model, quant, &tokens, c)?; // warm/compile
             let t0 = Instant::now();
             let reps = 5;

@@ -14,8 +14,9 @@ use exaq_repro::eval::{eval_task, family_world_seed, mean_std, World,
 use exaq_repro::exaq::{clip_exaq, clip_naive};
 use exaq_repro::report::{f as fnum, Table};
 use exaq_repro::runtime::{Engine, QuantMode};
+use exaq_repro::util::error::Result;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let models = args.first().map(String::as_str).unwrap_or("s,m");
     let n: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(30);

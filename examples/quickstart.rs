@@ -6,14 +6,17 @@
 //! (run `make artifacts` first.)
 
 use std::path::Path;
+use std::rc::Rc;
 
 use exaq_repro::calib;
 use exaq_repro::coordinator::{serve_until_drained, Request, ServeConfig};
 use exaq_repro::exaq::clip_exaq;
 use exaq_repro::model::{SamplingParams, Tokenizer};
 use exaq_repro::runtime::{Engine, QuantMode};
+use exaq_repro::util::clock::WallClock;
+use exaq_repro::util::error::Result;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let dir = Path::new("artifacts");
     let mut engine = Engine::load(dir)?;
     let tok = Tokenizer::from_manifest(&engine.manifest);
@@ -45,7 +48,8 @@ fn main() -> anyhow::Result<()> {
         .collect();
 
     let (mut resps, wall, _) =
-        serve_until_drained(&mut engine, &cfg, reqs)?;
+        serve_until_drained(&mut engine, &cfg, reqs,
+                            Rc::new(WallClock::new()))?;
     resps.sort_by_key(|r| r.id);
     let total: usize = resps.iter().map(|r| r.tokens.len()).sum();
     for r in &resps {

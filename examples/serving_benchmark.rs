@@ -6,6 +6,7 @@
 //!     cargo run --release --example serving_benchmark [model] [n_req]
 
 use std::path::Path;
+use std::rc::Rc;
 
 use exaq_repro::calib;
 use exaq_repro::coordinator::{serve_until_drained, Request, ServeConfig};
@@ -14,9 +15,11 @@ use exaq_repro::exaq::clip_exaq;
 use exaq_repro::model::{SamplingParams, Tokenizer};
 use exaq_repro::report::{f as fnum, Table};
 use exaq_repro::runtime::{Engine, QuantMode};
+use exaq_repro::util::clock::WallClock;
+use exaq_repro::util::error::Result;
 use exaq_repro::util::rng::SplitMix64;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let model = args.first().map(String::as_str).unwrap_or("s");
     let n_req: usize =
@@ -67,7 +70,8 @@ fn main() -> anyhow::Result<()> {
             decode_batch: 8,
         };
         let (resps, wall, sched) =
-            serve_until_drained(&mut engine, &cfg, make_trace(11))?;
+            serve_until_drained(&mut engine, &cfg, make_trace(11),
+                                Rc::new(WallClock::new()))?;
         let toks: usize = resps.iter().map(|r| r.tokens.len()).sum();
         t.row(&[name.into(), fnum(toks as f64 / wall, 1),
                 fnum(sched.metrics.ttft.quantile(0.5), 3),

@@ -9,7 +9,7 @@
 
 use std::path::Path;
 
-use anyhow::{anyhow, Result};
+use crate::util::error::{anyhow, Result};
 
 use crate::eval::corpus::generate_tokens;
 use crate::eval::{family_world_seed, World};

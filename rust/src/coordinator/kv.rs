@@ -1,9 +1,8 @@
 //! KV-cache slot pool: fixed-capacity slot allocator plus the host-side
 //! batched cache tensor that decode rows live in.
 
-use anyhow::{bail, Result};
-
 use crate::runtime::HostTensor;
+use crate::util::error::{bail, Result};
 
 /// Allocator over decode-batch rows.
 #[derive(Debug)]
@@ -132,6 +131,50 @@ mod tests {
         assert!(p.release(99).is_err());
     }
 
+    #[test]
+    fn alloc_until_exhausted_then_none() {
+        let mut p = KvPool::new(4);
+        let mut got = Vec::new();
+        while let Some(s) = p.alloc() {
+            got.push(s);
+        }
+        assert_eq!(got.len(), 4);
+        got.sort_unstable();
+        assert_eq!(got, vec![0, 1, 2, 3]);
+        assert_eq!(p.available(), 0);
+        assert_eq!(p.in_use(), 4);
+        assert!(p.alloc().is_none());
+        assert!(p.alloc().is_none(), "None must be sticky, not panic");
+    }
+
+    #[test]
+    fn failed_release_leaves_accounting_intact() {
+        let mut p = KvPool::new(3);
+        let a = p.alloc().unwrap();
+        let _b = p.alloc().unwrap();
+        // out-of-range release: rejected before any state mutation
+        assert!(p.release(3).is_err());
+        assert!(p.release(usize::MAX).is_err());
+        assert_eq!(p.in_use(), 2);
+        assert_eq!(p.available(), 1);
+        // double free after a valid release: also state-preserving
+        p.release(a).unwrap();
+        assert!(p.release(a).is_err());
+        assert_eq!(p.in_use(), 1);
+        assert_eq!(p.available(), 2);
+        assert_eq!(p.in_use() + p.available(), p.capacity());
+    }
+
+    #[test]
+    fn release_of_never_allocated_slot_is_double_free() {
+        // slot 2 exists but sits in the free list: releasing it again
+        // must be rejected as a double free
+        let mut p = KvPool::new(3);
+        let _a = p.alloc().unwrap();
+        assert!(p.release(2).is_err());
+        assert_eq!(p.in_use(), 1);
+    }
+
     /// Property-style test (hand-rolled; the image has no proptest):
     /// under a random alloc/release workload the pool never double
     /// allocates, never leaks, and in_use + available == capacity.
@@ -173,10 +216,10 @@ mod tests {
         kv.fill_slot(2, &kc1, &vc1).unwrap();
         let kc = kv.kc.as_f32().unwrap();
         // layer 1, slot 2 row should contain the second layer of kc1
-        let off = (1 * b + 2) * row;
+        let off = (b + 2) * row;
         assert_eq!(kc[off], row as f32);
         // untouched slot stays zero
-        let off0 = (1 * b + 1) * row;
+        let off0 = (b + 1) * row;
         assert_eq!(kc[off0], 0.0);
         assert!(kv.fill_slot(9, &kc1, &vc1).is_err());
     }

@@ -104,4 +104,53 @@ mod tests {
         m.batch_occupancy_sum = 10;
         assert!((m.mean_occupancy() - 2.5).abs() < 1e-12);
     }
+
+    #[test]
+    fn quantiles_are_monotonic_and_bounded() {
+        let mut h = Histogram::default();
+        // bimodal: a fast mode near 1 ms and a slow tail near 0.5 s
+        for _ in 0..90 {
+            h.record(1.1e-3);
+        }
+        for _ in 0..10 {
+            h.record(0.5);
+        }
+        let qs = [0.1, 0.5, 0.9, 0.95, 0.99, 1.0];
+        let mut prev = 0.0;
+        for q in qs {
+            let v = h.quantile(q);
+            assert!(v >= prev, "quantile({q}) = {v} < {prev}");
+            assert!(v > 0.0);
+            prev = v;
+        }
+        // p50 sits in the fast mode, p99 in the slow tail
+        assert!(h.quantile(0.5) < 0.01, "{}", h.quantile(0.5));
+        assert!(h.quantile(0.99) >= 0.25, "{}", h.quantile(0.99));
+        assert_eq!(h.max(), 0.5);
+        assert_eq!(h.count(), 100);
+        let want_mean = (90.0 * 1.1e-3 + 10.0 * 0.5) / 100.0;
+        assert!((h.mean() - want_mean).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_histogram_is_all_zeros() {
+        let h = Histogram::default();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.quantile(0.5), 0.0);
+        assert_eq!(h.max(), 0.0);
+    }
+
+    #[test]
+    fn out_of_range_samples_clamp_to_edge_buckets() {
+        let mut h = Histogram::default();
+        h.record(0.0); // below the first bucket edge
+        h.record(1e9); // far beyond the last bucket edge
+        assert_eq!(h.count(), 2);
+        // the huge sample clamps into the last bucket (~839 s edge);
+        // the true maximum is still tracked exactly
+        assert!(h.quantile(1.0) >= 800.0, "{}", h.quantile(1.0));
+        assert_eq!(h.max(), 1e9);
+        assert!(h.quantile(0.5) <= 1e-4 * 2.0);
+    }
 }

@@ -1,20 +1,40 @@
-//! L3 serving coordinator: continuous batching over the PJRT engine.
+//! L3 serving coordinator: continuous batching over an
+//! [`InferenceBackend`](crate::runtime::InferenceBackend).
 //!
 //! Shape: requests enter an admission queue; the scheduler claims a KV
 //! slot per sequence, runs batch-1 prefill to fill the slot, then steps
-//! ALL active slots together through the batch-8 decode executable
-//! (inactive rows are padded and ignored) — the prefill/decode interleave
-//! of vLLM-style continuous batching, scaled to this bundle's fixed
-//! artifact batch sizes.
+//! ALL active slots together through the batched decode entry point
+//! (inactive rows are padded and ignored) — the prefill/decode
+//! interleave of vLLM-style continuous batching, scaled to this
+//! bundle's fixed artifact batch sizes.
+//!
+//! Two abstractions make the layer testable at scale without any PJRT
+//! artifacts:
+//!
+//! * the **`InferenceBackend` trait** (`runtime::backend`) — the
+//!   scheduler and serve loops are generic over it, so the PJRT
+//!   [`Engine`](crate::runtime::Engine) and the deterministic
+//!   [`SimBackend`](crate::runtime::SimBackend) are interchangeable;
+//! * the **`Clock` trait** (`util::clock`) — all timestamps (enqueue,
+//!   first token, completion) are read from a shared wall or virtual
+//!   clock; simulation backends *advance* the virtual clock by their
+//!   modeled step latency, making TTFT/latency metrics exact.
+//!
+//! [`workload`] generates deterministic scenario mixes (steady, burst,
+//! long-prompt tail, mixed lengths, early-EOS chat) that
+//! `rust/tests/serving_integration.rs` replays through the real
+//! scheduler by the thousands.
 
 pub mod batcher;
 pub mod kv;
 pub mod metrics;
 pub mod request;
 pub mod server;
+pub mod workload;
 
 pub use batcher::Scheduler;
 pub use kv::KvPool;
 pub use metrics::Metrics;
-pub use request::{Request, Response};
-pub use server::{serve_until_drained, ServeConfig};
+pub use request::{Request, Response, TimedRequest};
+pub use server::{serve_trace, serve_until_drained, ServeConfig};
+pub use workload::{Scenario, WorkloadSpec};

@@ -1,6 +1,9 @@
 //! Request/response types of the serving API.
-
-use std::time::Instant;
+//!
+//! All timestamps are seconds on the scheduler's [`Clock`]
+//! (`crate::util::clock`) — wall time in production, virtual time in
+//! the simulation harness — which is what makes TTFT/latency exactly
+//! reproducible in tests.
 
 use crate::model::SamplingParams;
 
@@ -11,6 +14,15 @@ pub struct Request {
     pub prompt: Vec<i32>,
     pub max_new_tokens: usize,
     pub params: SamplingParams,
+}
+
+/// A request with a scheduled arrival time, as produced by the
+/// workload generator and consumed by `server::serve_trace`.
+#[derive(Clone, Debug)]
+pub struct TimedRequest {
+    /// Arrival offset in seconds from the start of the trace.
+    pub at: f64,
+    pub req: Request,
 }
 
 /// Completion of one request, with timing for the latency report.
@@ -29,8 +41,10 @@ pub struct Response {
 #[derive(Debug)]
 pub struct InFlight {
     pub req: Request,
-    pub enqueued: Instant,
-    pub first_token: Option<Instant>,
+    /// Clock second the request entered the admission queue.
+    pub enqueued: f64,
+    /// Clock second the first token was sampled.
+    pub first_token: Option<f64>,
     pub generated: Vec<i32>,
     pub slot: usize,
     /// next decode position (= tokens written into the KV so far).

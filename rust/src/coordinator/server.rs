@@ -1,14 +1,20 @@
-//! Serve loop: drain a workload through the scheduler and collect
-//! responses + throughput (the serving examples and benches drive this).
+//! Serve loops: drain a workload through the scheduler and collect
+//! responses + throughput (the serving examples, benches and the
+//! stress harness drive these).
+//!
+//! Both loops are generic over [`InferenceBackend`] and measure time
+//! on the shared [`Clock`], so the same code serves a PJRT engine on
+//! wall time and the SimBackend on virtual time.
 
-use std::time::Instant;
+use std::rc::Rc;
 
-use anyhow::Result;
-
-use crate::runtime::{Engine, QuantMode};
+use crate::runtime::backend::InferenceBackend;
+use crate::runtime::QuantMode;
+use crate::util::clock::Clock;
+use crate::util::error::Result;
 
 use super::batcher::Scheduler;
-use super::request::{Request, Response};
+use super::request::{Request, Response, TimedRequest};
 
 /// Configuration of a serve run.
 #[derive(Clone, Debug)]
@@ -19,21 +25,62 @@ pub struct ServeConfig {
     pub decode_batch: usize,
 }
 
-/// Run all `requests` to completion; returns (responses, wall seconds,
-/// scheduler with final metrics).
-pub fn serve_until_drained(engine: &mut Engine, cfg: &ServeConfig,
-                           requests: Vec<Request>)
-                           -> Result<(Vec<Response>, f64, Scheduler)> {
-    let mut sched = Scheduler::new(engine, &cfg.model, cfg.quant,
-                                   cfg.c_vec.clone(), cfg.decode_batch)?;
+/// Run all `requests` (already arrived) to completion; returns
+/// (responses, elapsed clock seconds, scheduler with final metrics).
+pub fn serve_until_drained<B: InferenceBackend + ?Sized>(
+    backend: &mut B, cfg: &ServeConfig, requests: Vec<Request>,
+    clock: Rc<dyn Clock>,
+) -> Result<(Vec<Response>, f64, Scheduler)> {
+    let mut sched = Scheduler::new(backend, &cfg.model, cfg.quant,
+                                   cfg.c_vec.clone(), cfg.decode_batch,
+                                   clock.clone())?;
     for r in requests {
         sched.submit(r);
     }
-    let t0 = Instant::now();
+    let t0 = clock.now();
     let mut out = Vec::new();
     while sched.has_work() {
-        out.extend(sched.tick(engine)?);
+        out.extend(sched.tick(backend)?);
     }
-    let wall = t0.elapsed().as_secs_f64();
-    Ok((out, wall, sched))
+    Ok((out, clock.now() - t0, sched))
+}
+
+/// Replay a timed arrival trace: requests are submitted when the clock
+/// passes their arrival offset; when the scheduler is idle the clock
+/// skips ahead to the next arrival (virtual clocks jump, wall clocks
+/// sleep). Returns (responses, elapsed clock seconds, scheduler).
+pub fn serve_trace<B: InferenceBackend + ?Sized>(
+    backend: &mut B, cfg: &ServeConfig, mut trace: Vec<TimedRequest>,
+    clock: Rc<dyn Clock>,
+) -> Result<(Vec<Response>, f64, Scheduler)> {
+    trace.sort_by(|a, b| {
+        a.at.total_cmp(&b.at).then(a.req.id.cmp(&b.req.id))
+    });
+    let mut sched = Scheduler::new(backend, &cfg.model, cfg.quant,
+                                   cfg.c_vec.clone(), cfg.decode_batch,
+                                   clock.clone())?;
+    let t0 = clock.now();
+    let mut out = Vec::new();
+    let mut next = 0usize;
+    while next < trace.len() || sched.has_work() {
+        while next < trace.len()
+            && trace[next].at <= clock.now() - t0
+        {
+            // enqueue at the *arrival* time: a tick may have advanced
+            // the clock past several arrivals, and that queue wait is
+            // part of the latency being measured
+            sched.submit_at(trace[next].req.clone(),
+                            t0 + trace[next].at);
+            next += 1;
+        }
+        if !sched.has_work() {
+            // idle: jump to the next arrival (next < len is implied by
+            // the loop condition when nothing is in flight)
+            let gap = trace[next].at - (clock.now() - t0);
+            clock.advance(gap.max(1e-9));
+            continue;
+        }
+        out.extend(sched.tick(backend)?);
+    }
+    Ok((out, clock.now() - t0, sched))
 }

@@ -1,0 +1,186 @@
+//! Scenario-mix workload generator for the serving stress harness.
+//!
+//! Produces deterministic timed request traces ([`TimedRequest`]) from
+//! a seeded [`SplitMix64`]: steady streams, instantaneous bursts,
+//! long-prompt heavy tails, mixed generation lengths (sampled through
+//! the EXAQ Algo-2 sampling softmax), and chat-style early-EOS turns.
+//! The same spec + seed always yields the byte-identical trace, which
+//! is the foundation of the determinism assertions in
+//! `rust/tests/serving_integration.rs`.
+
+use crate::model::SamplingParams;
+use crate::util::rng::SplitMix64;
+
+use super::request::{Request, TimedRequest};
+
+/// Arrival + size pattern of a synthetic workload.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Scenario {
+    /// Uniform arrivals at `rate` requests/second, mid-size prompts,
+    /// greedy decoding.
+    Steady { rate: f64 },
+    /// All requests arrive in `n_bursts` instantaneous spikes spaced
+    /// `gap` seconds apart.
+    Burst { n_bursts: usize, gap: f64 },
+    /// Mostly short prompts with a heavy tail of near-`max_seq`
+    /// prompts (truncation-path stress).
+    LongPromptTail { rate: f64 },
+    /// `max_new_tokens` spread over [1, 24] and stochastic sampling
+    /// through the EXAQ Algorithm-2 softmax (`params.exaq`).
+    MixedLengths { rate: f64 },
+    /// Chat-style turns with a generous token budget that rely on the
+    /// backend emitting EOS early (pair with `SimConfig::eos_bias`).
+    ChatEarlyEos { rate: f64 },
+}
+
+/// Full description of a generated workload.
+#[derive(Clone, Debug)]
+pub struct WorkloadSpec {
+    pub scenario: Scenario,
+    pub n_requests: usize,
+    pub seed: u64,
+    /// Vocabulary size of the serving model; prompt tokens are drawn
+    /// from `[4, vocab)` to stay clear of the special ids.
+    pub vocab: usize,
+    /// Model context length (bounds prompt lengths).
+    pub max_seq: usize,
+}
+
+impl WorkloadSpec {
+    pub fn new(scenario: Scenario, n_requests: usize, seed: u64,
+               vocab: usize, max_seq: usize) -> Self {
+        assert!(vocab > 8, "vocabulary too small for prompt sampling");
+        assert!(max_seq >= 8, "context too short for prompt sampling");
+        Self { scenario, n_requests, seed, vocab, max_seq }
+    }
+}
+
+fn prompt(rng: &mut SplitMix64, len: usize, vocab: usize) -> Vec<i32> {
+    (0..len).map(|_| (4 + rng.below(vocab - 4)) as i32).collect()
+}
+
+/// Generate the deterministic timed trace for `spec`.
+pub fn generate(spec: &WorkloadSpec) -> Vec<TimedRequest> {
+    let mut rng = SplitMix64::new(spec.seed);
+    let mid = (spec.max_seq / 4).max(2);
+    let mut out = Vec::with_capacity(spec.n_requests);
+    for id in 0..spec.n_requests as u64 {
+        let i = id as usize;
+        let (at, plen, max_new, params) = match spec.scenario {
+            Scenario::Steady { rate } => (
+                i as f64 / rate.max(1e-9),
+                2 + rng.below(mid),
+                4 + rng.below(13),
+                SamplingParams::greedy(),
+            ),
+            Scenario::Burst { n_bursts, gap } => (
+                (i % n_bursts.max(1)) as f64 * gap,
+                2 + rng.below(mid),
+                8,
+                SamplingParams::greedy(),
+            ),
+            Scenario::LongPromptTail { rate } => {
+                // 1 in 8 requests (and always the first, so every
+                // trace exercises truncation) carries a prompt at or
+                // beyond the context length
+                let plen = if i == 0 || rng.below(8) == 0 {
+                    spec.max_seq - 2 + rng.below(spec.max_seq)
+                } else {
+                    2 + rng.below(mid)
+                };
+                (i as f64 / rate.max(1e-9), plen, 6,
+                 SamplingParams::greedy())
+            }
+            Scenario::MixedLengths { rate } => (
+                i as f64 / rate.max(1e-9),
+                2 + rng.below(mid),
+                1 + rng.below(24),
+                SamplingParams::exaq(0.8, 2, -4.0),
+            ),
+            Scenario::ChatEarlyEos { rate } => (
+                i as f64 / rate.max(1e-9),
+                2 + rng.below(mid),
+                spec.max_seq / 2,
+                SamplingParams::greedy(),
+            ),
+        };
+        out.push(TimedRequest {
+            at,
+            req: Request {
+                id,
+                prompt: prompt(&mut rng, plen, spec.vocab),
+                max_new_tokens: max_new.max(1),
+                params,
+            },
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(scenario: Scenario) -> WorkloadSpec {
+        WorkloadSpec::new(scenario, 64, 42, 64, 64)
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let a = generate(&spec(Scenario::MixedLengths { rate: 100.0 }));
+        let b = generate(&spec(Scenario::MixedLengths { rate: 100.0 }));
+        assert_eq!(a.len(), 64);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.at, y.at);
+            assert_eq!(x.req.id, y.req.id);
+            assert_eq!(x.req.prompt, y.req.prompt);
+            assert_eq!(x.req.max_new_tokens, y.req.max_new_tokens);
+        }
+        let c = generate(&WorkloadSpec::new(
+            Scenario::MixedLengths { rate: 100.0 }, 64, 43, 64, 64));
+        assert!(a.iter().zip(&c).any(|(x, y)|
+            x.req.prompt != y.req.prompt));
+    }
+
+    #[test]
+    fn steady_arrivals_are_monotonic_and_tokens_in_vocab() {
+        let t = generate(&spec(Scenario::Steady { rate: 50.0 }));
+        for w in t.windows(2) {
+            assert!(w[1].at >= w[0].at);
+        }
+        for r in &t {
+            assert!(!r.req.prompt.is_empty());
+            assert!(r.req.prompt.iter().all(|&x| (4..64).contains(&x)));
+            assert!(r.req.max_new_tokens >= 1);
+        }
+    }
+
+    #[test]
+    fn burst_collapses_arrival_times() {
+        let t = generate(&spec(Scenario::Burst { n_bursts: 4,
+                                                 gap: 0.5 }));
+        let mut times: Vec<f64> =
+            t.iter().map(|r| r.at).collect();
+        times.sort_by(f64::total_cmp);
+        times.dedup();
+        assert_eq!(times, vec![0.0, 0.5, 1.0, 1.5]);
+    }
+
+    #[test]
+    fn long_tail_exceeds_context_sometimes() {
+        let t = generate(&spec(Scenario::LongPromptTail { rate: 10.0 }));
+        assert!(t.iter().any(|r| r.req.prompt.len() >= 62),
+                "expected at least one near/over-context prompt");
+        assert!(t.iter().any(|r| r.req.prompt.len() < 20));
+    }
+
+    #[test]
+    fn mixed_lengths_uses_exaq_sampling() {
+        let t = generate(&spec(Scenario::MixedLengths { rate: 10.0 }));
+        assert!(t.iter().all(|r| r.req.params.exaq == Some((2, -4.0))));
+        let lens: Vec<usize> =
+            t.iter().map(|r| r.req.max_new_tokens).collect();
+        assert!(lens.iter().any(|&l| l <= 4));
+        assert!(lens.iter().any(|&l| l >= 16));
+    }
+}

@@ -174,6 +174,62 @@ impl MachineModel {
                       share: elemwise / total },
         ]
     }
+
+    /// Total modeled cycles of one batched prefill pass (the Fig. 1
+    /// accounting summed). This is the latency model the simulation
+    /// backend charges per admission.
+    pub fn prefill_cycles(
+        &self,
+        shape: TransformerShape,
+        prec: GemmPrecision,
+        softmax_algo2_bits: Option<u32>,
+    ) -> f64 {
+        self.breakdown(shape, prec, softmax_algo2_bits)
+            .iter()
+            .map(|o| o.cycles)
+            .sum()
+    }
+
+    /// Modeled cycles of one batched decode step: `active` sequences,
+    /// one query token each, attending over `kv_len` cached positions.
+    /// Same accounting buckets as [`Self::breakdown`] specialised to a
+    /// single query per sequence.
+    pub fn decode_step_cycles(
+        &self,
+        shape: TransformerShape,
+        prec: GemmPrecision,
+        softmax_algo2_bits: Option<u32>,
+        active: usize,
+        kv_len: usize,
+    ) -> f64 {
+        let TransformerShape { layers, d_model, n_heads, d_ff, vocab,
+                               .. } = shape;
+        let (l, d, f, b) = (layers as f64, d_model as f64, d_ff as f64,
+                            active as f64);
+        let hd = d / n_heads as f64;
+        let s = kv_len as f64;
+
+        let proj = 4.0 * b * d * d;
+        let attn_mm = 2.0 * b * n_heads as f64 * s * hd;
+        let mlp = 3.0 * b * d * f;
+        let head = b * d * vocab as f64;
+        let gemm = self.gemm_cycles(l * (proj + attn_mm + mlp) + head,
+                                    prec);
+
+        // one softmax row of length kv_len per (sequence, head)
+        let rows = b * n_heads as f64;
+        let softmax = l * rows
+            * match softmax_algo2_bits {
+                None => self.cycles.algo1_softmax(kv_len),
+                Some(bits) => self.cycles.algo2_softmax(kv_len, bits),
+            }
+            / self.vpu_lanes;
+
+        let elemwise = l * (b * d * 20.0 + b * f * 6.0) * 4.0
+            / self.hbm_bytes_per_cycle;
+
+        gemm + softmax + elemwise
+    }
 }
 
 #[cfg(test)]
@@ -258,6 +314,42 @@ mod tests {
         let sb = before.iter().find(|o| o.name == "softmax").unwrap();
         let sa = after.iter().find(|o| o.name == "softmax").unwrap();
         assert!(sa.cycles < sb.cycles * 0.75);
+    }
+
+    #[test]
+    fn prefill_cycles_is_breakdown_total() {
+        let m = MachineModel::default();
+        let shape = TransformerShape {
+            layers: 4, d_model: 128, n_heads: 4, d_ff: 352,
+            seq: 64, batch: 8, vocab: 104,
+        };
+        let total: f64 = m.breakdown(shape, GemmPrecision::Bf16, None)
+            .iter().map(|o| o.cycles).sum();
+        let got = m.prefill_cycles(shape, GemmPrecision::Bf16, None);
+        assert!((got - total).abs() < 1e-9);
+        assert!(got > 0.0);
+    }
+
+    #[test]
+    fn decode_step_scales_with_active_and_prefers_algo2() {
+        let m = MachineModel::default();
+        let shape = TransformerShape {
+            layers: 2, d_model: 8, n_heads: 2, d_ff: 16,
+            seq: 64, batch: 8, vocab: 64,
+        };
+        let one = m.decode_step_cycles(shape, GemmPrecision::Bf16, None,
+                                       1, 64);
+        let eight = m.decode_step_cycles(shape, GemmPrecision::Bf16,
+                                         None, 8, 64);
+        assert!(eight > one, "{eight} vs {one}");
+        // batching amortises nothing in this model but must stay linear
+        assert!((eight - 8.0 * one).abs() < 1e-6 * eight.max(1.0));
+        let a2 = m.decode_step_cycles(shape, GemmPrecision::Bf16,
+                                      Some(2), 8, 64);
+        assert!(a2 < eight, "algo2 decode {a2} !< algo1 {eight}");
+        // a decode step is much cheaper than a full prefill
+        let pf = m.prefill_cycles(shape, GemmPrecision::Bf16, None);
+        assert!(eight < pf, "decode {eight} !< prefill {pf}");
     }
 
     #[test]

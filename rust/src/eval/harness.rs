@@ -1,7 +1,7 @@
 //! lm-evaluation-harness-style scorer: batched log-likelihood of each
 //! choice, argmax -> accuracy (Tables 2/4/5/6 of the paper).
 
-use anyhow::Result;
+use crate::util::error::Result;
 
 use crate::model::Tokenizer;
 use crate::runtime::{Engine, HostTensor, QuantMode};

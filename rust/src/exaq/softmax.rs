@@ -247,6 +247,104 @@ mod tests {
     }
 
     #[test]
+    fn valid_len_beyond_row_length_is_clamped() {
+        // hostile valid_len values must behave exactly like the full row
+        for vlen in [64usize, 65, 1000, usize::MAX] {
+            let mut a = random_row(64, 17, 2.0);
+            let mut b = a.clone();
+            softmax_algo2_once(&mut a, vlen, 2, -4.0);
+            softmax_algo2_once(&mut b, 64, 2, -4.0);
+            assert_eq!(a, b, "vlen={vlen} diverged from the clamp");
+            let s: f32 = a.iter().sum();
+            assert!((s - 1.0).abs() < 1e-4, "vlen={vlen}: sum {s}");
+        }
+        // algo1 takes the same clamp path
+        let mut a = random_row(48, 18, 2.0);
+        let mut b = a.clone();
+        softmax_algo1(&mut a, usize::MAX);
+        softmax_algo1(&mut b, 48);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn all_neg_infinity_rows_degrade_to_uniform() {
+        // (-inf) - (-inf) = NaN after the max shift; the quantizer's
+        // branchless clamp collapses NaN to code 0, so both quantized
+        // paths agree on a uniform distribution instead of emitting NaN
+        for bits in [1u32, 2, 3, 4] {
+            let n = 24usize;
+            let mut row = vec![f32::NEG_INFINITY; n];
+            softmax_algo2_once(&mut row, n, bits, -5.0);
+            let mut direct = vec![f32::NEG_INFINITY; n];
+            softmax_quant_direct(&mut direct, n, bits, -5.0);
+            for (i, (&p, &d)) in row.iter().zip(&direct).enumerate() {
+                assert!(p.is_finite(), "bits={bits} lane {i} is {p}");
+                assert!((p - 1.0 / n as f32).abs() < 1e-5,
+                        "bits={bits} lane {i}: {p} != uniform");
+                assert!((p - d).abs() < 1e-6,
+                        "bits={bits} lane {i}: algo2 {p} vs direct {d}");
+            }
+        }
+        // partial masks over -inf rows stay uniform over the prefix
+        let mut row = vec![f32::NEG_INFINITY; 16];
+        softmax_algo2_once(&mut row, 5, 2, -4.0);
+        let s: f32 = row[..5].iter().sum();
+        assert!((s - 1.0).abs() < 1e-4, "{s}");
+        assert!(row[5..].iter().all(|&p| p == 0.0));
+    }
+
+    #[test]
+    fn one_bit_quantization_still_normalises() {
+        // bits = 1: two levels {C, 0}, LUT_sum group of 1
+        for vlen in [1usize, 7, 32] {
+            let mut a = random_row(32, 23, 2.0);
+            let mut b = a.clone();
+            softmax_algo2_once(&mut a, vlen, 1, -3.0);
+            softmax_quant_direct(&mut b, vlen, 1, -3.0);
+            let s: f32 = a.iter().sum();
+            assert!((s - 1.0).abs() < 1e-4, "vlen={vlen}: sum {s}");
+            for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+                assert!((x - y).abs() < 2e-5,
+                        "vlen={vlen} lane {i}: {x} vs {y}");
+            }
+            assert!(a[vlen.min(32)..].iter().all(|&p| p == 0.0));
+        }
+    }
+
+    #[test]
+    fn randomized_sweep_matches_direct_reference_across_seeds() {
+        // property-style sweep (hand-rolled; the image has no
+        // proptest): random lengths, masks, bit-widths and clips must
+        // keep algo2 glued to the non-LUT quantized reference and
+        // normalised over the valid prefix
+        let mut meta = SplitMix64::new(0xA1B2);
+        for trial in 0..200 {
+            let n = 1 + meta.below(96);
+            let vlen = 1 + meta.below(n + 8); // sometimes > n: clamped
+            let bits = 1 + meta.below(4) as u32;
+            let c = -1.0 - 3.0 * meta.uniform() as f32 * 2.0;
+            let scale = 0.5 + meta.uniform() as f32 * 3.0;
+            let mut a = random_row(n, 1000 + trial, scale);
+            let mut b = a.clone();
+            softmax_algo2_once(&mut a, vlen, bits, c);
+            softmax_quant_direct(&mut b, vlen, bits, c);
+            let s: f32 = a.iter().sum();
+            assert!((s - 1.0).abs() < 1e-3,
+                    "trial {trial} (n={n} vlen={vlen} bits={bits} \
+                     c={c}): sum {s}");
+            for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+                assert!((x - y).abs() < 5e-5,
+                        "trial {trial} lane {i}: {x} vs {y}");
+            }
+            let valid = vlen.min(n);
+            assert!(a[valid..].iter().all(|&p| p == 0.0),
+                    "trial {trial}: masked lanes leaked");
+            assert!(a[..valid].iter().all(|&p| p >= 0.0),
+                    "trial {trial}: negative probability");
+        }
+    }
+
+    #[test]
     fn quantized_softmax_close_to_exact_at_reasonable_bits() {
         // at M=4 with a good clip, quantized softmax tracks the exact one
         let mut a = random_row(64, 21, 1.0);

@@ -5,11 +5,16 @@
 //! Layer map (see DESIGN.md):
 //! * [`exaq`] — the paper's method: analytic clipping (§3), LUT-based
 //!   softmax (§4), quantizer and calibration-derived thresholds.
-//! * [`runtime`] — PJRT engine that loads the AOT-lowered HLO artifacts
-//!   produced by `python/compile/aot.py` and executes them (Python is
-//!   never on the request path).
+//! * [`runtime`] — execution backends behind the `InferenceBackend`
+//!   trait: the PJRT engine that loads the AOT-lowered HLO artifacts
+//!   produced by `python/compile/aot.py` (gated behind the `pjrt`
+//!   feature; Python is never on the request path), and the
+//!   deterministic `SimBackend` that drives the serving stack with
+//!   seeded logits + cost-model latency and no artifacts at all.
 //! * [`coordinator`] — continuous-batching serving: admission, prefill /
-//!   decode scheduling, KV slot pool, metrics.
+//!   decode scheduling, KV slot pool, metrics, scenario workload
+//!   generation; timestamped through the `util::clock::Clock` trait
+//!   (wall or virtual time).
 //! * [`eval`] — lm-evaluation-harness-style zero-shot scoring over seven
 //!   synthetic task families (Tables 2/4/5/6).
 //! * [`calib`] — runtime calibration driver (Fig. 6, clip thresholds).

@@ -10,15 +10,21 @@
 //!   eval          accuracy tables                             (Tab. 2/4/5/6)
 //!   generate      greedy/temperature generation (quickstart)
 //!   serve-demo    batched serving demo over the coordinator
+//!   stress        deterministic serving stress run on the SimBackend
+//!                 (no artifacts needed; virtual-clock latency report)
 //!   selftest      engine smoke: load bundle, run one prefill
 
 use std::collections::HashMap;
 use std::path::PathBuf;
+use std::rc::Rc;
 
-use anyhow::{anyhow, bail, Result};
+use exaq_repro::util::clock::{VirtualClock, WallClock};
+use exaq_repro::util::error::{anyhow, bail, Result};
 
 use exaq_repro::calib;
-use exaq_repro::coordinator::{serve_until_drained, Request, ServeConfig};
+use exaq_repro::coordinator::{serve_trace, serve_until_drained,
+                              workload, Request, Scenario, ServeConfig,
+                              WorkloadSpec};
 use exaq_repro::cost::{GemmPrecision, MachineModel, TransformerShape};
 use exaq_repro::eval::{eval_task, family_world_seed, mean_std, World,
                        ALL_TASKS};
@@ -29,7 +35,7 @@ use exaq_repro::exaq::solver::{optimal_clip, optimal_clip_mean_zero};
 use exaq_repro::exaq::{clip_exaq, clip_naive};
 use exaq_repro::model::{SamplingParams, Tokenizer};
 use exaq_repro::report::{f as fnum, pct, Table};
-use exaq_repro::runtime::{Engine, QuantMode};
+use exaq_repro::runtime::{Engine, QuantMode, SimBackend, SimConfig};
 
 /// Tiny flag parser: `--key value` pairs + positional subcommand.
 struct Args {
@@ -86,11 +92,12 @@ fn main() -> Result<()> {
         Some("damage") => cmd_damage(&args),
         Some("generate") => cmd_generate(&args),
         Some("serve-demo") => cmd_serve_demo(&args),
+        Some("stress") => cmd_stress(&args),
         Some("selftest") => cmd_selftest(&args),
         other => {
             eprintln!("usage: repro <solve-clip|fit-table1|mse-curve|\
                        breakdown|calibrate|eval|generate|serve-demo|\
-                       selftest> [--flags]");
+                       stress|selftest> [--flags]");
             if let Some(o) = other {
                 bail!("unknown command {o}");
             }
@@ -406,7 +413,8 @@ fn cmd_generate(args: &Args) -> Result<()> {
         params: SamplingParams::greedy(),
     };
     let (mut resp, wall, _) =
-        serve_until_drained(&mut engine, &cfg, vec![req])?;
+        serve_until_drained(&mut engine, &cfg, vec![req],
+                            Rc::new(WallClock::new()))?;
     let r = resp.pop().ok_or_else(|| anyhow!("no response"))?;
     println!("prompt : {prompt}");
     println!("output : {}", tok.decode(&r.tokens));
@@ -442,7 +450,8 @@ fn cmd_serve_demo(args: &Args) -> Result<()> {
         .collect();
     let cfg = ServeConfig { model, quant, c_vec, decode_batch: 8 };
     let (resps, wall, sched) =
-        serve_until_drained(&mut engine, &cfg, reqs)?;
+        serve_until_drained(&mut engine, &cfg, reqs,
+                            Rc::new(WallClock::new()))?;
     let toks: usize = resps.iter().map(|r| r.tokens.len()).sum();
     println!("served {} requests, {toks} tokens in {wall:.2}s \
               ({:.1} tok/s)", resps.len(), toks as f64 / wall);
@@ -450,6 +459,83 @@ fn cmd_serve_demo(args: &Args) -> Result<()> {
              sched.metrics.ttft.quantile(0.5),
              sched.metrics.total_latency.quantile(0.5),
              sched.metrics.mean_occupancy());
+    Ok(())
+}
+
+/// Deterministic serving stress run: scenario workload -> SimBackend
+/// -> real Scheduler on a virtual clock. Needs no artifacts; the same
+/// seed always prints the same numbers.
+fn cmd_stress(args: &Args) -> Result<()> {
+    let n = args.get_usize("requests", 1000);
+    let seed = args.get_usize("seed", 7) as u64;
+    let decode_batch = args.get_usize("decode-batch", 8);
+    let rate = args.get_f64("rate", 200.0);
+    let scenario = match args.get("scenario", "steady").as_str() {
+        "steady" => Scenario::Steady { rate },
+        "burst" => Scenario::Burst {
+            n_bursts: args.get_usize("bursts", 4),
+            gap: args.get_f64("gap", 0.25),
+        },
+        "long-tail" => Scenario::LongPromptTail { rate },
+        "mixed" => Scenario::MixedLengths { rate },
+        "chat" => Scenario::ChatEarlyEos { rate },
+        other => bail!("unknown scenario {other} \
+                        (steady|burst|long-tail|mixed|chat)"),
+    };
+
+    let clock = Rc::new(VirtualClock::new());
+    let sim_cfg = SimConfig {
+        seed: seed ^ 0x51B0,
+        eos_bias: if matches!(scenario, Scenario::ChatEarlyEos { .. }) {
+            0.15
+        } else {
+            0.0
+        },
+        ..SimConfig::default()
+    };
+    let spec = WorkloadSpec::new(scenario, n, seed, sim_cfg.vocab,
+                                 sim_cfg.max_seq);
+    let mut sim = SimBackend::new(sim_cfg, clock.clone());
+    let cfg = ServeConfig {
+        model: "sim".into(),
+        quant: QuantMode::None,
+        c_vec: None,
+        decode_batch,
+    };
+    let trace = workload::generate(&spec);
+    let host0 = std::time::Instant::now();
+    let (resps, sim_secs, sched) =
+        serve_trace(&mut sim, &cfg, trace, clock)?;
+    let host_secs = host0.elapsed().as_secs_f64();
+
+    if resps.len() != n {
+        bail!("stress run lost requests: {} of {n} completed",
+              resps.len());
+    }
+    let toks: usize = resps.iter().map(|r| r.tokens.len()).sum();
+    let m = &sched.metrics;
+    let mut t = Table::new(
+        &format!("Serving stress — scenario {}, {n} requests, \
+                  decode batch {decode_batch}, seed {seed}",
+                 args.get("scenario", "steady")),
+        &["metric", "value"]);
+    t.row(&["simulated seconds".into(), fnum(sim_secs, 4)]);
+    t.row(&["simulated tok/s".into(),
+            fnum(toks as f64 / sim_secs.max(1e-12), 1)]);
+    t.row(&["host seconds".into(), fnum(host_secs, 3)]);
+    t.row(&["prefills".into(), m.prefills.to_string()]);
+    t.row(&["decode steps".into(), m.decode_steps.to_string()]);
+    t.row(&["mean batch occupancy".into(),
+            fnum(m.mean_occupancy(), 2)]);
+    t.row(&["p50 ttft (s)".into(), fnum(m.ttft.quantile(0.5), 5)]);
+    t.row(&["p99 ttft (s)".into(), fnum(m.ttft.quantile(0.99), 5)]);
+    t.row(&["p50 latency (s)".into(),
+            fnum(m.total_latency.quantile(0.5), 5)]);
+    t.row(&["p99 latency (s)".into(),
+            fnum(m.total_latency.quantile(0.99), 5)]);
+    t.row(&["max latency (s)".into(),
+            fnum(m.total_latency.max(), 5)]);
+    println!("{}", t.to_markdown());
     Ok(())
 }
 

@@ -31,14 +31,25 @@ impl SamplingParams {
     pub fn greedy() -> Self {
         Self::default()
     }
+
+    /// Stochastic sampling whose softmax runs through the EXAQ
+    /// Algorithm-2 pipeline at (`bits`, `clip`) — the configuration the
+    /// serving stress scenarios use to keep the paper kernel on the
+    /// sampling hot path.
+    pub fn exaq(temperature: f32, bits: u32, clip: f32) -> Self {
+        Self { temperature, top_k: 0, exaq: Some((bits, clip)) }
+    }
 }
 
-/// Reusable sampling scratch (no allocation at steady state).
+/// Reusable sampling scratch (no allocation at steady state). The EXAQ
+/// quantizer + LUT pair is cached keyed by (bits, clip), so decode loops
+/// sampling at a fixed configuration never rebuild the tables per token.
 #[derive(Default)]
 pub struct SamplerScratch {
     probs: Vec<f32>,
     idx: Vec<usize>,
     algo2: Algo2Scratch,
+    exaq_tables: Option<(u32, f32, Quantizer, LutExp, LutSum)>,
 }
 
 /// Sample one token id from `logits`.
@@ -61,11 +72,19 @@ pub fn sample_with(logits: &[f32], params: &SamplingParams,
 
     match params.exaq {
         Some((bits, c)) => {
-            let q = Quantizer::new(bits, c);
-            let le = LutExp::build(&q);
-            let ls = LutSum::build(&q);
+            let cached = matches!(&scratch.exaq_tables,
+                                  Some((b, cc, ..))
+                                  if *b == bits && *cc == c);
+            if !cached {
+                let q = Quantizer::new(bits, c);
+                let le = LutExp::build(&q);
+                let ls = LutSum::build(&q);
+                scratch.exaq_tables = Some((bits, c, q, le, ls));
+            }
+            let (_, _, q, le, ls) =
+                scratch.exaq_tables.as_ref().unwrap();
             let n = probs.len();
-            softmax_algo2(probs, n, &q, &le, &ls, &mut scratch.algo2);
+            softmax_algo2(probs, n, q, le, ls, &mut scratch.algo2);
         }
         None => softmax_exact(probs),
     }

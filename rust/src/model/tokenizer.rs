@@ -2,7 +2,7 @@
 
 use std::collections::HashMap;
 
-use anyhow::{anyhow, Result};
+use crate::util::error::{anyhow, Result};
 
 /// Word-level tokenizer over the bundle vocabulary.
 #[derive(Clone, Debug)]

@@ -1,0 +1,52 @@
+//! [`InferenceBackend`] — the execution contract the serving coordinator
+//! schedules against.
+//!
+//! Two implementations ship in-tree:
+//!
+//! * [`crate::runtime::Engine`] — the PJRT engine running the AOT
+//!   bundle (requires the `pjrt` feature + built artifacts).
+//! * [`crate::runtime::SimBackend`] — a deterministic in-process fake
+//!   transformer (seeded logits, EXAQ Algo-2 output path, cost-model
+//!   latency on a virtual clock) so scheduling, batching and latency
+//!   accounting are testable at scale with no artifacts at all.
+//!
+//! The trait deliberately mirrors the engine's typed entry points:
+//! batch-1 prefill filling a KV slot, then batched decode steps over
+//! host-resident [`DecodeState`].
+
+use crate::util::error::{anyhow, Result};
+
+use super::engine::{DecodeState, QuantMode};
+use super::manifest::ModelConfig;
+use super::tensor::HostTensor;
+
+/// Everything the coordinator needs from an execution backend.
+pub trait InferenceBackend {
+    /// Architecture of `model` (shapes the scheduler's KV pool).
+    fn model_config(&self, model: &str) -> Result<ModelConfig>;
+
+    /// Token id that terminates generation.
+    fn eos_token(&self) -> i32;
+
+    /// Prefill: tokens `[B, S]` (+ clip vector for quantized modes) ->
+    /// (logits `[B, S, V]`, per-sequence KV state `[L, B, H, S, hd]`).
+    fn prefill(&mut self, model: &str, quant: QuantMode,
+               tokens: &HostTensor, c_vec: Option<&[f32]>)
+               -> Result<(HostTensor, DecodeState)>;
+
+    /// One decode step: token `[B]`, pos `[B]` -> logits `[B, V]`;
+    /// `state` is updated in place.
+    fn decode(&mut self, model: &str, quant: QuantMode, token: &[i32],
+              pos: &[i32], state: &mut DecodeState,
+              c_vec: Option<&[f32]>) -> Result<HostTensor>;
+
+    /// Calibration prefill: tokens `[B, S]`, lengths `[B]` ->
+    /// (logits, per-layer stats `[L, 4]`). Optional — backends without
+    /// a calibration path keep the default error.
+    fn prefill_stats(&mut self, _model: &str, _tokens: &HostTensor,
+                     _lengths: &[i32])
+                     -> Result<(HostTensor, HostTensor)> {
+        Err(anyhow!("this backend does not support calibration \
+                     statistics"))
+    }
+}

@@ -12,9 +12,11 @@ use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::time::Instant;
 
-use anyhow::{anyhow, bail, Result};
+use crate::util::error::{anyhow, bail, Result};
 
-use super::manifest::{ArtifactSpec, Manifest, ModelEntry};
+use super::backend::InferenceBackend;
+use super::manifest::{ArtifactSpec, Manifest, ModelConfig, ModelEntry};
+use super::pjrt as xla;
 use super::tensor::{HostTensor, TensorData};
 use super::weights::load_weights;
 
@@ -318,5 +320,36 @@ impl Engine {
             kc: HostTensor::zeros_f32(&shape),
             vc: HostTensor::zeros_f32(&shape),
         })
+    }
+}
+
+/// The PJRT engine is one of the two serving backends (the other is
+/// [`super::sim::SimBackend`]); the trait methods delegate to the typed
+/// inherent entry points above.
+impl InferenceBackend for Engine {
+    fn model_config(&self, model: &str) -> Result<ModelConfig> {
+        Ok(self.manifest.model(model)?.config.clone())
+    }
+
+    fn eos_token(&self) -> i32 {
+        self.manifest.eos as i32
+    }
+
+    fn prefill(&mut self, model: &str, quant: QuantMode,
+               tokens: &HostTensor, c_vec: Option<&[f32]>)
+               -> Result<(HostTensor, DecodeState)> {
+        Engine::prefill(self, model, quant, tokens, c_vec)
+    }
+
+    fn decode(&mut self, model: &str, quant: QuantMode, token: &[i32],
+              pos: &[i32], state: &mut DecodeState,
+              c_vec: Option<&[f32]>) -> Result<HostTensor> {
+        Engine::decode(self, model, quant, token, pos, state, c_vec)
+    }
+
+    fn prefill_stats(&mut self, model: &str, tokens: &HostTensor,
+                     lengths: &[i32])
+                     -> Result<(HostTensor, HostTensor)> {
+        Engine::prefill_stats(self, model, tokens, lengths)
     }
 }

@@ -1,20 +1,32 @@
-//! PJRT runtime: loads the AOT bundle (`artifacts/`) and executes the
-//! lowered HLO entry points. Python is never on this path — the bundle is
-//! self-contained (HLO text + weights + manifest + calibration).
+//! L2 runtime: execution backends behind the [`InferenceBackend`]
+//! trait.
 //!
+//! * [`backend`]  — the `InferenceBackend` contract the coordinator
+//!   schedules against (prefill / decode / optional calibration stats).
+//! * [`engine`]   — PJRT engine: loads the AOT bundle (`artifacts/`)
+//!   and executes the lowered HLO entry points (Python is never on the
+//!   request path). Real execution needs the `pjrt` feature; the
+//!   default build ships the same-signature stub in [`pjrt`].
+//! * [`sim`]      — deterministic in-process simulation backend:
+//!   seeded logits through the real EXAQ Algo-2 pipeline, cost-model
+//!   latency on a virtual clock. No artifacts required.
 //! * [`manifest`] — parses `manifest.json` (models, configs, artifact
 //!   signatures).
 //! * [`weights`]  — the TLW1 flat weight format (mirror of
 //!   `python/compile/weights_io.py`).
-//! * [`tensor`]   — host-side tensors crossing the PJRT boundary.
-//! * [`engine`]   — PJRT client wrapper: compile cache, resident weight
-//!   buffers, typed prefill/decode/stats calls.
+//! * [`tensor`]   — host-side tensors crossing the backend boundary.
+//! * [`pjrt`]     — the PJRT FFI surface (re-export or stub).
 
+pub mod backend;
 pub mod engine;
 pub mod manifest;
+pub mod pjrt;
+pub mod sim;
 pub mod tensor;
 pub mod weights;
 
+pub use backend::InferenceBackend;
 pub use engine::{DecodeState, Engine, QuantMode};
 pub use manifest::{ArtifactSpec, Manifest, ModelConfig, ModelEntry};
+pub use sim::{SimBackend, SimConfig};
 pub use tensor::HostTensor;

@@ -1,0 +1,162 @@
+//! The PJRT FFI surface the engine compiles against.
+//!
+//! With the `pjrt` cargo feature the real `xla` bindings are re-exported
+//! verbatim (vendoring them and adding the dependency to Cargo.toml is
+//! on the integrator). Without it — the default, since the build image
+//! vendors no crates — this module provides signature-compatible stubs
+//! whose entry point, [`PjRtClient::cpu`], fails with a clear message.
+//! Everything downstream still type-checks, `Engine::load` surfaces the
+//! error at runtime, and serving falls back to [`crate::runtime::sim`].
+
+#[cfg(feature = "pjrt")]
+pub use xla::*;
+
+#[cfg(not(feature = "pjrt"))]
+mod stub {
+    use std::fmt;
+
+    /// Error produced by every stub entry point.
+    #[derive(Debug)]
+    pub struct XlaError(pub String);
+
+    impl fmt::Display for XlaError {
+        fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+            f.write_str(&self.0)
+        }
+    }
+
+    impl std::error::Error for XlaError {}
+
+    fn unavailable() -> XlaError {
+        XlaError(
+            "built without the `pjrt` feature: PJRT execution is \
+             unavailable (serve through the SimBackend, or vendor the \
+             xla bindings and rebuild with --features pjrt)"
+                .to_string(),
+        )
+    }
+
+    /// Stub device buffer.
+    #[derive(Debug)]
+    pub struct PjRtBuffer;
+
+    /// Stub compiled executable.
+    #[derive(Debug)]
+    pub struct PjRtLoadedExecutable;
+
+    /// Stub host literal.
+    #[derive(Debug)]
+    pub struct Literal;
+
+    /// Stub HLO module proto.
+    #[derive(Debug)]
+    pub struct HloModuleProto;
+
+    /// Stub XLA computation.
+    #[derive(Debug)]
+    pub struct XlaComputation;
+
+    /// Element dtypes the runtime understands.
+    #[derive(Clone, Copy, Debug, PartialEq, Eq)]
+    pub enum ElementType {
+        F32,
+        S32,
+        Pred,
+    }
+
+    /// Stub array shape (dims + dtype).
+    #[derive(Debug)]
+    pub struct ArrayShape {
+        dims: Vec<i64>,
+        ty: ElementType,
+    }
+
+    impl ArrayShape {
+        pub fn dims(&self) -> &[i64] {
+            &self.dims
+        }
+
+        pub fn ty(&self) -> ElementType {
+            self.ty
+        }
+    }
+
+    /// Stub PJRT client: construction always fails, so no other stub
+    /// method is reachable at runtime.
+    #[derive(Debug)]
+    pub struct PjRtClient;
+
+    impl PjRtClient {
+        pub fn cpu() -> Result<PjRtClient, XlaError> {
+            Err(unavailable())
+        }
+
+        pub fn buffer_from_host_buffer<T>(
+            &self,
+            _data: &[T],
+            _dims: &[usize],
+            _device: Option<usize>,
+        ) -> Result<PjRtBuffer, XlaError> {
+            Err(unavailable())
+        }
+
+        pub fn compile(&self, _c: &XlaComputation)
+                       -> Result<PjRtLoadedExecutable, XlaError> {
+            Err(unavailable())
+        }
+    }
+
+    impl HloModuleProto {
+        pub fn from_text_file(_path: &str)
+                              -> Result<HloModuleProto, XlaError> {
+            Err(unavailable())
+        }
+    }
+
+    impl XlaComputation {
+        pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+            XlaComputation
+        }
+    }
+
+    impl PjRtLoadedExecutable {
+        pub fn execute_b(&self, _args: &[&PjRtBuffer])
+                         -> Result<Vec<Vec<PjRtBuffer>>, XlaError> {
+            Err(unavailable())
+        }
+    }
+
+    impl PjRtBuffer {
+        pub fn to_literal_sync(&self) -> Result<Literal, XlaError> {
+            Err(unavailable())
+        }
+    }
+
+    impl Literal {
+        pub fn array_shape(&self) -> Result<ArrayShape, XlaError> {
+            Err(unavailable())
+        }
+
+        pub fn to_tuple(&self) -> Result<Vec<Literal>, XlaError> {
+            Err(unavailable())
+        }
+
+        pub fn to_vec<T>(&self) -> Result<Vec<T>, XlaError> {
+            Err(unavailable())
+        }
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+
+        #[test]
+        fn stub_client_fails_loudly() {
+            let e = PjRtClient::cpu().unwrap_err();
+            assert!(e.to_string().contains("pjrt"));
+        }
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+pub use stub::*;

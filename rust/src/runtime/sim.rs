@@ -1,0 +1,466 @@
+//! Deterministic in-process simulation backend.
+//!
+//! A fake transformer for driving the continuous-batching coordinator
+//! at scale with no PJRT artifacts: logits are seeded per (token,
+//! position) from [`SplitMix64`] and shaped through the *real* EXAQ
+//! Algorithm-2 pipeline ([`softmax_algo2`]), so every simulated step
+//! exercises the paper's quantize + LUT kernel; per-step latency is
+//! charged to the shared [`Clock`] from the [`crate::cost`] cycle
+//! model, so TTFT / latency / occupancy metrics are exact and
+//! reproducible under a [`crate::util::clock::VirtualClock`].
+
+use std::rc::Rc;
+
+use crate::cost::{GemmPrecision, MachineModel, TransformerShape};
+use crate::exaq::lut::{LutExp, LutSum};
+use crate::exaq::quant::Quantizer;
+use crate::exaq::softmax::{softmax_algo2, Algo2Scratch};
+use crate::util::clock::Clock;
+use crate::util::error::{bail, Result};
+use crate::util::rng::SplitMix64;
+
+use super::backend::InferenceBackend;
+use super::engine::{DecodeState, QuantMode};
+use super::manifest::ModelConfig;
+use super::tensor::HostTensor;
+
+/// Architecture + behaviour of the simulated model.
+#[derive(Clone, Debug)]
+pub struct SimConfig {
+    /// Model name the scheduler addresses (anything else errors).
+    pub name: String,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+    pub vocab: usize,
+    /// Token id treated as end-of-sequence.
+    pub eos: i32,
+    /// Master seed for the per-position logit streams.
+    pub seed: u64,
+    /// Probability that a position's logits strongly prefer EOS —
+    /// drives the early-stopping chat scenarios (0.0 = organic only).
+    pub eos_bias: f64,
+    /// Bit-width of the Algo-2 pipeline shaping the logits (also the
+    /// softmax variant the latency model charges for when quantized).
+    pub shape_bits: u32,
+    /// Clip threshold of the shaping quantizer.
+    pub shape_clip: f32,
+    /// Simulated accelerator clock in cycles/second (converts the cost
+    /// model's cycles into seconds on the shared clock).
+    pub clock_hz: f64,
+    pub gemm_precision: GemmPrecision,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        Self {
+            name: "sim".to_string(),
+            n_layers: 2,
+            n_heads: 2,
+            head_dim: 4,
+            d_ff: 16,
+            max_seq: 64,
+            vocab: 64,
+            eos: 2,
+            seed: 0x5EED_CAFE,
+            eos_bias: 0.0,
+            shape_bits: 2,
+            shape_clip: -4.0,
+            clock_hz: 1.0e6,
+            gemm_precision: GemmPrecision::Bf16,
+        }
+    }
+}
+
+impl SimConfig {
+    fn d_model(&self) -> usize {
+        self.n_heads * self.head_dim
+    }
+
+    fn model_config(&self) -> ModelConfig {
+        let d = self.d_model();
+        ModelConfig {
+            name: self.name.clone(),
+            n_layers: self.n_layers,
+            d_model: d,
+            n_heads: self.n_heads,
+            d_ff: self.d_ff,
+            vocab_size: self.vocab,
+            max_seq: self.max_seq,
+            head_dim: self.head_dim,
+            n_params: self.n_layers
+                * (4 * d * d + 3 * d * self.d_ff)
+                + 2 * self.vocab * d,
+        }
+    }
+
+    fn shape(&self, batch: usize) -> TransformerShape {
+        TransformerShape {
+            layers: self.n_layers,
+            d_model: self.d_model(),
+            n_heads: self.n_heads,
+            d_ff: self.d_ff,
+            seq: self.max_seq,
+            batch,
+            vocab: self.vocab,
+        }
+    }
+}
+
+/// The simulation backend. See the module docs.
+pub struct SimBackend {
+    cfg: SimConfig,
+    machine: MachineModel,
+    clock: Rc<dyn Clock>,
+    quant: Quantizer,
+    lut_exp: LutExp,
+    lut_sum: LutSum,
+    scratch: Algo2Scratch,
+    /// Executed-step counters (inspected by benches/tests).
+    pub prefills: u64,
+    pub decode_steps: u64,
+}
+
+impl SimBackend {
+    pub fn new(cfg: SimConfig, clock: Rc<dyn Clock>) -> Self {
+        assert!((cfg.eos as usize) < cfg.vocab,
+                "eos id outside the simulated vocabulary");
+        assert!(cfg.vocab >= 8, "vocabulary too small to be interesting");
+        let quant = Quantizer::new(cfg.shape_bits, cfg.shape_clip);
+        let lut_exp = LutExp::build(&quant);
+        let lut_sum = LutSum::build(&quant);
+        Self {
+            cfg,
+            machine: MachineModel::default(),
+            clock,
+            quant,
+            lut_exp,
+            lut_sum,
+            scratch: Algo2Scratch::default(),
+            prefills: 0,
+            decode_steps: 0,
+        }
+    }
+
+    pub fn config(&self) -> &SimConfig {
+        &self.cfg
+    }
+
+    /// Seconds one batch-`b` prefill occupies the simulated device.
+    pub fn prefill_seconds(&self, batch: usize) -> f64 {
+        self.machine.prefill_cycles(self.cfg.shape(batch),
+                                    self.cfg.gemm_precision,
+                                    Some(self.cfg.shape_bits))
+            / self.cfg.clock_hz
+    }
+
+    /// Seconds one batched decode step occupies the simulated device.
+    pub fn decode_seconds(&self, batch: usize) -> f64 {
+        self.machine
+            .decode_step_cycles(self.cfg.shape(batch),
+                                self.cfg.gemm_precision,
+                                Some(self.cfg.shape_bits), batch,
+                                self.cfg.max_seq)
+            / self.cfg.clock_hz
+    }
+
+    fn seed_for(&self, token: i32, pos: usize) -> u64 {
+        self.cfg
+            .seed
+            .wrapping_add((token as u64)
+                .wrapping_mul(0x9E37_79B9_7F4A_7C15))
+            .wrapping_add((pos as u64)
+                .wrapping_mul(0xBF58_476D_1CE4_E5B9))
+    }
+
+    /// Fill one vocab-sized logit row for (last token, position):
+    /// seeded noise -> EXAQ Algo-2 softmax -> log-probabilities, with
+    /// an optional deterministic EOS boost.
+    fn logits_row(&mut self, token: i32, pos: usize, out: &mut [f32]) {
+        let mut rng = SplitMix64::new(self.seed_for(token, pos));
+        for x in out.iter_mut() {
+            *x = (rng.normal() as f32) * 2.0;
+        }
+        let n = out.len();
+        softmax_algo2(out, n, &self.quant, &self.lut_exp, &self.lut_sum,
+                      &mut self.scratch);
+        for x in out.iter_mut() {
+            *x = (*x).max(1e-30).ln();
+        }
+        if self.cfg.eos_bias > 0.0 && rng.uniform() < self.cfg.eos_bias {
+            out[self.cfg.eos as usize] += 16.0;
+        }
+    }
+
+    fn kv_shape(&self, batch: usize) -> [usize; 5] {
+        [self.cfg.n_layers, batch, self.cfg.n_heads, self.cfg.max_seq,
+         self.cfg.head_dim]
+    }
+
+    fn check_model(&self, model: &str) -> Result<()> {
+        if model != self.cfg.name {
+            bail!("SimBackend serves model '{}', not '{model}'",
+                  self.cfg.name);
+        }
+        Ok(())
+    }
+}
+
+impl InferenceBackend for SimBackend {
+    fn model_config(&self, model: &str) -> Result<ModelConfig> {
+        self.check_model(model)?;
+        Ok(self.cfg.model_config())
+    }
+
+    fn eos_token(&self) -> i32 {
+        self.cfg.eos
+    }
+
+    fn prefill(&mut self, model: &str, quant: QuantMode,
+               tokens: &HostTensor, c_vec: Option<&[f32]>)
+               -> Result<(HostTensor, DecodeState)> {
+        self.check_model(model)?;
+        if quant.needs_cvec() && c_vec.is_none() {
+            bail!("quant mode {quant:?} needs a clip vector");
+        }
+        if tokens.shape.len() != 2 {
+            bail!("prefill tokens must be [B, S], got {:?}",
+                  tokens.shape);
+        }
+        let (b, s) = (tokens.shape[0], tokens.shape[1]);
+        if b == 0 {
+            bail!("prefill needs at least one sequence");
+        }
+        if s != self.cfg.max_seq {
+            bail!("prefill seq {s} != simulated artifact seq {}",
+                  self.cfg.max_seq);
+        }
+        let toks = tokens.as_i32()?;
+        let v = self.cfg.vocab;
+
+        let mut logits = vec![0.0f32; b * s * v];
+        for bi in 0..b {
+            for p in 0..s {
+                let tok = toks[bi * s + p];
+                let row = &mut logits[(bi * s + p) * v
+                    ..(bi * s + p + 1) * v];
+                self.logits_row(tok, p, row);
+            }
+        }
+
+        // deterministic KV payload: a cheap per-sequence signature (the
+        // coordinator only routes these bytes, it never reads them);
+        // fold the whole prompt so distinct requests get distinct bytes
+        let shape = self.kv_shape(b);
+        let kv_len: usize = shape.iter().product();
+        let mut sig = self.cfg.seed ^ 0xD1CE;
+        for &t in toks {
+            sig = sig
+                .wrapping_mul(0x0100_0000_01B3)
+                .wrapping_add(t as u64);
+        }
+        let mut kv_rng = SplitMix64::new(sig);
+        let kc: Vec<f32> =
+            (0..kv_len).map(|_| kv_rng.uniform() as f32).collect();
+        let vc: Vec<f32> =
+            (0..kv_len).map(|_| kv_rng.uniform() as f32).collect();
+
+        self.prefills += 1;
+        self.clock.advance(self.prefill_seconds(b));
+        Ok((
+            HostTensor::f32(logits, &[b, s, v]),
+            DecodeState {
+                kc: HostTensor::f32(kc, &shape),
+                vc: HostTensor::f32(vc, &shape),
+            },
+        ))
+    }
+
+    fn decode(&mut self, model: &str, quant: QuantMode, token: &[i32],
+              pos: &[i32], state: &mut DecodeState,
+              c_vec: Option<&[f32]>) -> Result<HostTensor> {
+        self.check_model(model)?;
+        if quant.needs_cvec() && c_vec.is_none() {
+            bail!("quant mode {quant:?} needs a clip vector");
+        }
+        let b = token.len();
+        if pos.len() != b {
+            bail!("decode token/pos arity mismatch: {b} vs {}",
+                  pos.len());
+        }
+        let expect = self.kv_shape(b);
+        if state.kc.shape != expect {
+            bail!("decode state shape {:?} != expected {:?}",
+                  state.kc.shape, expect);
+        }
+        let v = self.cfg.vocab;
+        let mut logits = vec![0.0f32; b * v];
+        for (i, (&tok, &p)) in token.iter().zip(pos).enumerate() {
+            let row = &mut logits[i * v..(i + 1) * v];
+            self.logits_row(tok, p as usize, row);
+        }
+
+        // simulate the cache write: stamp the token at its position in
+        // layer 0 / head 0 so tests can observe slot plumbing
+        let (heads, seq, hd) =
+            (self.cfg.n_heads, self.cfg.max_seq, self.cfg.head_dim);
+        if let Ok(kc) = state.kc.as_f32_mut() {
+            for (i, &p) in pos.iter().enumerate() {
+                let p = (p as usize).min(seq - 1);
+                kc[(i * heads * seq + p) * hd] = token[i] as f32;
+            }
+        }
+
+        self.decode_steps += 1;
+        self.clock.advance(self.decode_seconds(b));
+        Ok(HostTensor::f32(logits, &[b, v]))
+    }
+
+    fn prefill_stats(&mut self, model: &str, tokens: &HostTensor,
+                     lengths: &[i32])
+                     -> Result<(HostTensor, HostTensor)> {
+        self.check_model(model)?;
+        let (logits, _) =
+            self.prefill(model, QuantMode::None, tokens, None)?;
+        let count: f64 = lengths.iter().map(|&l| l as f64).sum();
+        let mut stats = Vec::with_capacity(self.cfg.n_layers * 4);
+        for l in 0..self.cfg.n_layers {
+            let sigma = 0.8 + 0.05 * l as f64;
+            let mean = -1.5 - 0.1 * l as f64;
+            stats.push(count as f32);
+            stats.push(mean as f32);
+            stats.push((count * sigma * sigma) as f32);
+            stats.push((mean - 4.0 * sigma) as f32);
+        }
+        let stats =
+            HostTensor::f32(stats, &[self.cfg.n_layers, 4]);
+        Ok((logits, stats))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::clock::VirtualClock;
+
+    fn backend() -> (SimBackend, Rc<VirtualClock>) {
+        let clock = Rc::new(VirtualClock::new());
+        let b = SimBackend::new(SimConfig::default(), clock.clone());
+        (b, clock)
+    }
+
+    fn prompt_tensor(cfg: &SimConfig) -> HostTensor {
+        let mut toks = vec![1i32; cfg.max_seq];
+        for (i, t) in toks.iter_mut().enumerate() {
+            *t = 4 + (i as i32 % 7);
+        }
+        HostTensor::i32(toks, &[1, cfg.max_seq])
+    }
+
+    #[test]
+    fn prefill_shapes_and_advances_clock() {
+        let (mut b, clock) = backend();
+        let tokens = prompt_tensor(&b.cfg.clone());
+        let (logits, state) =
+            b.prefill("sim", QuantMode::None, &tokens, None).unwrap();
+        assert_eq!(logits.shape, vec![1, 64, 64]);
+        assert_eq!(state.kc.shape, vec![2, 1, 2, 64, 4]);
+        assert!(clock.now() > 0.0, "prefill must cost simulated time");
+        assert_eq!(b.prefills, 1);
+    }
+
+    #[test]
+    fn logit_rows_are_log_probabilities() {
+        let (mut b, _clock) = backend();
+        let mut row = vec![0.0f32; 64];
+        b.logits_row(7, 3, &mut row);
+        let total: f32 = row.iter().map(|&x| x.exp()).sum();
+        assert!((total - 1.0).abs() < 1e-3, "sum exp(logit) = {total}");
+    }
+
+    #[test]
+    fn same_inputs_same_logits() {
+        let (mut a, _) = backend();
+        let (mut b, _) = backend();
+        let mut ra = vec![0.0f32; 64];
+        let mut rb = vec![0.0f32; 64];
+        a.logits_row(11, 5, &mut ra);
+        b.logits_row(11, 5, &mut rb);
+        assert_eq!(ra, rb);
+        // distinct positions decorrelate
+        b.logits_row(11, 6, &mut ra);
+        assert_ne!(ra, rb);
+    }
+
+    #[test]
+    fn eos_bias_forces_eos_argmax_somewhere() {
+        let clock = Rc::new(VirtualClock::new());
+        let cfg = SimConfig { eos_bias: 0.5, ..SimConfig::default() };
+        let mut b = SimBackend::new(cfg, clock);
+        let mut hits = 0;
+        let mut row = vec![0.0f32; 64];
+        for pos in 0..32 {
+            b.logits_row(9, pos, &mut row);
+            let argmax = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i)
+                .unwrap();
+            if argmax == 2 {
+                hits += 1;
+            }
+        }
+        assert!(hits >= 8, "eos bias too weak: {hits}/32");
+    }
+
+    #[test]
+    fn rejects_unknown_model_and_bad_shapes() {
+        let (mut b, _) = backend();
+        let tokens = prompt_tensor(&b.cfg.clone());
+        assert!(b.prefill("nope", QuantMode::None, &tokens, None)
+            .is_err());
+        let short = HostTensor::i32(vec![1; 8], &[1, 8]);
+        assert!(b.prefill("sim", QuantMode::None, &short, None)
+            .is_err());
+        assert!(b
+            .prefill("sim", QuantMode::Static { bits: 2 }, &tokens,
+                     None)
+            .is_err());
+    }
+
+    #[test]
+    fn decode_stamps_cache_and_costs_time() {
+        let (mut b, clock) = backend();
+        let mut state = DecodeState {
+            kc: HostTensor::zeros_f32(&b.kv_shape(8)),
+            vc: HostTensor::zeros_f32(&b.kv_shape(8)),
+        };
+        let t0 = clock.now();
+        let logits = b
+            .decode("sim", QuantMode::None, &[5; 8],
+                    &[3, 3, 3, 3, 3, 3, 3, 3], &mut state, None)
+            .unwrap();
+        assert_eq!(logits.shape, vec![8, 64]);
+        assert!(clock.now() > t0);
+        let kc = state.kc.as_f32().unwrap();
+        // slot 2, layer 0, head 0, pos 3, dim 0
+        assert_eq!(kc[(2 * 2 * 64 + 3) * 4], 5.0);
+    }
+
+    #[test]
+    fn prefill_stats_rows_are_plausible() {
+        let (mut b, _) = backend();
+        let tokens = prompt_tensor(&b.cfg.clone());
+        let (_, stats) =
+            b.prefill_stats("sim", &tokens, &[64]).unwrap();
+        assert_eq!(stats.shape, vec![2, 4]);
+        for row in stats.as_f32().unwrap().chunks(4) {
+            assert!(row[0] > 0.0);
+            assert!(row[2] >= 0.0);
+            assert!(row[3] <= 0.0);
+        }
+    }
+}

@@ -1,6 +1,8 @@
 //! Host-side tensors crossing the PJRT boundary.
 
-use anyhow::{bail, Result};
+use crate::util::error::{bail, Result};
+
+use super::pjrt as xla;
 
 /// A dense host tensor (f32 or i32), row-major.
 #[derive(Clone, Debug, PartialEq)]
@@ -40,6 +42,13 @@ impl HostTensor {
 
     pub fn as_f32(&self) -> Result<&[f32]> {
         match &self.data {
+            TensorData::F32(v) => Ok(v),
+            TensorData::I32(_) => bail!("tensor is i32, expected f32"),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
+        match &mut self.data {
             TensorData::F32(v) => Ok(v),
             TensorData::I32(_) => bail!("tensor is i32, expected f32"),
         }

@@ -4,7 +4,7 @@
 use std::io::Read;
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
+use crate::util::error::{bail, Context, Result};
 
 const MAGIC: &[u8; 4] = b"TLW1";
 

@@ -1,0 +1,135 @@
+//! Minimal `anyhow`-style error substrate.
+//!
+//! The build image vendors no crates, so the whole workspace compiles
+//! dependency-free against this module: a message-carrying [`Error`], a
+//! defaulted [`Result`] alias, the [`Context`] extension trait, and the
+//! [`anyhow!`]/[`bail!`] macros with their familiar spelling.
+//!
+//! Like `anyhow::Error`, [`Error`] deliberately does NOT implement
+//! `std::error::Error` — that keeps the blanket `From<E: Error>` impl
+//! (which powers `?` on `io::Error`, parse errors, `JsonError`, …)
+//! coherent with the reflexive `From<T> for T`.
+
+use std::fmt;
+
+/// A human-readable error message, possibly built up from context.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg<M: fmt::Display>(m: M) -> Self {
+        Self { msg: m.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Self {
+        Error::msg(e)
+    }
+}
+
+/// Crate-wide result type (error defaults to [`Error`]).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `.context(..)` / `.with_context(|| ..)` in the `anyhow` idiom.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F)
+                                                       -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{ctx}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F)
+                                                       -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F)
+                                                       -> Result<T> {
+        self.ok_or_else(|| Error::msg(f().to_string()))
+    }
+}
+
+/// `anyhow!("...")` — format a message into an [`Error`] value.
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// `bail!("...")` — early-return `Err(anyhow!(...))`.
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::util::error::Error::msg(format!($($arg)*)))
+    };
+}
+
+pub use anyhow;
+pub use bail;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<String> {
+        let s = std::fs::read_to_string("/definitely/not/a/file")?;
+        Ok(s)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let e = io_fail().unwrap_err();
+        assert!(!e.to_string().is_empty());
+    }
+
+    #[test]
+    fn context_chains_messages() {
+        let r: std::result::Result<(), std::fmt::Error> =
+            Err(std::fmt::Error);
+        let e = r.context("outer").unwrap_err();
+        assert!(e.to_string().starts_with("outer: "));
+        let o: Option<u32> = None;
+        assert_eq!(o.with_context(|| "missing").unwrap_err().to_string(),
+                   "missing");
+    }
+
+    #[test]
+    fn macros_format_and_bail() {
+        fn f(x: u32) -> Result<u32> {
+            if x == 0 {
+                bail!("zero is not allowed (got {x})");
+            }
+            Err(anyhow!("always fails with {x}"))
+        }
+        assert_eq!(f(0).unwrap_err().to_string(),
+                   "zero is not allowed (got 0)");
+        assert_eq!(f(3).unwrap_err().to_string(), "always fails with 3");
+    }
+}

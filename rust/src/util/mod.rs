@@ -1,6 +1,11 @@
-//! Small shared substrates: deterministic RNG and a dependency-free JSON
+//! Small shared substrates: deterministic RNG, a dependency-free JSON
 //! parser/writer (the image has no serde; artifacts/manifest.json and
-//! calibration.json are parsed with [`json`]).
+//! calibration.json are parsed with [`json`]), the `anyhow`-style
+//! [`error`] module every layer's `Result` flows through, and the
+//! [`clock`] abstraction (wall vs virtual time) the serving coordinator
+//! is tested against.
 
+pub mod clock;
+pub mod error;
 pub mod json;
 pub mod rng;

@@ -1,0 +1,248 @@
+//! Serving stress suite: thousands of simulated requests through the
+//! REAL `Scheduler`/serve loops via the deterministic `SimBackend` on a
+//! `VirtualClock`. No artifact bundle, no skips — this is the
+//! always-on counterpart of `engine_integration.rs` (which needs the
+//! PJRT bundle and skips without it).
+//!
+//! Covered here: slot accounting, FIFO admission, batch occupancy,
+//! determinism across reruns (byte-identical token streams), early-EOS
+//! chat behaviour, long-prompt truncation, and percentile latency
+//! under the virtual clock.
+
+use std::collections::HashSet;
+use std::rc::Rc;
+
+use exaq_repro::coordinator::{serve_trace, workload, Request, Response,
+                              Scenario, ServeConfig, WorkloadSpec};
+use exaq_repro::model::SamplingParams;
+use exaq_repro::runtime::{QuantMode, SimBackend, SimConfig};
+use exaq_repro::util::clock::VirtualClock;
+
+fn serve_cfg(decode_batch: usize) -> ServeConfig {
+    ServeConfig {
+        model: "sim".into(),
+        quant: QuantMode::None,
+        c_vec: None,
+        decode_batch,
+    }
+}
+
+/// Run one scenario end to end on a fresh backend + virtual clock.
+fn run(scenario: Scenario, n: usize, workload_seed: u64, eos_bias: f64,
+       decode_batch: usize)
+       -> (Vec<Response>, f64, exaq_repro::coordinator::Scheduler) {
+    let clock = Rc::new(VirtualClock::new());
+    let sim_cfg = SimConfig { eos_bias, ..SimConfig::default() };
+    let spec = WorkloadSpec::new(scenario, n, workload_seed,
+                                 sim_cfg.vocab, sim_cfg.max_seq);
+    let mut sim = SimBackend::new(sim_cfg, clock.clone());
+    let trace = workload::generate(&spec);
+    serve_trace(&mut sim, &serve_cfg(decode_batch), trace, clock)
+        .expect("serve_trace must not fail")
+}
+
+#[test]
+fn steady_thousand_requests_complete_with_clean_accounting() {
+    let n = 1000;
+    let (resps, wall, sched) =
+        run(Scenario::Steady { rate: 500.0 }, n, 11, 0.0, 8);
+
+    assert_eq!(resps.len(), n, "every request must complete");
+    let ids: HashSet<u64> = resps.iter().map(|r| r.id).collect();
+    assert_eq!(ids.len(), n, "response ids must be unique");
+    for r in &resps {
+        assert!(!r.tokens.is_empty(), "request {} got no tokens", r.id);
+        assert!(r.tokens.len() <= 17, "request {} overshot", r.id);
+        assert!(r.total_latency >= r.ttft, "latency < ttft on {}", r.id);
+        assert!(r.ttft > 0.0);
+    }
+    assert!(wall > 0.0, "virtual time must have advanced");
+
+    let m = &sched.metrics;
+    assert_eq!(m.requests_in, n as u64);
+    assert_eq!(m.requests_done, n as u64);
+    assert_eq!(m.prefills, n as u64, "batch-1 prefill per request");
+    assert_eq!(m.ttft.count(), n as u64);
+    assert_eq!(m.total_latency.count(), n as u64);
+    let toks: u64 = resps.iter().map(|r| r.tokens.len() as u64).sum();
+    // decode produces every token except each request's first
+    assert_eq!(m.decode_tokens, toks - n as u64);
+
+    // slot accounting: pool fully drained, nothing leaked
+    assert_eq!(sched.active_count(), 0);
+    assert_eq!(sched.pending_count(), 0);
+    assert_eq!(sched.pool().in_use(), 0);
+    assert_eq!(sched.pool().available(), 8);
+}
+
+#[test]
+fn same_seed_runs_are_byte_identical() {
+    // stochastic EXAQ-sampled workload — the hardest determinism case
+    let scenario = Scenario::MixedLengths { rate: 400.0 };
+    let (mut a, wall_a, _) = run(scenario, 300, 21, 0.05, 8);
+    let (mut b, wall_b, _) = run(scenario, 300, 21, 0.05, 8);
+    a.sort_by_key(|r| r.id);
+    b.sort_by_key(|r| r.id);
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.id, y.id);
+        assert_eq!(x.tokens, y.tokens,
+                   "token stream diverged on request {}", x.id);
+        assert_eq!(x.ttft, y.ttft, "ttft diverged on request {}", x.id);
+        assert_eq!(x.total_latency, y.total_latency);
+    }
+    assert_eq!(wall_a, wall_b, "virtual wall time must be exact");
+
+    // a different workload seed must actually change the streams
+    let (mut c, _, _) = run(scenario, 300, 22, 0.05, 8);
+    c.sort_by_key(|r| r.id);
+    assert!(a.iter().zip(&c).any(|(x, y)| x.tokens != y.tokens),
+            "different seeds produced identical streams");
+}
+
+#[test]
+fn burst_admission_is_fifo_and_saturates_the_batch() {
+    let n = 128;
+    let (mut resps, _, sched) =
+        run(Scenario::Burst { n_bursts: 1, gap: 0.0 }, n, 31, 0.0, 8);
+    assert_eq!(resps.len(), n);
+    resps.sort_by_key(|r| r.id);
+
+    // FIFO admission: all requests arrive at t=0, so first-token times
+    // must be non-decreasing in submission order (each simulated
+    // prefill strictly advances the clock)
+    let mut prev = 0.0;
+    for r in &resps {
+        assert!(r.ttft >= prev,
+                "request {} admitted out of FIFO order: ttft {} < {}",
+                r.id, r.ttft, prev);
+        prev = r.ttft;
+    }
+
+    // with 128 pending and 8 slots, decode must run near-full
+    let occ = sched.metrics.mean_occupancy();
+    assert!(occ > 5.0, "mean occupancy {occ} too low under burst");
+    assert!(occ <= 8.0);
+}
+
+#[test]
+fn virtual_clock_latency_percentiles_are_coherent() {
+    let (_, _, sched) =
+        run(Scenario::Burst { n_bursts: 4, gap: 0.05 }, 256, 41, 0.0,
+            8);
+    for h in [&sched.metrics.ttft, &sched.metrics.total_latency] {
+        let mut prev = 0.0;
+        for q in [0.1, 0.5, 0.9, 0.99, 1.0] {
+            let v = h.quantile(q);
+            assert!(v >= prev, "quantile({q}) = {v} < {prev}");
+            assert!(v > 0.0, "quantile({q}) must be positive");
+            prev = v;
+        }
+        assert!(h.mean() > 0.0);
+        assert!(h.max() >= h.mean());
+    }
+    // queueing must be visible: the p99 TTFT of a 64-deep burst is far
+    // above the unqueued prefill latency (~6 ms simulated)
+    assert!(sched.metrics.ttft.quantile(0.99)
+            > sched.metrics.ttft.quantile(0.1));
+}
+
+#[test]
+fn chat_scenario_stops_early_on_eos() {
+    let n = 200;
+    let (resps, _, _) =
+        run(Scenario::ChatEarlyEos { rate: 1000.0 }, n, 51, 0.25, 8);
+    assert_eq!(resps.len(), n);
+    let budget = 32; // max_seq / 2 from the workload generator
+    let eos_ended = resps
+        .iter()
+        .filter(|r| r.tokens.last() == Some(&2))
+        .count();
+    assert!(eos_ended > n / 4,
+            "only {eos_ended}/{n} chats ended on EOS");
+    for r in &resps {
+        assert!(r.tokens.len() <= budget);
+    }
+    let mean_len: f64 = resps.iter().map(|r| r.tokens.len() as f64)
+        .sum::<f64>() / n as f64;
+    assert!(mean_len < budget as f64 * 0.75,
+            "chat turns are not stopping early (mean {mean_len})");
+}
+
+#[test]
+fn long_prompts_are_truncated_not_crashed() {
+    let n = 150;
+    let (resps, _, sched) =
+        run(Scenario::LongPromptTail { rate: 300.0 }, n, 61, 0.0, 8);
+    assert_eq!(resps.len(), n);
+    let max_seq = SimConfig::default().max_seq;
+    let mut over_context = 0;
+    for r in &resps {
+        assert!(!r.tokens.is_empty());
+        if r.prompt_len >= max_seq - 1 {
+            over_context += 1;
+            // the KV is full after the clamped prefill: exactly the
+            // first sampled token comes back
+            assert_eq!(r.tokens.len(), 1,
+                       "over-context request {} decoded past the \
+                        context", r.id);
+        }
+    }
+    assert!(over_context > 0,
+            "workload should contain over-context prompts");
+    assert_eq!(sched.pool().in_use(), 0);
+}
+
+#[test]
+fn sparse_arrivals_idle_the_scheduler_between_requests() {
+    let n = 40;
+    let rate = 5.0; // one request every 200 simulated ms
+    let (resps, wall, sched) =
+        run(Scenario::Steady { rate }, n, 71, 0.0, 8);
+    assert_eq!(resps.len(), n);
+    // the clock must have skipped across the idle gaps
+    assert!(wall >= (n - 1) as f64 / rate,
+            "wall {wall} shorter than the arrival span");
+    // no queueing: every request is prefilled right after it arrives
+    let p99 = sched.metrics.ttft.quantile(0.99);
+    assert!(p99 < 0.05, "unqueued p99 ttft {p99} too high");
+    // and the decode batch stays mostly empty
+    let occ = sched.metrics.mean_occupancy();
+    assert!(occ < 2.0, "sparse arrivals should not batch up ({occ})");
+}
+
+#[test]
+fn slot_accounting_holds_on_every_tick() {
+    let clock = Rc::new(VirtualClock::new());
+    let sim_cfg = SimConfig::default();
+    let mut sim = SimBackend::new(sim_cfg, clock.clone());
+    let mut sched = exaq_repro::coordinator::Scheduler::new(
+        &sim, "sim", QuantMode::None, None, 8, clock.clone())
+        .unwrap();
+    for id in 0..50u64 {
+        sched.submit(Request {
+            id,
+            prompt: vec![4 + (id % 13) as i32; 3 + (id % 5) as usize],
+            max_new_tokens: 2 + (id % 7) as usize,
+            params: if id % 2 == 0 {
+                SamplingParams::greedy()
+            } else {
+                SamplingParams::exaq(0.9, 2, -4.0)
+            },
+        });
+    }
+    let mut done = 0usize;
+    let mut ticks = 0usize;
+    while sched.has_work() {
+        done += sched.tick(&mut sim).unwrap().len();
+        ticks += 1;
+        assert!(ticks < 10_000, "scheduler stopped making progress");
+        let pool = sched.pool();
+        assert_eq!(pool.in_use(), sched.active_count(),
+                   "tick {ticks}: pool/active divergence");
+        assert_eq!(pool.in_use() + pool.available(), pool.capacity(),
+                   "tick {ticks}: slots leaked");
+    }
+    assert_eq!(done, 50);
+    assert_eq!(sched.metrics.requests_done, 50);
+}
