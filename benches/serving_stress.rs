@@ -1,27 +1,74 @@
 //! Serving stress bench — drives the real continuous-batching
 //! scheduler through the deterministic SimBackend across the scenario
 //! mixes, reporting simulated latency percentiles plus host-side
-//! scheduler throughput (ticks of pure coordinator work per second).
+//! scheduler throughput (ticks of pure coordinator work per second),
+//! and compares the decode softmax kernel modes (per-row scalar vs
+//! batched bit-packed plane) at M ∈ {2, 3, 4}.
 //!
 //!     cargo bench --bench serving_stress
 //!
-//! No artifacts required; numbers are reproducible per seed.
+//! No artifacts required; numbers are reproducible per seed (the two
+//! kernel modes are bit-identical, so they serve byte-identical token
+//! streams — only host time differs). `EXAQ_BENCH_REQUESTS` overrides
+//! the per-scenario request count (CI smoke uses a small value).
+//! Emits `BENCH_serving.json` for the perf trajectory.
 
 use std::rc::Rc;
 use std::time::Instant;
 
 use exaq_repro::coordinator::{serve_trace, workload, Scenario,
                               ServeConfig, WorkloadSpec};
-use exaq_repro::report::{f as fnum, Table};
+use exaq_repro::report::{f as fnum, jnum, jstr, BenchJson, Table};
 use exaq_repro::runtime::{QuantMode, SimBackend, SimConfig};
 use exaq_repro::util::clock::VirtualClock;
 use exaq_repro::util::error::Result;
 
+fn env_requests(default: usize) -> usize {
+    std::env::var("EXAQ_BENCH_REQUESTS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or(default)
+}
+
+/// Run one scenario; returns (total tokens, sim seconds, host seconds,
+/// p50 ttft, p99 ttft, p99 latency, occupancy).
+fn run_scenario(
+    scenario: Scenario, n: usize, sim_cfg: SimConfig,
+) -> Result<(usize, f64, f64, f64, f64, f64, f64)> {
+    let clock = Rc::new(VirtualClock::new());
+    let spec = WorkloadSpec::new(scenario, n, 7, sim_cfg.vocab,
+                                 sim_cfg.max_seq);
+    let mut sim = SimBackend::new(sim_cfg, clock.clone());
+    let cfg = ServeConfig {
+        model: "sim".into(),
+        quant: QuantMode::None,
+        c_vec: None,
+        decode_batch: 8,
+    };
+    let trace = workload::generate(&spec);
+    let host0 = Instant::now();
+    let (resps, sim_secs, sched) =
+        serve_trace(&mut sim, &cfg, trace, clock)?;
+    let host = host0.elapsed().as_secs_f64();
+    assert_eq!(resps.len(), n, "lost requests");
+    let toks: usize = resps.iter().map(|r| r.tokens.len()).sum();
+    let m = &sched.metrics;
+    Ok((toks, sim_secs, host, m.ttft.quantile(0.5),
+        m.ttft.quantile(0.99), m.total_latency.quantile(0.99),
+        m.mean_occupancy()))
+}
+
 fn main() -> Result<()> {
-    let n = 2000usize;
+    let n = env_requests(2000);
+    let mut out = BenchJson::new("serving");
+    out.meta("requests", jnum(n as f64));
+    out.meta("decode_batch", jnum(8.0));
+
+    // ---- scenario sweep (batched kernel, the serving default) ------
     let mut t = Table::new(
         &format!("Serving stress — {n} simulated requests per \
-                  scenario, decode batch 8"),
+                  scenario, decode batch 8, batched softmax"),
         &["scenario", "sim s", "sim tok/s", "p50 ttft", "p99 ttft",
           "p99 latency", "occupancy", "host s", "host tok/s"]);
     for (name, scenario, eos_bias) in [
@@ -31,39 +78,81 @@ fn main() -> Result<()> {
         ("mixed", Scenario::MixedLengths { rate: 400.0 }, 0.0),
         ("chat", Scenario::ChatEarlyEos { rate: 400.0 }, 0.2),
     ] {
-        let clock = Rc::new(VirtualClock::new());
         let sim_cfg = SimConfig { eos_bias, ..SimConfig::default() };
-        let spec = WorkloadSpec::new(scenario, n, 7, sim_cfg.vocab,
-                                     sim_cfg.max_seq);
-        let mut sim = SimBackend::new(sim_cfg, clock.clone());
-        let cfg = ServeConfig {
-            model: "sim".into(),
-            quant: QuantMode::None,
-            c_vec: None,
-            decode_batch: 8,
-        };
-        let trace = workload::generate(&spec);
-        let host0 = Instant::now();
-        let (resps, sim_secs, sched) =
-            serve_trace(&mut sim, &cfg, trace, clock)?;
-        let host = host0.elapsed().as_secs_f64();
-        assert_eq!(resps.len(), n, "{name}: lost requests");
-        let toks: usize = resps.iter().map(|r| r.tokens.len()).sum();
-        let m = &sched.metrics;
+        let (toks, sim_secs, host, p50, p99, lat99, occ) =
+            run_scenario(scenario, n, sim_cfg)?;
         t.row(&[
             name.to_string(),
             fnum(sim_secs, 3),
             fnum(toks as f64 / sim_secs.max(1e-12), 0),
-            fnum(m.ttft.quantile(0.5), 4),
-            fnum(m.ttft.quantile(0.99), 4),
-            fnum(m.total_latency.quantile(0.99), 4),
-            fnum(m.mean_occupancy(), 2),
+            fnum(p50, 4),
+            fnum(p99, 4),
+            fnum(lat99, 4),
+            fnum(occ, 2),
             fnum(host, 3),
             fnum(toks as f64 / host.max(1e-12), 0),
         ]);
+        out.result(&[
+            ("kind", jstr("scenario")),
+            ("scenario", jstr(name)),
+            ("tokens", jnum(toks as f64)),
+            ("sim_s", jnum(sim_secs)),
+            ("host_s", jnum(host)),
+            ("p99_ttft", jnum(p99)),
+            ("occupancy", jnum(occ)),
+        ]);
     }
     println!("{}", t.to_markdown());
+
+    // ---- decode softmax kernel: scalar vs batched, M ∈ {2,3,4} -----
+    let n_kernel = n / 4 + 1;
+    let mut k = Table::new(
+        &format!("Decode softmax kernel — per-row scalar vs batched \
+                  bit-packed plane ({n_kernel} steady requests)"),
+        &["bits", "scalar host s", "batched host s", "speedup",
+          "tokens (equal by construction)"]);
+    for bits in [2u32, 3, 4] {
+        let mut host = [0.0f64; 2];
+        let mut toks = [0usize; 2];
+        for (i, batched) in [(0usize, false), (1usize, true)] {
+            let sim_cfg = SimConfig {
+                shape_bits: bits,
+                batched_softmax: batched,
+                ..SimConfig::default()
+            };
+            let (tk, _sim, h, ..) = run_scenario(
+                Scenario::Steady { rate: 400.0 }, n_kernel, sim_cfg)?;
+            host[i] = h;
+            toks[i] = tk;
+        }
+        assert_eq!(toks[0], toks[1],
+                   "kernel modes must serve identical tokens");
+        k.row(&[
+            bits.to_string(),
+            fnum(host[0], 3),
+            fnum(host[1], 3),
+            format!("{:.2}x", host[0] / host[1].max(1e-12)),
+            toks[0].to_string(),
+        ]);
+        out.result(&[
+            ("kind", jstr("kernel_mode")),
+            ("bits", jnum(bits as f64)),
+            ("scalar_host_s", jnum(host[0])),
+            ("batched_host_s", jnum(host[1])),
+            ("batched_speedup",
+             jnum(host[0] / host[1].max(1e-12))),
+            ("tokens", jnum(toks[0] as f64)),
+        ]);
+    }
+    println!("{}", k.to_markdown());
+
     let _ = exaq_repro::report::write_csv(
         "reports/serving_stress.csv", &t);
+    let _ = exaq_repro::report::write_csv(
+        "reports/serving_kernel_modes.csv", &k);
+    match out.write() {
+        Ok(path) => println!("bench telemetry -> {path}"),
+        Err(e) => eprintln!("failed to write bench json: {e}"),
+    }
     Ok(())
 }

@@ -1,19 +1,23 @@
-//! Table 3 bench — softmax runtime: Algorithm 1 (original) vs
-//! Algorithm 2 (EXAQ LUT) wall-clock on the Rust hot path, plus the
-//! cycle-model accounting. Regenerates the paper's 3.274ms -> 2.066ms
-//! (36.9%) comparison in shape.
+//! Table 3 bench — softmax runtime: Algorithm 1 (original), per-row
+//! scalar Algorithm 2, and the batched bit-packed plane kernel
+//! (`BatchSoftmax::softmax_rows`) wall-clock on the Rust hot path,
+//! plus the cycle-model accounting. Regenerates the paper's
+//! 3.274ms -> 2.066ms (36.9%) comparison in shape and measures the
+//! packed-plane speedup over the scalar path (acceptance floor: 1.5x
+//! at M = 2 on 256x256).
 //!
 //! Hand-rolled harness (the image has no criterion): warmup + N timed
-//! repetitions, median-of-means reporting.
+//! repetitions, best-of-5 reporting. `EXAQ_BENCH_REPS` overrides the
+//! rep count (CI smoke runs with 1). Emits `BENCH_softmax.json` for
+//! the perf trajectory.
 
 use std::time::Instant;
 
 use exaq_repro::cost::CycleTable;
-use exaq_repro::exaq::lut::{LutExp, LutSum};
-use exaq_repro::exaq::quant::Quantizer;
+use exaq_repro::exaq::batched::BatchSoftmax;
 use exaq_repro::exaq::softmax::{softmax_algo1, softmax_algo2,
                                 Algo2Scratch};
-use exaq_repro::report::{f as fnum, pct, Table};
+use exaq_repro::report::{f as fnum, jnum, jstr, pct, BenchJson, Table};
 use exaq_repro::util::rng::SplitMix64;
 
 fn bench<F: FnMut()>(mut f: F, reps: usize) -> f64 {
@@ -31,53 +35,108 @@ fn bench<F: FnMut()>(mut f: F, reps: usize) -> f64 {
     best
 }
 
+fn env_reps(default: usize) -> usize {
+    std::env::var("EXAQ_BENCH_REPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .filter(|&r| r > 0)
+        .unwrap_or(default)
+}
+
 fn main() {
     let mut rng = SplitMix64::new(1);
     let c = -6.0f32;
+    let reps = env_reps(8);
 
     let mut t = Table::new(
-        "Table 3 — softmax runtime, Algo.1 vs Algo.2 (wall-clock, Rust)",
-        &["rows x len", "bits", "algo1 (us)", "algo2 (us)", "saving",
+        "Table 3 — softmax runtime, Algo.1 vs Algo.2 scalar vs batched \
+         bit-packed (wall-clock, Rust)",
+        &["rows x len", "bits", "algo1 (us)", "scalar a2 (us)",
+          "batched a2 (us)", "batched/scalar", "saving vs a1",
           "cycle-model saving", "accum speedup (model)"]);
+    let mut out = BenchJson::new("softmax");
+    out.meta("reps", jnum(reps as f64));
+    out.meta("clip", jnum(c as f64));
 
     for (rows, len) in [(32usize, 2048usize), (64, 1024), (256, 256)] {
         let base: Vec<f32> = (0..rows * len)
             .map(|_| rng.normal() as f32 * 2.0)
             .collect();
         for bits in [2u32, 3, 4] {
-            let q = Quantizer::new(bits, c);
-            let le = LutExp::build(&q);
-            let ls = LutSum::build(&q);
+            let mut engine = BatchSoftmax::new(bits, c);
+            let (q, le, ls) = {
+                let (q, le, ls) = engine.tables();
+                (q.clone(), le.clone(), ls.clone())
+            };
             let mut scratch = Algo2Scratch::default();
 
+            // Each variant re-softmaxes its own output: the kernels
+            // are branch-free over lane values, so per-call work is
+            // data-independent and the timed region is pure kernel
+            // (no plane memcpy diluting the comparison).
             let mut buf = base.clone();
             let a1 = bench(
                 || {
-                    buf.copy_from_slice(&base);
                     for r in buf.chunks_mut(len) {
                         softmax_algo1(r, len);
                     }
                 },
-                8,
+                reps,
             );
-            let a2 = bench(
+            buf.copy_from_slice(&base);
+            let scalar = bench(
                 || {
-                    buf.copy_from_slice(&base);
                     for r in buf.chunks_mut(len) {
                         softmax_algo2(r, len, &q, &le, &ls, &mut scratch);
                     }
                 },
-                8,
+                reps,
             );
+            buf.copy_from_slice(&base);
+            let batched = bench(
+                || {
+                    engine.softmax_rows(&mut buf, rows, len, &[]);
+                },
+                reps,
+            );
+            // the two Algo-2 paths must agree bit-for-bit (the bench
+            // would otherwise compare different arithmetic)
+            {
+                let mut sb = base.clone();
+                for r in sb.chunks_mut(len) {
+                    softmax_algo2(r, len, &q, &le, &ls, &mut scratch);
+                }
+                let mut bb = base.clone();
+                engine.softmax_rows(&mut bb, rows, len, &[]);
+                assert_eq!(sb, bb,
+                           "scalar/batched mismatch at bits={bits}");
+            }
             let cycles = CycleTable::default();
             t.row(&[
                 format!("{rows}x{len}"),
                 bits.to_string(),
                 fnum(a1 * 1e6, 1),
-                fnum(a2 * 1e6, 1),
-                pct((a1 - a2) / a1),
+                fnum(scalar * 1e6, 1),
+                fnum(batched * 1e6, 1),
+                format!("{:.2}x", scalar / batched.max(1e-12)),
+                pct((a1 - batched) / a1.max(1e-12)),
                 pct(cycles.softmax_saving(len, bits)),
-                fnum(cycles.accumulation_speedup(len, bits), 1),
+                fnum(cycles.accumulation_speedup_grouped(
+                    len, engine.group()), 1),
+            ]);
+            out.result(&[
+                ("rows", jnum(rows as f64)),
+                ("len", jnum(len as f64)),
+                ("bits", jnum(bits as f64)),
+                ("group", jnum(engine.group() as f64)),
+                ("algo1_us", jnum(a1 * 1e6)),
+                ("scalar_us", jnum(scalar * 1e6)),
+                ("batched_us", jnum(batched * 1e6)),
+                // guarded: a coarse timer at EXAQ_BENCH_REPS=1 could
+                // report 0, and inf would not serialise as valid JSON
+                ("batched_speedup",
+                 jnum(scalar / batched.max(1e-12))),
+                ("kernel", jstr("softmax_rows")),
             ]);
         }
     }
@@ -86,4 +145,8 @@ fn main() {
               accumulation ~4x at 2 bits.");
     let _ = exaq_repro::report::write_csv(
         "reports/table3_softmax_runtime.csv", &t);
+    match out.write() {
+        Ok(path) => println!("bench telemetry -> {path}"),
+        Err(e) => eprintln!("failed to write bench json: {e}"),
+    }
 }

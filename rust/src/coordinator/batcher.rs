@@ -5,11 +5,19 @@
 //! the deterministic SimBackend) and reads time exclusively through a
 //! shared [`Clock`], so the same code path serves production traffic
 //! and the virtual-time stress harness.
+//!
+//! Sampling is batched the same way the backend step is: each decode
+//! tick hands every active slot's logit row to ONE
+//! [`BatchSampler::sample_rows`] call, which shapes all EXAQ rows
+//! through a single bit-packed [`crate::exaq::BatchSoftmax`] plane
+//! kernel instead of per-slot scalar softmaxes. Prefill admission
+//! (batch-1 shaping of the freshly padded prompt plane) rides the same
+//! sampler so the whole scheduler owns exactly one set of EXAQ tables.
 
 use std::collections::VecDeque;
 use std::rc::Rc;
 
-use crate::model::sampling::{sample_with, SamplerScratch};
+use crate::model::sampling::{BatchSampler, SamplingParams};
 use crate::runtime::backend::InferenceBackend;
 use crate::runtime::{DecodeState, HostTensor, QuantMode};
 use crate::util::clock::Clock;
@@ -34,7 +42,11 @@ pub struct Scheduler {
     kv: BatchedKv,
     pub metrics: Metrics,
     rng: SplitMix64,
-    scratch: SamplerScratch,
+    sampler: BatchSampler,
+    /// (plane row, params) pairs for the current sampling call.
+    sample_rows: Vec<(usize, SamplingParams)>,
+    /// Token output of the current sampling call.
+    sample_out: Vec<i32>,
     seq: usize,
     eos: i32,
     decode_batch: usize,
@@ -59,7 +71,9 @@ impl Scheduler {
                                c.max_seq, c.head_dim),
             metrics: Metrics::default(),
             rng: SplitMix64::new(DEFAULT_SAMPLER_SEED),
-            scratch: SamplerScratch::default(),
+            sampler: BatchSampler::default(),
+            sample_rows: Vec::new(),
+            sample_out: Vec::new(),
             seq: c.max_seq,
             eos: backend.eos_token(),
             decode_batch,
@@ -128,13 +142,17 @@ impl Scheduler {
             self.metrics.prefills += 1;
             self.kv.fill_slot(slot, &state.kc, &state.vc)?;
 
-            // sample the first generated token from the last prompt logit
+            // sample the first generated token from the last prompt
+            // logit (the prefill plane is [1, S, V]; row `pos` predicts
+            // the next token) through the shared batched sampler
             let vocab = logits.shape[2];
             let pos = prompt_len; // logits index predicting next token
-            let row = &logits.as_f32()?[pos * vocab..(pos + 1) * vocab];
-            let tok =
-                sample_with(row, &req.params, &mut self.rng,
-                            &mut self.scratch);
+            self.sample_rows.clear();
+            self.sample_rows.push((pos, req.params));
+            self.sampler.sample_rows(logits.as_f32()?, vocab,
+                                     &self.sample_rows, &mut self.rng,
+                                     &mut self.sample_out);
+            let tok = self.sample_out[0];
             let now = self.clock.now();
             let mut inf = InFlight {
                 req,
@@ -188,16 +206,20 @@ impl Scheduler {
 
             let vocab = logits.shape[1];
             let lg = logits.as_f32()?;
+            // one batched sampling call over every active slot's row:
+            // all EXAQ rows go through a single bit-packed plane kernel
+            self.sample_rows.clear();
             for &s in &active_slots {
+                let inf = self.active[s].as_ref().unwrap();
+                self.sample_rows.push((s, inf.req.params));
+            }
+            self.sampler.sample_rows(lg, vocab, &self.sample_rows,
+                                     &mut self.rng,
+                                     &mut self.sample_out);
+            for (i, &s) in active_slots.iter().enumerate() {
+                let tok = self.sample_out[i];
                 let mut finished = false;
                 {
-                    let row = &lg[s * vocab..(s + 1) * vocab];
-                    // sample next token first, then mutate the in-flight
-                    let tok = {
-                        let inf = self.active[s].as_ref().unwrap();
-                        sample_with(row, &inf.req.params, &mut self.rng,
-                                    &mut self.scratch)
-                    };
                     let inf = self.active[s].as_mut().unwrap();
                     inf.generated.push(tok);
                     inf.pos += 1;

@@ -35,9 +35,19 @@ impl CycleTable {
     }
 
     /// Algorithm 2 at `bits`: per-element quantize + LUT_exp, N/group
-    /// LUT_sum accumulations, N divides. group = 4 at 2 bits, 2 at 3/4.
+    /// LUT_sum accumulations, N divides. group = 4 at 2 bits, 2 at 3/4
+    /// — derived from the same [`crate::exaq::lut::lut_group`] table
+    /// the kernels build with (pinned by a test against
+    /// [`crate::exaq::BatchSoftmax::group`]).
     pub fn algo2_softmax(&self, n: usize, bits: u32) -> f64 {
-        let group = crate::exaq::lut::lut_group(bits) as f64;
+        self.algo2_softmax_grouped(n, crate::exaq::lut::lut_group(bits))
+    }
+
+    /// [`Self::algo2_softmax`] with an explicit codes-per-key group —
+    /// callers holding a live kernel pass `BatchSoftmax::group()` so
+    /// the accounting can never drift from the packed layout in use.
+    pub fn algo2_softmax_grouped(&self, n: usize, group: usize) -> f64 {
+        let group = group as f64;
         let n = n as f64;
         n * self.quant + n * self.lut + (n / group) * self.lut
             + n * self.div
@@ -54,8 +64,16 @@ impl CycleTable {
     /// Speedup of the *accumulation phase* alone (paper §4.2: ~4x at
     /// 2 bits, 2x at 4 bits).
     pub fn accumulation_speedup(&self, n: usize, bits: u32) -> f64 {
-        let group = crate::exaq::lut::lut_group(bits) as f64;
-        (n as f64 * self.add) / ((n as f64 / group) * self.lut)
+        self.accumulation_speedup_grouped(
+            n, crate::exaq::lut::lut_group(bits))
+    }
+
+    /// [`Self::accumulation_speedup`] from an explicit kernel group
+    /// (`BatchSoftmax::group()`): one LUT_sum load replaces `group`
+    /// scalar adds.
+    pub fn accumulation_speedup_grouped(&self, n: usize,
+                                        group: usize) -> f64 {
+        (n as f64 * self.add) / ((n as f64 / group as f64) * self.lut)
     }
 }
 
@@ -255,6 +273,25 @@ mod tests {
         // …and 2x at 4 bits (byte packs 2 codes).
         let s4 = t.accumulation_speedup(4096, 4);
         assert!((s4 - 2.0).abs() < 1e-9, "{s4}");
+    }
+
+    #[test]
+    fn accounting_group_matches_the_live_kernel() {
+        // the speedup constant must come from the same packing the
+        // batched kernel actually executes with — build one and check
+        use crate::exaq::BatchSoftmax;
+        let t = CycleTable::default();
+        for bits in [1u32, 2, 3, 4] {
+            let eng = BatchSoftmax::new(bits, -4.0);
+            let via_bits = t.accumulation_speedup(1024, bits);
+            let via_kernel =
+                t.accumulation_speedup_grouped(1024, eng.group());
+            assert!((via_bits - via_kernel).abs() < 1e-12,
+                    "bits={bits}: accounting drifted from the kernel");
+            assert!((t.algo2_softmax(1024, bits)
+                     - t.algo2_softmax_grouped(1024, eng.group()))
+                        .abs() < 1e-12);
+        }
     }
 
     #[test]

@@ -1,0 +1,460 @@
+//! Batched, bit-packed EXAQ softmax — the plane-at-a-time form of
+//! paper Algorithm 2 (§4, Fig. 5).
+//!
+//! Serving traffic arrives as whole `[rows × len]` attention / logit
+//! planes, not single rows. [`BatchSoftmax`] owns prebuilt tables
+//! (`Quantizer` + `LUT_exp` + `LUT_sum`) and a reusable bit-packed
+//! code plane ([`PackedCodes`]) and exposes
+//! [`softmax_rows`](BatchSoftmax::softmax_rows), which runs Algorithm 2
+//! over every row of a plane in one call with zero steady-state
+//! allocation.
+//!
+//! ## The packed byte *is* the LUT_sum key
+//!
+//! Fig. 5's insight is a storage format, not just a table: write M-bit
+//! codes packed low-code-first into machine words, and each word read
+//! back *verbatim* is the LUT_sum address for its code group. The
+//! scalar path materialises one `u8` per 2-bit code (4x waste) and
+//! rebuilds every key with a shift-or loop; here the quantize pass
+//! emits the packed plane directly —
+//!
+//! * **M = 2**: four codes per byte (`c0 | c1<<2 | c2<<4 | c3<<6`);
+//!   the code plane is `len/4` bytes per row and the denominator loop
+//!   streams those bytes straight into [`LutSum::sum_keys`] — the
+//!   paper's ~4x accumulation win with no per-group repacking.
+//! * **M = 3/4**: one `u16` key per two codes (`c0 | c1<<M`), the 2x
+//!   accumulation configuration of Table 3.
+//!
+//! ## Bit-exactness with the scalar path
+//!
+//! `softmax_rows` agrees *bit-for-bit* with per-row
+//! [`softmax_algo2`]: both derive the identical key stream, reduce it
+//! through the same fixed-tree [`LutSum::sum_keys`], and produce each
+//! output lane as the f32 product `lut_exp[code] * inv`. The batched
+//! kernel merely computes that product once per *code* (a premultiplied
+//! `2^M`-entry normalisation table) instead of once per *element*, and
+//! decodes output lanes from the packed keys — same values, ~40% less
+//! memory traffic, no per-element divide/multiply pass.
+
+use std::cell::RefCell;
+
+use super::lut::{LutExp, LutSum, PackedKey};
+use super::quant::Quantizer;
+use super::softmax::{softmax_algo2, Algo2Scratch};
+
+/// Reusable bit-packed code plane: one LUT_sum key per code group,
+/// `rows × ceil(len/group)` keys per plane (see the module docs for
+/// the M = 2 byte / M = 3-4 u16 layouts).
+#[derive(Default)]
+pub struct PackedCodes {
+    /// M ≤ 2 plane — each byte is `group` codes and is itself the key.
+    bytes: Vec<u8>,
+    /// M = 3+ plane — one u16 key per group.
+    words: Vec<u16>,
+}
+
+impl PackedCodes {
+    /// Bytes of packed-code storage currently held (the M = 2 plane
+    /// packs 4 codes/byte; tests pin the 4x saving over `u8` codes).
+    pub fn plane_bytes(&self) -> usize {
+        self.bytes.len() + 2 * self.words.len()
+    }
+}
+
+/// Batched Algorithm-2 softmax engine: prebuilt tables + packed code
+/// plane + scratch, reused across calls.
+pub struct BatchSoftmax {
+    quant: Quantizer,
+    lut_exp: LutExp,
+    lut_sum: LutSum,
+    /// Requested clip before the quantizer's sanity clamp (cache key).
+    req_clip: f32,
+    /// Per-row premultiplied normalisation table: `lut_exp[c] * inv`.
+    norm: Vec<f32>,
+    packed: PackedCodes,
+    /// Scratch for the scalar-compatible single-row entry point.
+    scratch: Algo2Scratch,
+}
+
+impl BatchSoftmax {
+    pub fn new(bits: u32, clip: f32) -> Self {
+        let quant = Quantizer::new(bits, clip);
+        let lut_exp = LutExp::build(&quant);
+        let lut_sum = LutSum::build(&quant);
+        Self {
+            quant,
+            lut_exp,
+            lut_sum,
+            req_clip: clip,
+            norm: Vec::new(),
+            packed: PackedCodes::default(),
+            scratch: Algo2Scratch::default(),
+        }
+    }
+
+    pub fn bits(&self) -> u32 {
+        self.quant.bits
+    }
+
+    /// Codes per LUT_sum key — the accumulation-speedup factor the
+    /// cost model must quote (4 at M = 2, 2 at M = 3/4).
+    pub fn group(&self) -> usize {
+        self.lut_sum.group
+    }
+
+    /// Does this engine serve the requested configuration? (Compares
+    /// the *requested* clip, pre-clamp, so cache keys are exact.)
+    pub fn matches(&self, bits: u32, clip: f32) -> bool {
+        self.quant.bits == bits && self.req_clip == clip
+    }
+
+    pub fn tables(&self) -> (&Quantizer, &LutExp, &LutSum) {
+        (&self.quant, &self.lut_exp, &self.lut_sum)
+    }
+
+    /// Current packed-plane footprint in bytes.
+    pub fn plane_bytes(&self) -> usize {
+        self.packed.plane_bytes()
+    }
+
+    /// Single-row entry point — exactly [`softmax_algo2`] with this
+    /// engine's tables and scratch (the sampling hot path).
+    pub fn softmax_row(&mut self, row: &mut [f32], valid_len: usize) {
+        softmax_algo2(row, valid_len, &self.quant, &self.lut_exp,
+                      &self.lut_sum, &mut self.scratch);
+    }
+
+    /// Batched Algorithm 2 over a whole `[rows × len]` plane.
+    ///
+    /// Row `r` is `data[r*len .. (r+1)*len]`; its valid prefix is
+    /// `valid_lens[r]` clamped to `len` (`valid_lens = &[]` means every
+    /// row is fully valid). Lanes past the valid prefix are zeroed,
+    /// exactly like [`softmax_algo2`] — and the whole plane is
+    /// bit-identical to calling [`softmax_algo2`] row by row.
+    pub fn softmax_rows(&mut self, data: &mut [f32], rows: usize,
+                        len: usize, valid_lens: &[usize]) {
+        assert_eq!(data.len(), rows * len,
+                   "plane is {} floats, expected rows*len = {}",
+                   data.len(), rows * len);
+        assert!(valid_lens.is_empty() || valid_lens.len() == rows,
+                "valid_lens arity {} != rows {rows}", valid_lens.len());
+        if rows == 0 || len == 0 {
+            return;
+        }
+        let Self { quant, lut_exp, lut_sum, norm, packed, .. } = self;
+        let tables = (&*quant, &*lut_exp, &*lut_sum);
+        if quant.bits <= 2 {
+            rows_kernel::<u8>(tables, norm, &mut packed.bytes, data,
+                              (rows, len), valid_lens);
+        } else {
+            rows_kernel::<u16>(tables, norm, &mut packed.words, data,
+                               (rows, len), valid_lens);
+        }
+    }
+}
+
+/// The plane kernel, monomorphised per key width. Per row: max-shift,
+/// quantize-and-pack (no f32 writes), fixed-tree key reduction,
+/// premultiplied-table decode. See the module docs for why each step
+/// is bit-identical to the scalar path.
+fn rows_kernel<K: PackedKey>(
+    tables: (&Quantizer, &LutExp, &LutSum), norm: &mut Vec<f32>,
+    plane: &mut Vec<K>, data: &mut [f32], dims: (usize, usize),
+    valid_lens: &[usize],
+) {
+    let (quant, lut_exp, lut_sum) = tables;
+    let (rows, len) = dims;
+    let g = lut_sum.group;
+    let bits = lut_sum.bits as usize;
+    let mask = (1usize << bits) - 1;
+    let stride = len.div_ceil(g);
+    plane.resize(rows * stride, K::default());
+
+    for (r, row) in data.chunks_exact_mut(len).enumerate() {
+        let n = if valid_lens.is_empty() { len } else { valid_lens[r] }
+            .min(len);
+        if n == 0 {
+            row.fill(0.0);
+            continue;
+        }
+        // max-shift (same linear scan as the scalar path)
+        let mut m = f32::NEG_INFINITY;
+        for &x in &row[..n] {
+            m = m.max(x);
+        }
+        let padded = n.next_multiple_of(g);
+        let nkeys = padded / g;
+        let full = n / g; // groups whose lanes are all < n
+        let keys = &mut plane[r * stride..r * stride + nkeys];
+
+        // ---- quantize + pack: emit the key plane, touch no f32 lanes
+        if g == 4 {
+            // M = 2: the packed byte is the key (Fig. 5)
+            for (k, lanes) in keys[..full]
+                .iter_mut()
+                .zip(row[..full * 4].chunks_exact(4))
+            {
+                let c0 = quant.code(lanes[0] - m) as usize;
+                let c1 = quant.code(lanes[1] - m) as usize;
+                let c2 = quant.code(lanes[2] - m) as usize;
+                let c3 = quant.code(lanes[3] - m) as usize;
+                *k = K::pack(c0 | (c1 << 2) | (c2 << 4) | (c3 << 6));
+            }
+        } else if g == 2 {
+            // M = 3/4: two codes per u16 key
+            for (k, lanes) in keys[..full]
+                .iter_mut()
+                .zip(row[..full * 2].chunks_exact(2))
+            {
+                let c0 = quant.code(lanes[0] - m) as usize;
+                let c1 = quant.code(lanes[1] - m) as usize;
+                *k = K::pack(c0 | (c1 << bits));
+            }
+        } else {
+            for (k, lanes) in keys[..full]
+                .iter_mut()
+                .zip(row[..full * g].chunks_exact(g))
+            {
+                let mut key = 0usize;
+                for (j, &x) in lanes.iter().enumerate() {
+                    key |= (quant.code(x - m) as usize) << (bits * j);
+                }
+                *k = K::pack(key);
+            }
+        }
+        // tail group: lanes in [full*g, n) quantized, the padding
+        // lanes sit on code 0 (exactly the scalar path's zero pad)
+        if full < nkeys {
+            let mut key = 0usize;
+            for (j, lane) in (full * g..n).enumerate() {
+                key |= (quant.code(row[lane] - m) as usize)
+                    << (bits * j);
+            }
+            keys[full] = K::pack(key);
+        }
+
+        // ---- denominator: the shared fixed-tree reduction
+        let mut sum = lut_sum.sum_keys(&keys[..nkeys]);
+        sum -= (padded - n) as f32 * lut_exp.floor_value();
+        let inv = 1.0 / sum.max(1e-30);
+
+        // ---- decode: norm[c] = lut_exp[c] * inv, computed once per
+        // code — bit-identical to the scalar per-lane `exp * inv`
+        norm.clear();
+        norm.extend(lut_exp.table.iter().map(|&e| e * inv));
+        let full_lanes = full * g;
+        if g == 4 {
+            for (lanes, &k) in row[..full_lanes]
+                .chunks_exact_mut(4)
+                .zip(keys[..full].iter())
+            {
+                let k = k.index();
+                lanes[0] = norm[k & 3];
+                lanes[1] = norm[(k >> 2) & 3];
+                lanes[2] = norm[(k >> 4) & 3];
+                lanes[3] = norm[(k >> 6) & 3];
+            }
+        } else if g == 2 {
+            for (lanes, &k) in row[..full_lanes]
+                .chunks_exact_mut(2)
+                .zip(keys[..full].iter())
+            {
+                let k = k.index();
+                lanes[0] = norm[k & mask];
+                lanes[1] = norm[(k >> bits) & mask];
+            }
+        } else {
+            for (lanes, &k) in row[..full_lanes]
+                .chunks_exact_mut(g)
+                .zip(keys[..full].iter())
+            {
+                let mut k = k.index();
+                for x in lanes {
+                    *x = norm[k & mask];
+                    k >>= bits;
+                }
+            }
+        }
+        if full_lanes < n {
+            let mut k = keys[full].index();
+            for x in &mut row[full_lanes..n] {
+                *x = norm[k & mask];
+                k >>= bits;
+            }
+        }
+        row[n..].fill(0.0);
+    }
+}
+
+thread_local! {
+    /// Per-thread engine cache backing [`with_cached_engine`] (and,
+    /// through it, `softmax_algo2_once`): loops over a fixed (bits,
+    /// clip) stop paying the three table builds per call.
+    static CACHED_ENGINE: RefCell<Option<BatchSoftmax>> =
+        const { RefCell::new(None) };
+}
+
+/// Find-or-rebuild an engine slot for (`bits`, `clip`) — the one
+/// cache policy shared by the sampler scratch and the thread-local
+/// [`with_cached_engine`] cache, so key semantics cannot drift.
+pub fn ensure_engine(slot: &mut Option<BatchSoftmax>, bits: u32,
+                     clip: f32) -> &mut BatchSoftmax {
+    let hit = matches!(slot, Some(e) if e.matches(bits, clip));
+    if !hit {
+        *slot = Some(BatchSoftmax::new(bits, clip));
+    }
+    slot.as_mut().expect("engine just ensured")
+}
+
+/// Run `f` with a thread-cached [`BatchSoftmax`] for (`bits`, `clip`),
+/// rebuilding the tables only when the configuration changes.
+pub fn with_cached_engine<R>(
+    bits: u32, clip: f32, f: impl FnOnce(&mut BatchSoftmax) -> R,
+) -> R {
+    CACHED_ENGINE.with(|cell| {
+        let mut slot = cell.borrow_mut();
+        f(ensure_engine(&mut slot, bits, clip))
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exaq::lut::lut_group;
+    use crate::exaq::softmax::softmax_algo2_once;
+    use crate::util::rng::SplitMix64;
+
+    fn random_plane(rows: usize, len: usize, seed: u64,
+                    scale: f32) -> Vec<f32> {
+        let mut r = SplitMix64::new(seed);
+        (0..rows * len).map(|_| (r.normal() as f32) * scale).collect()
+    }
+
+    fn assert_bit_exact(plane: &[f32], reference: &[f32], tag: &str) {
+        for (i, (a, b)) in plane.iter().zip(reference).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(),
+                       "{tag}: lane {i} diverged: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn batched_plane_is_bit_exact_with_scalar_rows() {
+        for bits in [1u32, 2, 3, 4] {
+            let (rows, len) = (6usize, 50usize); // 50 % 4 != 0
+            let mut plane = random_plane(rows, len, 77 + bits as u64, 2.0);
+            let mut reference = plane.clone();
+            let vlens: Vec<usize> = (0..rows)
+                .map(|r| [len, 1, 7, len + 100, 0, 33][r])
+                .collect();
+            let mut eng = BatchSoftmax::new(bits, -4.5);
+            eng.softmax_rows(&mut plane, rows, len, &vlens);
+            for (r, row) in reference.chunks_mut(len).enumerate() {
+                softmax_algo2_once(row, vlens[r], bits, -4.5);
+            }
+            assert_bit_exact(&plane, &reference, &format!("bits={bits}"));
+        }
+    }
+
+    #[test]
+    fn empty_valid_lens_means_full_rows() {
+        let (rows, len) = (3usize, 31usize);
+        let mut a = random_plane(rows, len, 5, 1.5);
+        let mut b = a.clone();
+        let mut eng = BatchSoftmax::new(2, -4.0);
+        eng.softmax_rows(&mut a, rows, len, &[]);
+        let full = vec![len; rows];
+        let mut eng2 = BatchSoftmax::new(2, -4.0);
+        eng2.softmax_rows(&mut b, rows, len, &full);
+        assert_bit_exact(&a, &b, "full-row default");
+        for row in a.chunks(len) {
+            let s: f32 = row.iter().sum();
+            assert!((s - 1.0).abs() < 1e-4, "{s}");
+        }
+    }
+
+    #[test]
+    fn zero_rows_and_zero_len_are_noops() {
+        let mut eng = BatchSoftmax::new(2, -4.0);
+        let mut empty: Vec<f32> = Vec::new();
+        eng.softmax_rows(&mut empty, 0, 128, &[]);
+        eng.softmax_rows(&mut empty, 0, 0, &[]);
+        let mut rows_of_nothing: Vec<f32> = Vec::new();
+        eng.softmax_rows(&mut rows_of_nothing, 4, 0, &[0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn m2_plane_packs_four_codes_per_byte() {
+        let (rows, len) = (8usize, 256usize);
+        let mut plane = random_plane(rows, len, 9, 2.0);
+        let mut eng = BatchSoftmax::new(2, -4.0);
+        eng.softmax_rows(&mut plane, rows, len, &[]);
+        // one byte per 4 codes — the scalar scratch would hold
+        // rows*len = 2048 bytes of codes; the packed plane holds 512
+        assert_eq!(eng.plane_bytes(), rows * len / 4);
+    }
+
+    #[test]
+    fn plane_reuse_shrinks_and_regrows() {
+        let mut eng = BatchSoftmax::new(2, -4.0);
+        let mut big = random_plane(16, 64, 11, 1.0);
+        eng.softmax_rows(&mut big, 16, 64, &[]);
+        let bytes_big = eng.plane_bytes();
+        let mut small = random_plane(2, 8, 12, 1.0);
+        eng.softmax_rows(&mut small, 2, 8, &[]);
+        assert!(eng.plane_bytes() < bytes_big);
+        let mut reference = random_plane(16, 64, 11, 1.0);
+        let mut fresh = BatchSoftmax::new(2, -4.0);
+        let mut again = reference.clone();
+        fresh.softmax_rows(&mut again, 16, 64, &[]);
+        eng.softmax_rows(&mut reference, 16, 64, &[]);
+        // a reused engine and a fresh one agree bit-for-bit
+        assert_bit_exact(&reference, &again, "reuse");
+    }
+
+    #[test]
+    fn all_neg_infinity_rows_stay_uniform_and_finite() {
+        for bits in [2u32, 3, 4] {
+            let (rows, len) = (3usize, 24usize);
+            let mut plane = vec![f32::NEG_INFINITY; rows * len];
+            let mut eng = BatchSoftmax::new(bits, -5.0);
+            eng.softmax_rows(&mut plane, rows, len, &[len, 5, len]);
+            for (i, &p) in plane.iter().take(len).enumerate() {
+                assert!(p.is_finite(), "bits={bits} lane {i}: {p}");
+                assert!((p - 1.0 / len as f32).abs() < 1e-5);
+            }
+            let s: f32 = plane[len..len + 5].iter().sum();
+            assert!((s - 1.0).abs() < 1e-4, "bits={bits}: {s}");
+            assert!(plane[len + 5..2 * len].iter().all(|&p| p == 0.0));
+        }
+    }
+
+    #[test]
+    fn cached_engine_is_reused_and_rebuilt_on_config_change() {
+        // grow the cached engine's packed plane, then observe that the
+        // same configuration gets the same (still-grown) engine back
+        // while a config change gets a fresh one
+        with_cached_engine(2, -4.25, |e| {
+            let mut plane = vec![0.5f32; 8 * 64];
+            e.softmax_rows(&mut plane, 8, 64, &[]);
+            assert!(e.plane_bytes() > 0);
+        });
+        with_cached_engine(2, -4.25, |e| {
+            assert!(e.matches(2, -4.25));
+            assert!(e.plane_bytes() > 0,
+                    "cache miss: engine was rebuilt for the same config");
+        });
+        with_cached_engine(3, -6.0, |e| {
+            assert_eq!(e.bits(), 3);
+            assert!(!e.matches(2, -4.25));
+            assert_eq!(e.plane_bytes(), 0, "expected a fresh engine");
+        });
+    }
+
+    #[test]
+    fn group_matches_lut_group_for_all_bit_widths() {
+        for bits in 1u32..=4 {
+            let eng = BatchSoftmax::new(bits, -4.0);
+            assert_eq!(eng.group(), lut_group(bits), "bits={bits}");
+        }
+    }
+}

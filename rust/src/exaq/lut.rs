@@ -7,8 +7,55 @@
 //!
 //! Key layout matches `python/compile/kernels/ref.py::lut_sum_table`:
 //! low code first — key = Σ_j code[j] << (bits · j).
+//!
+//! The packed key is not just an index: it is the paper's *storage
+//! format* for quantized rows. Fig. 5's pipeline writes 2-bit codes
+//! four-to-a-byte, and that byte — read back verbatim — addresses
+//! LUT_sum, turning `group` accumulations into one load. The batched
+//! kernel ([`crate::exaq::batched`]) keeps whole `[rows × len]` planes
+//! in this form (`PackedCodes`): at M = 2 the code plane is len/4
+//! bytes per row and the denominator loop streams the bytes straight
+//! into [`LutSum::sum_keys`] with no per-group repacking. M = 3/4
+//! rows carry one u16 key per two codes for the same zero-repack
+//! property.
+//!
+//! [`LutSum::sum_keys`] is the single reduction used by both the
+//! scalar path ([`crate::exaq::softmax::softmax_algo2`]) and the
+//! batched kernel: its 4-accumulator tree fixes the f32 summation
+//! order, which is what makes the two paths bit-identical.
 
 use super::quant::Quantizer;
+
+/// A stored LUT_sum key: `u8` when the packed byte is itself the key
+/// (M ≤ 2, Fig. 5), `u16` for the two-codes-per-word planes (M = 3/4).
+pub trait PackedKey: Copy + Default {
+    /// Truncate a freshly packed key into the stored width.
+    fn pack(raw: usize) -> Self;
+    /// Widen back to a table index.
+    fn index(self) -> usize;
+}
+
+impl PackedKey for u8 {
+    #[inline(always)]
+    fn pack(raw: usize) -> Self {
+        raw as u8
+    }
+    #[inline(always)]
+    fn index(self) -> usize {
+        self as usize
+    }
+}
+
+impl PackedKey for u16 {
+    #[inline(always)]
+    fn pack(raw: usize) -> Self {
+        raw as u16
+    }
+    #[inline(always)]
+    fn index(self) -> usize {
+        self as usize
+    }
+}
 
 /// LUT_exp: single-cycle exponent lookup (paper §4.1).
 #[derive(Clone, Debug)]
@@ -96,6 +143,33 @@ impl LutSum {
     pub fn lookup(&self, codes: &[u8]) -> f32 {
         self.table[self.pack(codes)]
     }
+
+    /// Denominator reduction over a row's key stream: Σ table[key].
+    ///
+    /// 4 independent accumulators break the float add dependency chain
+    /// (the paper's "accumulation phase" is latency-bound), combined in
+    /// a fixed tree `((a0+a1)+(a2+a3))+tail`. Every caller — scalar
+    /// `softmax_algo2` and the batched `BatchSoftmax` plane kernel —
+    /// funnels through this one function so the f32 summation order,
+    /// and therefore the result, is bit-identical across paths.
+    #[inline]
+    pub fn sum_keys<K: PackedKey>(&self, keys: &[K]) -> f32 {
+        let t = &self.table[..];
+        let (mut a0, mut a1, mut a2, mut a3) =
+            (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+        let mut chunks = keys.chunks_exact(4);
+        for ch in chunks.by_ref() {
+            a0 += t[ch[0].index()];
+            a1 += t[ch[1].index()];
+            a2 += t[ch[2].index()];
+            a3 += t[ch[3].index()];
+        }
+        let mut tail = 0.0f32;
+        for &k in chunks.remainder() {
+            tail += t[k.index()];
+        }
+        ((a0 + a1) + (a2 + a3)) + tail
+    }
 }
 
 #[cfg(test)]
@@ -138,6 +212,33 @@ mod tests {
                 }
                 assert!((ls.get(key) - want).abs() < 1e-6,
                         "bits={bits} key={key}");
+            }
+        }
+    }
+
+    #[test]
+    fn sum_keys_matches_sequential_sum_and_is_width_invariant() {
+        for bits in [2u32, 3, 4] {
+            let q = Quantizer::new(bits, -5.0);
+            let ls = LutSum::build(&q);
+            let nkeys = ls.table.len();
+            // key streams of awkward lengths incl. the unroll remainder
+            for len in [0usize, 1, 3, 4, 5, 7, 8, 41] {
+                let keys8: Vec<u8> =
+                    (0..len).map(|i| ((i * 37 + 11) % nkeys) as u8).collect();
+                let keys16: Vec<u16> =
+                    keys8.iter().map(|&k| k as u16).collect();
+                let got8 = ls.sum_keys(&keys8);
+                let got16 = ls.sum_keys(&keys16);
+                // identical keys at different storage widths must agree
+                // bit-for-bit (the batched kernel relies on this)
+                assert_eq!(got8.to_bits(), got16.to_bits(),
+                           "bits={bits} len={len}");
+                let want: f64 = keys8.iter()
+                    .map(|&k| ls.get(k as usize) as f64)
+                    .sum();
+                assert!((got8 as f64 - want).abs() < 1e-4 * want.max(1.0),
+                        "bits={bits} len={len}: {got8} vs {want}");
             }
         }
     }

@@ -15,9 +15,14 @@
 //! * [`softmax`]— Algorithm 1 (original) and Algorithm 2 (2-bit LUT)
 //!   softmax implementations — the Table 3 subjects and the L3 sampling
 //!   hot path.
+//! * [`batched`]— the batched, bit-packed plane form of Algorithm 2:
+//!   [`BatchSoftmax`] runs whole `[rows × len]` logit/attention planes
+//!   through a packed code plane whose bytes *are* the LUT_sum keys
+//!   (Fig. 5's storage layout), bit-identical to the scalar path.
 //! * [`clip`]   — calibration-statistics -> per-layer clip thresholds
 //!   (EXAQ via Table 1; NAIVE via min/max midpoint).
 
+pub mod batched;
 pub mod clip;
 pub mod fit;
 pub mod gauss;
@@ -28,6 +33,7 @@ pub mod quant;
 pub mod softmax;
 pub mod solver;
 
+pub use batched::BatchSoftmax;
 pub use clip::{clip_exaq, clip_naive, Table1};
 pub use lut::{LutExp, LutSum};
 pub use quant::Quantizer;

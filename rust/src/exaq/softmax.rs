@@ -62,18 +62,22 @@ pub fn softmax_algo1(row: &mut [f32], valid_len: usize) {
 }
 
 /// Scratch buffers for [`softmax_algo2`] so the decode hot loop performs
-/// no allocation (DESIGN.md §7 L3 target).
+/// no allocation (DESIGN.md §7 L3 target). Holds the row's packed
+/// LUT_sum key stream (u16 covers every supported key width).
 #[derive(Default)]
 pub struct Algo2Scratch {
-    codes: Vec<u8>,
+    keys: Vec<u16>,
 }
 
 /// Paper Algorithm 2: M-bit quantization + LUT_exp + packed LUT_sum.
 ///
 /// `row` is overwritten with probabilities; lanes >= `valid_len` become 0.
-/// The denominator uses ceil(n/group) LUT_sum lookups over the *full*
+/// The denominator takes ceil(n/group) LUT_sum lookups over the *full*
 /// padded row (masked lanes are code 0) minus the closed-form correction —
-/// the same arithmetic as the Pallas kernel.
+/// the same arithmetic as the Pallas kernel. The key stream and the
+/// fixed-tree reduction ([`LutSum::sum_keys`]) are shared with the
+/// batched plane kernel ([`crate::exaq::batched::BatchSoftmax`]), which
+/// keeps the two paths bit-identical.
 pub fn softmax_algo2(
     row: &mut [f32],
     valid_len: usize,
@@ -94,36 +98,31 @@ pub fn softmax_algo2(
         m = m.max(x);
     }
     // lines 4-13 fused single pass: quantize a group of `g` lanes,
-    // store their LUT_exp values into the row, build the packed key on
-    // the fly, and take ONE LUT_sum accumulation per group (this is the
-    // paper's pipeline; fusing the passes keeps everything in registers).
+    // store their LUT_exp values into the row, and pack the group's
+    // LUT_sum key (lanes past `n` sit on code 0 — the zero pad).
     let g = lut_sum.group;
     let bits = lut_sum.bits as usize;
     let padded = n.next_multiple_of(g);
-    let codes = &mut scratch.codes;
-    codes.clear();
-    codes.resize(padded, 0);
-    for (c, &x) in codes[..n].iter_mut().zip(row[..n].iter()) {
-        *c = quant.code(x - m);
-    }
-    let mut sum = 0.0f32;
-    let row_end = padded.min(len);
-    for (chunk, crow) in codes
-        .chunks_exact(g)
-        .zip(row[..row_end].chunks_mut(g))
-    {
+    let keys = &mut scratch.keys;
+    keys.clear();
+    let mut i = 0usize;
+    while i < padded {
         let mut key = 0usize;
-        for (j, &c) in chunk.iter().enumerate() {
-            key |= (c as usize) << (bits * j);
+        for j in 0..g {
+            let lane = i + j;
+            if lane < n {
+                let c = quant.code(row[lane] - m);
+                row[lane] = lut_exp.get(c);
+                key |= (c as usize) << (bits * j);
+            }
         }
-        sum += lut_sum.get(key);
-        for (x, &c) in crow.iter_mut().zip(chunk) {
-            *x = lut_exp.get(c);
-        }
+        keys.push(key as u16);
+        i += g;
     }
-    // (when padded > len the last row chunk is partial; zip still pairs
-    // it with the final full code group, so every key is counted once)
-    // masked-lane correction: every padded lane sits on code 0 = exp(C)
+    // denominator: shared fixed-tree reduction over the key stream,
+    // then the masked-lane correction (every padded lane sits on
+    // code 0 = exp(C))
+    let mut sum = lut_sum.sum_keys(keys);
     sum -= (padded - n) as f32 * lut_exp.floor_value();
     let inv = 1.0 / sum.max(1e-30);
 
@@ -134,15 +133,16 @@ pub fn softmax_algo2(
     row[n..].fill(0.0);
 }
 
-/// Convenience wrapper building the tables per call (tests/benches that
-/// measure the steady-state should build tables once instead).
+/// Convenience wrapper for one-shot callers. The tables are held in a
+/// thread-local cache keyed by (`bits`, `c`)
+/// ([`crate::exaq::batched::with_cached_engine`]), so tests and
+/// examples looping at a fixed configuration stop paying three table
+/// builds per call.
 pub fn softmax_algo2_once(row: &mut [f32], valid_len: usize, bits: u32,
                           c: f32) {
-    let q = Quantizer::new(bits, c);
-    let le = LutExp::build(&q);
-    let ls = LutSum::build(&q);
-    softmax_algo2(row, valid_len, &q, &le, &ls,
-                  &mut Algo2Scratch::default());
+    crate::exaq::batched::with_cached_engine(bits, c, |engine| {
+        engine.softmax_row(row, valid_len)
+    });
 }
 
 /// Reference quantized softmax *without* the LUT path (direct exp of the

@@ -9,5 +9,5 @@
 pub mod sampling;
 pub mod tokenizer;
 
-pub use sampling::{sample, SamplingParams};
+pub use sampling::{sample, BatchSampler, SamplingParams};
 pub use tokenizer::Tokenizer;

@@ -3,10 +3,15 @@
 //! distribution uses the same quantize + LUT pipeline the paper
 //! accelerates, so serving exercises the paper's kernel end to end even
 //! outside the attention blocks.
+//!
+//! Two entry points share all numeric machinery:
+//! * [`sample_with`] — one logit row at a time (prefill, library use);
+//! * [`BatchSampler`] — the decode hot path: every active slot's row in
+//!   one [`BatchSoftmax`] plane call, with tokens drawn in row order so
+//!   the RNG stream matches the per-row path draw for draw.
 
-use crate::exaq::lut::{LutExp, LutSum};
-use crate::exaq::quant::Quantizer;
-use crate::exaq::softmax::{softmax_algo2, softmax_exact, Algo2Scratch};
+use crate::exaq::batched::{ensure_engine, BatchSoftmax};
+use crate::exaq::softmax::softmax_exact;
 use crate::util::rng::SplitMix64;
 
 /// How to turn logits into a next token.
@@ -42,14 +47,14 @@ impl SamplingParams {
 }
 
 /// Reusable sampling scratch (no allocation at steady state). The EXAQ
-/// quantizer + LUT pair is cached keyed by (bits, clip), so decode loops
-/// sampling at a fixed configuration never rebuild the tables per token.
+/// tables live in a cached [`BatchSoftmax`] keyed by (bits, clip), so
+/// decode loops sampling at a fixed configuration never rebuild the
+/// tables per token.
 #[derive(Default)]
 pub struct SamplerScratch {
     probs: Vec<f32>,
     idx: Vec<usize>,
-    algo2: Algo2Scratch,
-    exaq_tables: Option<(u32, f32, Quantizer, LutExp, LutSum)>,
+    engine: Option<BatchSoftmax>,
 }
 
 /// Sample one token id from `logits`.
@@ -59,7 +64,7 @@ pub fn sample(logits: &[f32], params: &SamplingParams,
     sample_with(logits, params, rng, &mut scratch)
 }
 
-/// Allocation-free variant for the decode loop.
+/// Allocation-free variant for per-row callers (prefill admission).
 pub fn sample_with(logits: &[f32], params: &SamplingParams,
                    rng: &mut SplitMix64,
                    scratch: &mut SamplerScratch) -> i32 {
@@ -72,50 +77,53 @@ pub fn sample_with(logits: &[f32], params: &SamplingParams,
 
     match params.exaq {
         Some((bits, c)) => {
-            let cached = matches!(&scratch.exaq_tables,
-                                  Some((b, cc, ..))
-                                  if *b == bits && *cc == c);
-            if !cached {
-                let q = Quantizer::new(bits, c);
-                let le = LutExp::build(&q);
-                let ls = LutSum::build(&q);
-                scratch.exaq_tables = Some((bits, c, q, le, ls));
-            }
-            let (_, _, q, le, ls) =
-                scratch.exaq_tables.as_ref().unwrap();
+            let engine = ensure_engine(&mut scratch.engine, bits, c);
             let n = probs.len();
-            softmax_algo2(probs, n, q, le, ls, &mut scratch.algo2);
+            engine.softmax_row(probs, n);
         }
         None => softmax_exact(probs),
     }
 
     if params.top_k > 0 && params.top_k < probs.len() {
-        let idx = &mut scratch.idx;
-        idx.clear();
-        idx.extend(0..probs.len());
-        idx.sort_unstable_by(|&a, &b| {
-            probs[b].partial_cmp(&probs[a]).unwrap()
-        });
-        for &i in &idx[params.top_k..] {
-            probs[i] = 0.0;
-        }
-        let total: f32 = probs.iter().sum();
-        if total > 0.0 {
-            for p in probs.iter_mut() {
-                *p /= total;
-            }
-        }
+        apply_top_k(probs, params.top_k, &mut scratch.idx);
     }
 
+    draw(probs, rng).unwrap_or_else(|| argmax(logits))
+}
+
+/// Zero all but the `k` largest probabilities and renormalise.
+/// Partial selection (`select_nth_unstable_by`) is O(V) per token where
+/// the old full sort was O(V log V).
+fn apply_top_k(probs: &mut [f32], k: usize, idx: &mut Vec<usize>) {
+    debug_assert!(k > 0 && k < probs.len());
+    idx.clear();
+    idx.extend(0..probs.len());
+    idx.select_nth_unstable_by(k - 1, |&a, &b| {
+        probs[b].partial_cmp(&probs[a]).unwrap()
+    });
+    for &i in &idx[k..] {
+        probs[i] = 0.0;
+    }
+    let total: f32 = probs.iter().sum();
+    if total > 0.0 {
+        for p in probs.iter_mut() {
+            *p /= total;
+        }
+    }
+}
+
+/// Inverse-CDF draw over a probability row; `None` when the walk falls
+/// off the end (degenerate rows) so callers can fall back to argmax.
+fn draw(probs: &[f32], rng: &mut SplitMix64) -> Option<i32> {
     let u = rng.uniform() as f32;
     let mut acc = 0.0;
     for (i, &p) in probs.iter().enumerate() {
         acc += p;
         if u < acc {
-            return i as i32;
+            return Some(i as i32);
         }
     }
-    argmax(logits)
+    None
 }
 
 fn argmax(xs: &[f32]) -> i32 {
@@ -126,6 +134,159 @@ fn argmax(xs: &[f32]) -> i32 {
         }
     }
     best as i32
+}
+
+/// Row class for the batched plane partition.
+#[derive(Clone, Copy, PartialEq)]
+enum RowClass {
+    Greedy,
+    Exact,
+    Exaq(u32, f32),
+}
+
+fn classify(p: &SamplingParams) -> RowClass {
+    if p.temperature <= 0.0 {
+        RowClass::Greedy
+    } else {
+        match p.exaq {
+            // a NaN clip would never equal itself and break the
+            // PartialEq grouping; canonicalise it to the bound the
+            // quantizer clamps to anyway
+            Some((b, c)) if c.is_nan() => {
+                RowClass::Exaq(b, -crate::exaq::quant::CLIP_EPS)
+            }
+            Some((b, c)) => RowClass::Exaq(b, c),
+            None => RowClass::Exact,
+        }
+    }
+}
+
+/// Decode-time batched sampler: gathers every stochastic row of a
+/// logits plane into a contiguous scratch plane grouped by softmax
+/// configuration, runs each EXAQ group through ONE
+/// [`BatchSoftmax::softmax_rows`] kernel call, then draws tokens in the
+/// caller's row order (one `rng.uniform()` per stochastic row — the
+/// exact draw sequence of per-row [`sample_with`], and, because the
+/// batched kernel is bit-identical to the scalar one, the exact same
+/// tokens).
+#[derive(Default)]
+pub struct BatchSampler {
+    plane: Vec<f32>,
+    map: Vec<usize>,
+    idx: Vec<usize>,
+    engines: Vec<BatchSoftmax>,
+    // partition scratch, reused so a decode tick allocates nothing
+    // at steady state
+    groups: Vec<(RowClass, usize)>,
+    offsets: Vec<usize>,
+    cursor: Vec<usize>,
+}
+
+impl BatchSampler {
+    /// Sample one token per entry of `rows` from a `[* × vocab]` logits
+    /// plane. `rows` pairs a plane row index with that row's sampling
+    /// params; `out` receives one token per entry, in order.
+    pub fn sample_rows(&mut self, logits: &[f32], vocab: usize,
+                       rows: &[(usize, SamplingParams)],
+                       rng: &mut SplitMix64, out: &mut Vec<i32>) {
+        out.clear();
+        if rows.is_empty() {
+            return;
+        }
+        assert!(vocab > 0, "empty vocabulary");
+        for &(r, _) in rows {
+            assert!((r + 1) * vocab <= logits.len(),
+                    "row {r} outside the logits plane");
+        }
+
+        // ---- partition: stochastic rows get plane slots grouped by
+        // softmax config (greedy rows never touch the plane)
+        self.groups.clear(); // (class, count) pairs
+        for (_, p) in rows {
+            let cl = classify(p);
+            if cl == RowClass::Greedy {
+                continue;
+            }
+            match self.groups.iter_mut().find(|g| g.0 == cl) {
+                Some(g) => g.1 += 1,
+                None => self.groups.push((cl, 1)),
+            }
+        }
+        self.offsets.clear();
+        let mut total = 0usize;
+        for &(_, count) in &self.groups {
+            self.offsets.push(total);
+            total += count;
+        }
+        self.plane.resize(total * vocab, 0.0);
+        self.map.clear();
+        self.cursor.clear();
+        self.cursor.extend_from_slice(&self.offsets);
+        for (r, p) in rows {
+            let cl = classify(p);
+            if cl == RowClass::Greedy {
+                self.map.push(usize::MAX);
+                continue;
+            }
+            let gi =
+                self.groups.iter().position(|g| g.0 == cl).unwrap();
+            let slot = self.cursor[gi];
+            self.cursor[gi] += 1;
+            self.map.push(slot);
+            let dst = &mut self.plane[slot * vocab..(slot + 1) * vocab];
+            let src = &logits[r * vocab..(r + 1) * vocab];
+            for (d, &s) in dst.iter_mut().zip(src) {
+                *d = s / p.temperature;
+            }
+        }
+
+        // ---- softmax: one batched kernel call per EXAQ config group
+        for (gi, &(cl, count)) in self.groups.iter().enumerate() {
+            let start = self.offsets[gi];
+            let slice =
+                &mut self.plane[start * vocab..(start + count) * vocab];
+            match cl {
+                RowClass::Exact => {
+                    for row in slice.chunks_exact_mut(vocab) {
+                        softmax_exact(row);
+                    }
+                }
+                RowClass::Exaq(bits, c) => {
+                    let engine = match self
+                        .engines
+                        .iter_mut()
+                        .position(|e| e.matches(bits, c))
+                    {
+                        Some(i) => &mut self.engines[i],
+                        None => {
+                            self.engines.push(BatchSoftmax::new(bits, c));
+                            self.engines.last_mut().unwrap()
+                        }
+                    };
+                    engine.softmax_rows(slice, count, vocab, &[]);
+                }
+                RowClass::Greedy => unreachable!(),
+            }
+        }
+
+        // ---- draw: caller's row order, one uniform per stochastic row
+        for (i, (r, p)) in rows.iter().enumerate() {
+            let tok = if self.map[i] == usize::MAX {
+                argmax(&logits[r * vocab..(r + 1) * vocab])
+            } else {
+                let slot = self.map[i];
+                let probs =
+                    &mut self.plane[slot * vocab..(slot + 1) * vocab];
+                if p.top_k > 0 && p.top_k < vocab {
+                    apply_top_k(probs, p.top_k, &mut self.idx);
+                }
+                draw(probs, rng).unwrap_or_else(|| {
+                    argmax(&logits[r * vocab..(r + 1) * vocab])
+                })
+            };
+            out.push(tok);
+        }
+    }
 }
 
 #[cfg(test)]
@@ -167,6 +328,41 @@ mod tests {
     }
 
     #[test]
+    fn top_k_selection_matches_full_sort_reference() {
+        // the select_nth path must keep exactly the k largest lanes
+        let mut rng = SplitMix64::new(31);
+        for trial in 0..50 {
+            let v = 16 + rng.below(64);
+            let k = 1 + rng.below(v - 1);
+            let raw: Vec<f32> =
+                (0..v).map(|_| rng.normal() as f32).collect();
+            let mut probs = raw.clone();
+            softmax_exact(&mut probs);
+            let mut fast = probs.clone();
+            apply_top_k(&mut fast, k, &mut Vec::new());
+            // reference: full sort
+            let mut order: Vec<usize> = (0..v).collect();
+            order.sort_unstable_by(|&a, &b| {
+                probs[b].partial_cmp(&probs[a]).unwrap()
+            });
+            let mut slow = probs.clone();
+            for &i in &order[k..] {
+                slow[i] = 0.0;
+            }
+            let total: f32 = slow.iter().sum();
+            for p in slow.iter_mut() {
+                *p /= total;
+            }
+            let kept_fast = fast.iter().filter(|&&p| p > 0.0).count();
+            assert_eq!(kept_fast, k, "trial {trial}");
+            for (i, (a, b)) in fast.iter().zip(&slow).enumerate() {
+                assert!((a - b).abs() < 1e-6,
+                        "trial {trial} lane {i}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
     fn exaq_sampling_close_to_exact() {
         let mut rng = SplitMix64::new(4);
         let logits = vec![2.0, 1.5, 0.0, -1.0];
@@ -185,5 +381,65 @@ mod tests {
             let b = counts[1][i] as f64 / n as f64;
             assert!((a - b).abs() < 0.05, "token {i}: {a} vs {b}");
         }
+    }
+
+    #[test]
+    fn batch_sampler_matches_per_row_sampling_exactly() {
+        // mixed greedy / exact / EXAQ rows: the batched plane path must
+        // reproduce the per-row path token for token (same RNG stream,
+        // bit-identical softmax)
+        let vocab = 48usize;
+        let rows = 7usize;
+        let mut gen = SplitMix64::new(99);
+        let logits: Vec<f32> =
+            (0..rows * vocab).map(|_| gen.normal() as f32 * 2.0).collect();
+        let params = [
+            SamplingParams::greedy(),
+            SamplingParams::exaq(0.9, 2, -4.0),
+            SamplingParams { temperature: 1.1, top_k: 0, exaq: None },
+            SamplingParams::exaq(0.9, 2, -4.0),
+            SamplingParams { temperature: 0.7, top_k: 5,
+                             exaq: Some((3, -5.0)) },
+            SamplingParams::greedy(),
+            SamplingParams { temperature: 1.0, top_k: 3, exaq: None },
+        ];
+        let sel: Vec<(usize, SamplingParams)> =
+            (0..rows).map(|r| (r, params[r])).collect();
+
+        let mut batched = Vec::new();
+        let mut sampler = BatchSampler::default();
+        let mut rng_a = SplitMix64::new(1234);
+        sampler.sample_rows(&logits, vocab, &sel, &mut rng_a,
+                            &mut batched);
+
+        let mut rng_b = SplitMix64::new(1234);
+        let mut scratch = SamplerScratch::default();
+        let scalar: Vec<i32> = (0..rows)
+            .map(|r| {
+                sample_with(&logits[r * vocab..(r + 1) * vocab],
+                            &params[r], &mut rng_b, &mut scratch)
+            })
+            .collect();
+        assert_eq!(batched, scalar);
+        // and the call is repeatable with a fresh rng
+        let mut again = Vec::new();
+        let mut rng_c = SplitMix64::new(1234);
+        sampler.sample_rows(&logits, vocab, &sel, &mut rng_c,
+                            &mut again);
+        assert_eq!(batched, again);
+    }
+
+    #[test]
+    fn batch_sampler_empty_and_single_row() {
+        let mut sampler = BatchSampler::default();
+        let mut rng = SplitMix64::new(5);
+        let mut out = vec![99i32];
+        sampler.sample_rows(&[], 4, &[], &mut rng, &mut out);
+        assert!(out.is_empty());
+        let logits = vec![0.0f32, 4.0, -1.0, 0.5];
+        sampler.sample_rows(&logits, 4,
+                            &[(0, SamplingParams::greedy())], &mut rng,
+                            &mut out);
+        assert_eq!(out, vec![1]);
     }
 }

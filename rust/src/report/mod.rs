@@ -1,8 +1,13 @@
-//! Rendering of experiment outputs: markdown tables and CSV series —
-//! every bench/example funnels its rows through here so EXPERIMENTS.md
-//! entries are regenerated in a uniform format.
+//! Rendering of experiment outputs: markdown tables, CSV series, and
+//! machine-readable bench JSON — every bench/example funnels its rows
+//! through here so EXPERIMENTS.md entries are regenerated in a uniform
+//! format and `BENCH_*.json` files seed the perf trajectory that later
+//! PRs regress against.
 
+use std::collections::BTreeMap;
 use std::fmt::Write as _;
+
+use crate::util::json::Json;
 
 /// A simple column-aligned markdown table builder.
 #[derive(Clone, Debug, Default)]
@@ -88,6 +93,84 @@ pub fn write_csv(path: &str, table: &Table) -> std::io::Result<()> {
     std::fs::write(path, table.to_csv())
 }
 
+/// Machine-readable bench telemetry. Each bench builds one of these
+/// and [`BenchJson::write`]s it as `BENCH_<name>.json` in the working
+/// directory (the repo root under `cargo bench`), giving every future
+/// PR a baseline to regress against:
+///
+/// ```json
+/// { "bench": "softmax",
+///   "meta": { "reps": 8 },
+///   "results": [ {"bits": 2, "scalar_us": ..., "batched_us": ...} ] }
+/// ```
+#[derive(Clone, Debug)]
+pub struct BenchJson {
+    name: String,
+    meta: BTreeMap<String, Json>,
+    results: Vec<Json>,
+}
+
+impl BenchJson {
+    pub fn new(name: &str) -> Self {
+        Self {
+            name: name.to_string(),
+            meta: BTreeMap::new(),
+            results: Vec::new(),
+        }
+    }
+
+    /// Attach a run-level metadata field (reps, request counts, …).
+    pub fn meta(&mut self, key: &str, value: Json) -> &mut Self {
+        self.meta.insert(key.to_string(), value);
+        self
+    }
+
+    /// Append one result record (an object built from `fields`).
+    pub fn result(&mut self, fields: &[(&str, Json)]) -> &mut Self {
+        let mut obj = BTreeMap::new();
+        for (k, v) in fields {
+            obj.insert((*k).to_string(), v.clone());
+        }
+        self.results.push(Json::Obj(obj));
+        self
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut root = BTreeMap::new();
+        root.insert("bench".to_string(),
+                    Json::Str(self.name.clone()));
+        root.insert("meta".to_string(),
+                    Json::Obj(self.meta.clone()));
+        root.insert("results".to_string(),
+                    Json::Arr(self.results.clone()));
+        Json::Obj(root)
+    }
+
+    /// Canonical output path: `BENCH_<name>.json`.
+    pub fn path(&self) -> String {
+        format!("BENCH_{}.json", self.name)
+    }
+
+    /// Serialise to `BENCH_<name>.json`; returns the path written.
+    pub fn write(&self) -> std::io::Result<String> {
+        let path = self.path();
+        let mut body = self.to_json().to_string_pretty();
+        body.push('\n');
+        std::fs::write(&path, body)?;
+        Ok(path)
+    }
+}
+
+/// Shorthand numeric JSON value for [`BenchJson`] rows.
+pub fn jnum(x: f64) -> Json {
+    Json::Num(x)
+}
+
+/// Shorthand string JSON value for [`BenchJson`] rows.
+pub fn jstr(s: &str) -> Json {
+    Json::Str(s.to_string())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -120,5 +203,25 @@ mod tests {
     fn formatting_helpers() {
         assert_eq!(f(1.23456, 2), "1.23");
         assert_eq!(pct(0.369), "36.9%");
+    }
+
+    #[test]
+    fn bench_json_roundtrips_through_the_parser() {
+        let mut b = BenchJson::new("demo");
+        b.meta("reps", jnum(8.0));
+        b.result(&[("bits", jnum(2.0)), ("mode", jstr("batched")),
+                   ("us", jnum(1.25))]);
+        b.result(&[("bits", jnum(3.0)), ("mode", jstr("scalar")),
+                   ("us", jnum(2.5))]);
+        assert_eq!(b.path(), "BENCH_demo.json");
+        let re = Json::parse(&b.to_json().to_string_pretty()).unwrap();
+        assert_eq!(re.get("bench").unwrap().as_str(), Some("demo"));
+        assert_eq!(re.at(&["meta", "reps"]).unwrap().as_f64(),
+                   Some(8.0));
+        let rows = re.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].get("mode").unwrap().as_str(),
+                   Some("batched"));
+        assert_eq!(rows[1].get("us").unwrap().as_f64(), Some(2.5));
     }
 }

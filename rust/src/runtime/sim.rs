@@ -3,18 +3,20 @@
 //! A fake transformer for driving the continuous-batching coordinator
 //! at scale with no PJRT artifacts: logits are seeded per (token,
 //! position) from [`SplitMix64`] and shaped through the *real* EXAQ
-//! Algorithm-2 pipeline ([`softmax_algo2`]), so every simulated step
-//! exercises the paper's quantize + LUT kernel; per-step latency is
-//! charged to the shared [`Clock`] from the [`crate::cost`] cycle
-//! model, so TTFT / latency / occupancy metrics are exact and
-//! reproducible under a [`crate::util::clock::VirtualClock`].
+//! Algorithm-2 pipeline — by default the batched bit-packed plane
+//! kernel ([`BatchSoftmax::softmax_rows`]), which shapes ALL rows of a
+//! prefill/decode step in one call (set
+//! [`SimConfig::batched_softmax`] = false for the per-row scalar
+//! baseline; the two are bit-identical, only the host time differs).
+//! Per-step latency is charged to the shared [`Clock`] from the
+//! [`crate::cost`] cycle model, so TTFT / latency / occupancy metrics
+//! are exact and reproducible under a
+//! [`crate::util::clock::VirtualClock`].
 
 use std::rc::Rc;
 
 use crate::cost::{GemmPrecision, MachineModel, TransformerShape};
-use crate::exaq::lut::{LutExp, LutSum};
-use crate::exaq::quant::Quantizer;
-use crate::exaq::softmax::{softmax_algo2, Algo2Scratch};
+use crate::exaq::batched::BatchSoftmax;
 use crate::util::clock::Clock;
 use crate::util::error::{bail, Result};
 use crate::util::rng::SplitMix64;
@@ -47,6 +49,10 @@ pub struct SimConfig {
     pub shape_bits: u32,
     /// Clip threshold of the shaping quantizer.
     pub shape_clip: f32,
+    /// Shape logits through the batched bit-packed plane kernel
+    /// (default) or the per-row scalar path. Bit-identical results;
+    /// the flag exists so benches can report the host-time delta.
+    pub batched_softmax: bool,
     /// Simulated accelerator clock in cycles/second (converts the cost
     /// model's cycles into seconds on the shared clock).
     pub clock_hz: f64,
@@ -68,6 +74,7 @@ impl Default for SimConfig {
             eos_bias: 0.0,
             shape_bits: 2,
             shape_clip: -4.0,
+            batched_softmax: true,
             clock_hz: 1.0e6,
             gemm_precision: GemmPrecision::Bf16,
         }
@@ -114,10 +121,11 @@ pub struct SimBackend {
     cfg: SimConfig,
     machine: MachineModel,
     clock: Rc<dyn Clock>,
-    quant: Quantizer,
-    lut_exp: LutExp,
-    lut_sum: LutSum,
-    scratch: Algo2Scratch,
+    /// The batched Algorithm-2 engine shaping every logit plane
+    /// (tables + bit-packed code plane, reused across steps).
+    engine: BatchSoftmax,
+    /// Per-row EOS-bias rolls of the step being generated.
+    rolls: Vec<f64>,
     /// Executed-step counters (inspected by benches/tests).
     pub prefills: u64,
     pub decode_steps: u64,
@@ -128,17 +136,13 @@ impl SimBackend {
         assert!((cfg.eos as usize) < cfg.vocab,
                 "eos id outside the simulated vocabulary");
         assert!(cfg.vocab >= 8, "vocabulary too small to be interesting");
-        let quant = Quantizer::new(cfg.shape_bits, cfg.shape_clip);
-        let lut_exp = LutExp::build(&quant);
-        let lut_sum = LutSum::build(&quant);
+        let engine = BatchSoftmax::new(cfg.shape_bits, cfg.shape_clip);
         Self {
             cfg,
             machine: MachineModel::default(),
             clock,
-            quant,
-            lut_exp,
-            lut_sum,
-            scratch: Algo2Scratch::default(),
+            engine,
+            rolls: Vec::new(),
             prefills: 0,
             decode_steps: 0,
         }
@@ -175,23 +179,38 @@ impl SimBackend {
                 .wrapping_mul(0xBF58_476D_1CE4_E5B9))
     }
 
-    /// Fill one vocab-sized logit row for (last token, position):
-    /// seeded noise -> EXAQ Algo-2 softmax -> log-probabilities, with
-    /// an optional deterministic EOS boost.
-    fn logits_row(&mut self, token: i32, pos: usize, out: &mut [f32]) {
-        let mut rng = SplitMix64::new(self.seed_for(token, pos));
-        for x in out.iter_mut() {
-            *x = (rng.normal() as f32) * 2.0;
+    /// Shape a `[rows × vocab]` noise plane into log-probabilities:
+    /// one batched Algorithm-2 kernel call (or the per-row scalar
+    /// baseline when `batched_softmax` is off), then log.
+    fn shape_plane(&mut self, plane: &mut [f32], rows: usize) {
+        let v = self.cfg.vocab;
+        if self.cfg.batched_softmax {
+            self.engine.softmax_rows(plane, rows, v, &[]);
+        } else {
+            for row in plane.chunks_exact_mut(v) {
+                self.engine.softmax_row(row, v);
+            }
         }
-        let n = out.len();
-        softmax_algo2(out, n, &self.quant, &self.lut_exp, &self.lut_sum,
-                      &mut self.scratch);
-        for x in out.iter_mut() {
+        for x in plane.iter_mut() {
             *x = (*x).max(1e-30).ln();
         }
-        if self.cfg.eos_bias > 0.0 && rng.uniform() < self.cfg.eos_bias {
-            out[self.cfg.eos as usize] += 16.0;
+    }
+
+    /// Deterministic EOS boost, decided by the row's noise-stream roll.
+    fn apply_eos_bias(&self, row: &mut [f32], roll: f64) {
+        if self.cfg.eos_bias > 0.0 && roll < self.cfg.eos_bias {
+            row[self.cfg.eos as usize] += 16.0;
         }
+    }
+
+    /// Fill one vocab-sized logit row for (last token, position):
+    /// seeded noise -> EXAQ Algo-2 softmax -> log-probabilities, with
+    /// an optional deterministic EOS boost. Batched steps produce
+    /// bit-identical rows via [`Self::shape_plane`] over many rows.
+    fn logits_row(&mut self, token: i32, pos: usize, out: &mut [f32]) {
+        let roll = fill_noise(self.seed_for(token, pos), out);
+        self.shape_plane(out, 1);
+        self.apply_eos_bias(out, roll);
     }
 
     fn kv_shape(&self, batch: usize) -> [usize; 5] {
@@ -206,6 +225,16 @@ impl SimBackend {
         }
         Ok(())
     }
+}
+
+/// Seeded noise for one logit row; returns the row's EOS-bias roll
+/// (drawn right after the noise so the stream layout is stable).
+fn fill_noise(seed: u64, out: &mut [f32]) -> f64 {
+    let mut rng = SplitMix64::new(seed);
+    for x in out.iter_mut() {
+        *x = (rng.normal() as f32) * 2.0;
+    }
+    rng.uniform()
 }
 
 impl InferenceBackend for SimBackend {
@@ -240,14 +269,23 @@ impl InferenceBackend for SimBackend {
         let toks = tokens.as_i32()?;
         let v = self.cfg.vocab;
 
+        // the whole [B*S, V] prefill plane is shaped in ONE batched
+        // Algorithm-2 kernel call
         let mut logits = vec![0.0f32; b * s * v];
+        self.rolls.clear();
         for bi in 0..b {
             for p in 0..s {
                 let tok = toks[bi * s + p];
                 let row = &mut logits[(bi * s + p) * v
                     ..(bi * s + p + 1) * v];
-                self.logits_row(tok, p, row);
+                let seed = self.seed_for(tok, p);
+                self.rolls.push(fill_noise(seed, row));
             }
+        }
+        self.shape_plane(&mut logits, b * s);
+        for (row, &roll) in logits.chunks_exact_mut(v).zip(&self.rolls)
+        {
+            self.apply_eos_bias(row, roll);
         }
 
         // deterministic KV payload: a cheap per-sequence signature (the
@@ -295,11 +333,20 @@ impl InferenceBackend for SimBackend {
             bail!("decode state shape {:?} != expected {:?}",
                   state.kc.shape, expect);
         }
+        // batch every active slot's logit row into one plane kernel
+        // call (the serving hot path this crate exists to accelerate)
         let v = self.cfg.vocab;
         let mut logits = vec![0.0f32; b * v];
+        self.rolls.clear();
         for (i, (&tok, &p)) in token.iter().zip(pos).enumerate() {
             let row = &mut logits[i * v..(i + 1) * v];
-            self.logits_row(tok, p as usize, row);
+            let seed = self.seed_for(tok, p as usize);
+            self.rolls.push(fill_noise(seed, row));
+        }
+        self.shape_plane(&mut logits, b);
+        for (row, &roll) in logits.chunks_exact_mut(v).zip(&self.rolls)
+        {
+            self.apply_eos_bias(row, roll);
         }
 
         // simulate the cache write: stamp the token at its position in
@@ -392,6 +439,39 @@ mod tests {
         // distinct positions decorrelate
         b.logits_row(11, 6, &mut ra);
         assert_ne!(ra, rb);
+    }
+
+    #[test]
+    fn batched_and_scalar_shaping_are_bit_identical() {
+        let clock = Rc::new(VirtualClock::new());
+        let mut a =
+            SimBackend::new(SimConfig::default(), clock.clone());
+        let scalar_cfg = SimConfig { batched_softmax: false,
+                                     ..SimConfig::default() };
+        let mut b = SimBackend::new(scalar_cfg, clock);
+        let mut ra = vec![0.0f32; 64];
+        let mut rb = vec![0.0f32; 64];
+        a.logits_row(7, 3, &mut ra);
+        b.logits_row(7, 3, &mut rb);
+        assert_eq!(ra, rb, "kernel modes diverged on a single row");
+        // whole decode steps agree too (same tokens downstream)
+        let mut state_a = DecodeState {
+            kc: HostTensor::zeros_f32(&a.kv_shape(4)),
+            vc: HostTensor::zeros_f32(&a.kv_shape(4)),
+        };
+        let mut state_b = DecodeState {
+            kc: HostTensor::zeros_f32(&b.kv_shape(4)),
+            vc: HostTensor::zeros_f32(&b.kv_shape(4)),
+        };
+        let la = a
+            .decode("sim", QuantMode::None, &[5, 9, 11, 2],
+                    &[1, 2, 3, 4], &mut state_a, None)
+            .unwrap();
+        let lb = b
+            .decode("sim", QuantMode::None, &[5, 9, 11, 2],
+                    &[1, 2, 3, 4], &mut state_b, None)
+            .unwrap();
+        assert_eq!(la.as_f32().unwrap(), lb.as_f32().unwrap());
     }
 
     #[test]

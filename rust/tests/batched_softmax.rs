@@ -1,0 +1,206 @@
+//! Integration suite for the batched bit-packed softmax kernel:
+//! a property-style randomized sweep (hand-rolled; the image has no
+//! proptest) asserting *bit-exact* agreement between
+//! `BatchSoftmax::softmax_rows` and per-row scalar `softmax_algo2`
+//! across rows / lens / masks / bit-widths / clips, plus hostile
+//! inputs (all-`-inf` rows, `valid_len` > len, rows = 0, lens not
+//! divisible by the packing group) and the batched-sampler /
+//! per-row-sampler equivalence on full serving planes.
+
+use exaq_repro::exaq::batched::BatchSoftmax;
+use exaq_repro::exaq::lut::{LutExp, LutSum};
+use exaq_repro::exaq::quant::Quantizer;
+use exaq_repro::exaq::softmax::{softmax_algo2, Algo2Scratch};
+use exaq_repro::model::sampling::{sample_with, BatchSampler,
+                                  SamplerScratch, SamplingParams};
+use exaq_repro::util::rng::SplitMix64;
+
+fn random_plane(rows: usize, len: usize, seed: u64,
+                scale: f32) -> Vec<f32> {
+    let mut r = SplitMix64::new(seed);
+    (0..rows * len).map(|_| (r.normal() as f32) * scale).collect()
+}
+
+/// Scalar reference: per-row Algorithm 2 with freshly built tables.
+fn scalar_reference(plane: &mut [f32], len: usize,
+                    valid_lens: &[usize], bits: u32, clip: f32) {
+    let q = Quantizer::new(bits, clip);
+    let le = LutExp::build(&q);
+    let ls = LutSum::build(&q);
+    let mut scratch = Algo2Scratch::default();
+    for (r, row) in plane.chunks_exact_mut(len).enumerate() {
+        let vlen = if valid_lens.is_empty() { len } else { valid_lens[r] };
+        softmax_algo2(row, vlen, &q, &le, &ls, &mut scratch);
+    }
+}
+
+fn assert_planes_bit_equal(a: &[f32], b: &[f32], tag: &str) {
+    assert_eq!(a.len(), b.len(), "{tag}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(),
+                   "{tag}: lane {i}: {x} vs {y}");
+    }
+}
+
+#[test]
+fn randomized_sweep_is_bit_exact_with_scalar_path() {
+    // 150 random configurations: rows 0..8, len 1..120 (often not a
+    // multiple of the group), hostile valid_lens (0, > len), bits 1-4,
+    // random clips and scales — every lane must match bit-for-bit
+    let mut meta = SplitMix64::new(0xBA7C);
+    let mut engines: Vec<BatchSoftmax> = Vec::new();
+    for trial in 0..150 {
+        let rows = meta.below(8);
+        let len = 1 + meta.below(120);
+        let bits = 1 + meta.below(4) as u32;
+        let clip = -1.0 - (meta.uniform() as f32) * 6.0;
+        let scale = 0.5 + (meta.uniform() as f32) * 3.0;
+        let valid_lens: Vec<usize> = match meta.below(3) {
+            0 => Vec::new(), // empty = full rows
+            1 => (0..rows).map(|_| meta.below(len + 1)).collect(),
+            _ => (0..rows)
+                .map(|_| meta.below(2 * len + 8)) // often > len
+                .collect(),
+        };
+        let mut plane =
+            random_plane(rows, len, 0x5EED + trial, scale);
+        let mut reference = plane.clone();
+
+        // reuse engines across trials the way serving does, to also
+        // exercise plane-scratch reuse at changing shapes
+        let engine = match engines
+            .iter_mut()
+            .position(|e| e.matches(bits, clip))
+        {
+            Some(i) => &mut engines[i],
+            None => {
+                engines.push(BatchSoftmax::new(bits, clip));
+                engines.last_mut().unwrap()
+            }
+        };
+        engine.softmax_rows(&mut plane, rows, len, &valid_lens);
+        scalar_reference(&mut reference, len, &valid_lens, bits, clip);
+        assert_planes_bit_equal(
+            &plane, &reference,
+            &format!("trial {trial} rows={rows} len={len} bits={bits} \
+                      clip={clip}"));
+
+        // masked lanes must be exactly zero, valid prefixes normalised
+        for (r, row) in plane.chunks_exact(len).enumerate() {
+            let n = if valid_lens.is_empty() { len } else { valid_lens[r] }
+                .min(len);
+            assert!(row[n..].iter().all(|&p| p == 0.0),
+                    "trial {trial} row {r}: masked lanes leaked");
+            if n > 0 {
+                let s: f32 = row[..n].iter().sum();
+                assert!((s - 1.0).abs() < 1e-3,
+                        "trial {trial} row {r}: sum {s}");
+            }
+        }
+    }
+}
+
+#[test]
+fn hostile_inputs_match_scalar_semantics() {
+    let mut engine = BatchSoftmax::new(2, -4.0);
+
+    // rows = 0: a no-op on an empty plane
+    let mut empty: Vec<f32> = Vec::new();
+    engine.softmax_rows(&mut empty, 0, 64, &[]);
+
+    // all -inf rows: NaN after the max shift collapses to code 0 and
+    // the plane degrades to uniform, never NaN
+    let (rows, len) = (4usize, 22usize); // 22 % 4 != 0
+    let mut plane = vec![f32::NEG_INFINITY; rows * len];
+    let vlens = [len, 3, 1000, 0];
+    engine.softmax_rows(&mut plane, rows, len, &vlens);
+    let mut reference = vec![f32::NEG_INFINITY; rows * len];
+    scalar_reference(&mut reference, len, &vlens, 2, -4.0);
+    assert_planes_bit_equal(&plane, &reference, "all -inf plane");
+    for &p in &plane[..len] {
+        assert!(p.is_finite());
+        assert!((p - 1.0 / len as f32).abs() < 1e-5);
+    }
+    // valid_len = 0 row is all zeros
+    assert!(plane[3 * len..].iter().all(|&p| p == 0.0));
+    // valid_len > len behaves exactly like the full row (row 2)
+    let full: Vec<f32> = {
+        let mut one = vec![f32::NEG_INFINITY; len];
+        let mut e = BatchSoftmax::new(2, -4.0);
+        e.softmax_rows(&mut one, 1, len, &[]);
+        one
+    };
+    assert_planes_bit_equal(&plane[2 * len..3 * len], &full,
+                            "clamped valid_len");
+}
+
+#[test]
+fn single_column_and_single_row_planes() {
+    // len = 1 (every group is a tail group) and rows = 1
+    for bits in [1u32, 2, 3, 4] {
+        let mut col = random_plane(5, 1, 42, 2.0);
+        let mut reference = col.clone();
+        let mut engine = BatchSoftmax::new(bits, -5.0);
+        engine.softmax_rows(&mut col, 5, 1, &[]);
+        scalar_reference(&mut reference, 1, &[], bits, -5.0);
+        assert_planes_bit_equal(&col, &reference,
+                                &format!("len=1 bits={bits}"));
+        for &p in &col {
+            // a 1-lane row is a point mass (up to the padded-lane
+            // correction's last-ulp rounding)
+            assert!((p - 1.0).abs() < 1e-4, "{p}");
+        }
+        let mut row = random_plane(1, 77, 43, 2.0);
+        let mut rref = row.clone();
+        engine.softmax_rows(&mut row, 1, 77, &[33]);
+        scalar_reference(&mut rref, 77, &[33], bits, -5.0);
+        assert_planes_bit_equal(&row, &rref,
+                                &format!("rows=1 bits={bits}"));
+    }
+}
+
+#[test]
+fn batch_sampler_equals_per_row_sampler_on_serving_planes() {
+    // a serving-shaped plane: decode_batch rows, mixed greedy / EXAQ
+    // stochastic params, shared RNG — the batched sampler must emit
+    // the identical token stream
+    let vocab = 64usize;
+    let rows = 8usize;
+    for seed in 0..10u64 {
+        let logits = random_plane(rows, vocab, 1000 + seed, 3.0);
+        let sel: Vec<(usize, SamplingParams)> = (0..rows)
+            .map(|r| {
+                let p = match r % 4 {
+                    0 => SamplingParams::greedy(),
+                    1 => SamplingParams::exaq(0.9, 2, -4.0),
+                    2 => SamplingParams { temperature: 0.8, top_k: 7,
+                                          exaq: Some((2, -4.0)) },
+                    _ => SamplingParams { temperature: 1.2, top_k: 0,
+                                          exaq: None },
+                };
+                (r, p)
+            })
+            .collect();
+        let mut sampler = BatchSampler::default();
+        let mut batched = Vec::new();
+        let mut rng_a = SplitMix64::new(777 + seed);
+        sampler.sample_rows(&logits, vocab, &sel, &mut rng_a,
+                            &mut batched);
+
+        let mut rng_b = SplitMix64::new(777 + seed);
+        let mut scratch = SamplerScratch::default();
+        let scalar: Vec<i32> = sel
+            .iter()
+            .map(|(r, p)| {
+                sample_with(&logits[r * vocab..(r + 1) * vocab], p,
+                            &mut rng_b, &mut scratch)
+            })
+            .collect();
+        assert_eq!(batched, scalar, "seed {seed}");
+        for &(r, _) in &sel {
+            let t = batched[r];
+            assert!((0..vocab as i32).contains(&t),
+                    "seed {seed}: token {t} out of vocabulary");
+        }
+    }
+}
