@@ -8,11 +8,11 @@
 //!      the softmax share our runtime actually exposes.
 
 use std::path::Path;
-use std::time::Instant;
 
 use exaq_repro::cost::{GemmPrecision, MachineModel, TransformerShape};
 use exaq_repro::report::{f as fnum, pct, Table};
 use exaq_repro::runtime::{Engine, HostTensor, QuantMode};
+use exaq_repro::util::clock::Stopwatch;
 use exaq_repro::util::error::Result;
 
 fn main() -> Result<()> {
@@ -48,12 +48,12 @@ fn main() -> Result<()> {
         let tokens = HostTensor::i32(vec![1; 8 * seq], &[8, seq]);
         let mut time_of = |quant, c: Option<&[f32]>| -> Result<f64> {
             engine.prefill(model, quant, &tokens, c)?; // warm/compile
-            let t0 = Instant::now();
+            let t0 = Stopwatch::start();
             let reps = 5;
             for _ in 0..reps {
                 engine.prefill(model, quant, &tokens, c)?;
             }
-            Ok(t0.elapsed().as_secs_f64() / reps as f64)
+            Ok(t0.seconds() / reps as f64)
         };
         let cv = vec![-6.0f32; n_layers];
         let exact = time_of(QuantMode::None, None)?;

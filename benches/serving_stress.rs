@@ -14,13 +14,12 @@
 //! Emits `BENCH_serving.json` for the perf trajectory.
 
 use std::rc::Rc;
-use std::time::Instant;
 
 use exaq_repro::coordinator::{serve_trace, workload, Scenario,
                               ServeConfig, WorkloadSpec};
 use exaq_repro::report::{f as fnum, jnum, jstr, BenchJson, Table};
 use exaq_repro::runtime::{QuantMode, SimBackend, SimConfig};
-use exaq_repro::util::clock::VirtualClock;
+use exaq_repro::util::clock::{Stopwatch, VirtualClock};
 use exaq_repro::util::error::Result;
 
 fn env_requests(default: usize) -> usize {
@@ -47,10 +46,10 @@ fn run_scenario(
         decode_batch: 8,
     };
     let trace = workload::generate(&spec);
-    let host0 = Instant::now();
+    let host0 = Stopwatch::start();
     let (resps, sim_secs, sched) =
         serve_trace(&mut sim, &cfg, trace, clock)?;
-    let host = host0.elapsed().as_secs_f64();
+    let host = host0.seconds();
     assert_eq!(resps.len(), n, "lost requests");
     let toks: usize = resps.iter().map(|r| r.tokens.len()).sum();
     let m = &sched.metrics;

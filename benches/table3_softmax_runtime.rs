@@ -11,13 +11,12 @@
 //! rep count (CI smoke runs with 1). Emits `BENCH_softmax.json` for
 //! the perf trajectory.
 
-use std::time::Instant;
-
 use exaq_repro::cost::CycleTable;
 use exaq_repro::exaq::batched::BatchSoftmax;
 use exaq_repro::exaq::softmax::{softmax_algo1, softmax_algo2,
                                 Algo2Scratch};
 use exaq_repro::report::{f as fnum, jnum, jstr, pct, BenchJson, Table};
+use exaq_repro::util::clock::Stopwatch;
 use exaq_repro::util::rng::SplitMix64;
 
 fn bench<F: FnMut()>(mut f: F, reps: usize) -> f64 {
@@ -26,11 +25,11 @@ fn bench<F: FnMut()>(mut f: F, reps: usize) -> f64 {
     }
     let mut best = f64::INFINITY;
     for _ in 0..5 {
-        let t0 = Instant::now();
+        let t0 = Stopwatch::start();
         for _ in 0..reps {
             f();
         }
-        best = best.min(t0.elapsed().as_secs_f64() / reps as f64);
+        best = best.min(t0.seconds() / reps as f64);
     }
     best
 }

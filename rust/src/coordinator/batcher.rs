@@ -21,7 +21,7 @@ use crate::model::sampling::{BatchSampler, SamplingParams};
 use crate::runtime::backend::InferenceBackend;
 use crate::runtime::{DecodeState, HostTensor, QuantMode};
 use crate::util::clock::Clock;
-use crate::util::error::Result;
+use crate::util::error::{anyhow, Result};
 use crate::util::rng::SplitMix64;
 
 use super::kv::{BatchedKv, KvPool};
@@ -128,8 +128,13 @@ impl Scheduler {
 
         // ---- admission: prefill pending requests into free slots (FIFO)
         while self.pool.available() > 0 && !self.pending.is_empty() {
-            let (req, enqueued) = self.pending.pop_front().unwrap();
-            let slot = self.pool.alloc().unwrap();
+            let Some((req, enqueued)) = self.pending.pop_front() else {
+                break;
+            };
+            let slot = self.pool.alloc().ok_or_else(|| {
+                anyhow!("slot pool reported a free slot but alloc \
+                         failed")
+            })?;
             let prompt_len = req.prompt.len().min(self.seq - 1);
             let mut padded = Vec::with_capacity(self.seq);
             padded.push(1); // <bos>
@@ -152,7 +157,9 @@ impl Scheduler {
             self.sampler.sample_rows(logits.as_f32()?, vocab,
                                      &self.sample_rows, &mut self.rng,
                                      &mut self.sample_out);
-            let tok = self.sample_out[0];
+            let tok = self.sample_out.first().copied().ok_or_else(
+                || anyhow!("sampler returned no token for the \
+                            prefill row"))?;
             let now = self.clock.now();
             let mut inf = InFlight {
                 req,
@@ -183,8 +190,11 @@ impl Scheduler {
             let mut token = vec![0i32; self.decode_batch];
             let mut pos = vec![0i32; self.decode_batch];
             for &s in &active_slots {
-                let inf = self.active[s].as_ref().unwrap();
-                token[s] = *inf.generated.last().unwrap();
+                let inf = self.active[s].as_ref().ok_or_else(
+                    || anyhow!("active slot {s} emptied mid-tick"))?;
+                token[s] = inf.generated.last().copied().ok_or_else(
+                    || anyhow!("slot {s} active with no generated \
+                                token"))?;
                 pos[s] = inf.pos as i32;
             }
             // move (not clone) the batched KV through the backend call;
@@ -210,17 +220,23 @@ impl Scheduler {
             // all EXAQ rows go through a single bit-packed plane kernel
             self.sample_rows.clear();
             for &s in &active_slots {
-                let inf = self.active[s].as_ref().unwrap();
+                let inf = self.active[s].as_ref().ok_or_else(
+                    || anyhow!("active slot {s} emptied mid-tick"))?;
                 self.sample_rows.push((s, inf.req.params));
             }
             self.sampler.sample_rows(lg, vocab, &self.sample_rows,
                                      &mut self.rng,
                                      &mut self.sample_out);
             for (i, &s) in active_slots.iter().enumerate() {
-                let tok = self.sample_out[i];
+                let tok = self.sample_out.get(i).copied().ok_or_else(
+                    || anyhow!("sampler produced {} tokens for {} \
+                                active rows", self.sample_out.len(),
+                               active_slots.len()))?;
                 let mut finished = false;
                 {
-                    let inf = self.active[s].as_mut().unwrap();
+                    let inf = self.active[s].as_mut().ok_or_else(
+                        || anyhow!("active slot {s} emptied \
+                                    mid-tick"))?;
                     inf.generated.push(tok);
                     inf.pos += 1;
                     if tok == self.eos
@@ -231,7 +247,9 @@ impl Scheduler {
                     }
                 }
                 if finished {
-                    let mut inf = self.active[s].take().unwrap();
+                    let mut inf = self.active[s].take().ok_or_else(
+                        || anyhow!("finished slot {s} already \
+                                    empty"))?;
                     done.push(self.finish(&mut inf)?);
                     self.pool.release(s)?;
                 }

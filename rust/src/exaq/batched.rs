@@ -299,11 +299,10 @@ thread_local! {
 /// [`with_cached_engine`] cache, so key semantics cannot drift.
 pub fn ensure_engine(slot: &mut Option<BatchSoftmax>, bits: u32,
                      clip: f32) -> &mut BatchSoftmax {
-    let hit = matches!(slot, Some(e) if e.matches(bits, clip));
-    if !hit {
-        *slot = Some(BatchSoftmax::new(bits, clip));
+    if !matches!(slot, Some(e) if e.matches(bits, clip)) {
+        *slot = None;
     }
-    slot.as_mut().expect("engine just ensured")
+    slot.get_or_insert_with(|| BatchSoftmax::new(bits, clip))
 }
 
 /// Run `f` with a thread-cached [`BatchSoftmax`] for (`bits`, `clip`),

@@ -16,10 +16,15 @@ use super::quant::Quantizer;
 
 /// Plain exact softmax (used by sampling when quantization is off).
 pub fn softmax_exact(row: &mut [f32]) {
-    let m = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let mut m = f32::NEG_INFINITY;
+    for &x in row.iter() {
+        m = m.max(x);
+    }
     let mut sum = 0.0f32;
     for x in row.iter_mut() {
         *x = (*x - m).exp();
+        // lint:allow(float-reduction-discipline): exact-exp reference
+        // path; sequential scalar accumulation IS its definition
         sum += *x;
     }
     let inv = 1.0 / sum.max(1e-30);
@@ -50,6 +55,8 @@ pub fn softmax_algo1(row: &mut [f32], valid_len: usize) {
     let mut sum = 0.0f32;
     let mut i = 0;
     while i < n {
+        // lint:allow(float-reduction-discipline): Algorithm 1 is the
+        // measured baseline — its N scalar adds are the subject
         sum += row[i];
         i += 1;
     }
@@ -162,6 +169,8 @@ pub fn softmax_quant_direct(row: &mut [f32], valid_len: usize, bits: u32,
     let mut sum = 0.0f32;
     for x in &mut row[..n] {
         *x = q.dequant(*x - m).exp();
+        // lint:allow(float-reduction-discipline): non-LUT oracle for
+        // algo2 tests — deliberately independent of LutSum::sum_keys
         sum += *x;
     }
     let inv = 1.0 / sum.max(1e-30);

@@ -21,12 +21,16 @@
 //! * [`cost`] — cycle-accurate cost model (Fig. 1, Table 3 accounting).
 //! * [`model`] — tokenizer + sampling.
 //! * [`report`] — table / CSV renderers for the experiment harness.
+//! * [`lint`] — the repo-specific determinism lint pass behind
+//!   `repro lint` (clock/RNG/iteration/panic/float-reduction rules;
+//!   see CONTRIBUTING.md §Determinism invariants).
 
 pub mod calib;
 pub mod coordinator;
 pub mod cost;
 pub mod eval;
 pub mod exaq;
+pub mod lint;
 pub mod model;
 pub mod report;
 pub mod runtime;

@@ -1,0 +1,602 @@
+//! A small Rust lexer for the lint pass.
+//!
+//! The build image vendors no crates, so the determinism lint cannot
+//! link `syn`; instead the rules run over this hand-rolled token
+//! stream, the same trade the repo already makes for JSON
+//! (`util::json`) and errors (`util::error`). The lexer understands
+//! exactly as much Rust as the rules need to avoid false positives:
+//!
+//! * line / nested block comments (dropped, except `lint:allow`),
+//! * string, raw-string, byte-string, char and byte-char literals
+//!   (collapsed into opaque [`Tok::Literal`] tokens so braces or rule
+//!   keywords inside them never reach a rule),
+//! * lifetimes vs char literals,
+//! * identifiers and single-character punctuation with 1-based
+//!   line/column spans,
+//! * `#[test]` / `#[cfg(test)]` regions, whose tokens are flagged
+//!   [`Spanned::in_test`] (rules skip test code),
+//! * `// lint:allow(<rule>): <reason>` suppression comments.
+
+/// One lexical token. Operators are split into single-character
+/// [`Tok::Punct`] tokens; rules match multi-character operators by
+/// token adjacency (`+` followed by `=` can only be `+=` in valid
+/// Rust).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Tok {
+    /// Identifier or keyword.
+    Ident(String),
+    /// Single punctuation character.
+    Punct(char),
+    /// String / char / byte / numeric literal (content dropped).
+    Literal,
+    /// A lifetime such as `'a` (distinct from char literals).
+    Lifetime,
+}
+
+/// A token with its 1-based source position.
+#[derive(Clone, Debug)]
+pub struct Spanned {
+    pub tok: Tok,
+    pub line: usize,
+    pub col: usize,
+    /// True inside `#[test]` / `#[cfg(test)]` items (and for every
+    /// token of files under `rust/tests/`).
+    pub in_test: bool,
+}
+
+/// A well-formed `// lint:allow(<rule>): <reason>` comment. It
+/// suppresses matching violations on its own line (trailing form) or
+/// on the next line that carries code (standalone form).
+#[derive(Clone, Debug)]
+pub struct Allow {
+    pub rule: String,
+    pub reason: String,
+    pub line: usize,
+}
+
+/// The lexed view of one source file.
+pub struct LexedFile {
+    pub tokens: Vec<Spanned>,
+    pub allows: Vec<Allow>,
+    /// Malformed `lint:allow` comments: (line, what is wrong).
+    pub bad_allows: Vec<(usize, String)>,
+    /// Sorted, deduplicated lines that carry at least one token; used
+    /// to resolve which line a standalone allow-comment targets.
+    pub code_lines: Vec<usize>,
+}
+
+impl LexedFile {
+    /// The first line after `line` that carries code, if any.
+    pub fn next_code_line(&self, line: usize) -> Option<usize> {
+        let i = self.code_lines.partition_point(|&l| l <= line);
+        self.code_lines.get(i).copied()
+    }
+}
+
+struct Scan {
+    chars: Vec<char>,
+    i: usize,
+    line: usize,
+    col: usize,
+}
+
+impl Scan {
+    fn peek(&self) -> Option<char> {
+        self.chars.get(self.i).copied()
+    }
+
+    fn peek_at(&self, ahead: usize) -> Option<char> {
+        self.chars.get(self.i + ahead).copied()
+    }
+
+    fn bump(&mut self) -> Option<char> {
+        let c = self.chars.get(self.i).copied()?;
+        self.i += 1;
+        if c == '\n' {
+            self.line += 1;
+            self.col = 1;
+        } else {
+            self.col += 1;
+        }
+        Some(c)
+    }
+}
+
+fn is_ident_start(c: char) -> bool {
+    c.is_alphabetic() || c == '_'
+}
+
+fn is_ident_continue(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Lex a whole source file. Never fails: unterminated literals simply
+/// run to end of file, which is good enough for linting a tree that
+/// rustc also compiles.
+pub fn lex(src: &str) -> LexedFile {
+    let mut s = Scan {
+        chars: src.chars().collect(),
+        i: 0,
+        line: 1,
+        col: 1,
+    };
+    let mut tokens: Vec<Spanned> = Vec::new();
+    let mut allows = Vec::new();
+    let mut bad_allows = Vec::new();
+
+    while let Some(c) = s.peek() {
+        let (line, col) = (s.line, s.col);
+        if c.is_whitespace() {
+            s.bump();
+            continue;
+        }
+        if c == '/' && s.peek_at(1) == Some('/') {
+            let mut text = String::new();
+            while let Some(ch) = s.peek() {
+                if ch == '\n' {
+                    break;
+                }
+                text.push(ch);
+                s.bump();
+            }
+            // doc comments are prose (they may *describe* the
+            // directive syntax); only plain `//` comments carry
+            // lint:allow directives
+            let is_doc = text.starts_with("///")
+                || text.starts_with("//!");
+            if !is_doc {
+                match parse_allow(&text, line) {
+                    AllowParse::None => {}
+                    AllowParse::Ok(a) => allows.push(a),
+                    AllowParse::Bad(msg) => {
+                        bad_allows.push((line, msg))
+                    }
+                }
+            }
+            continue;
+        }
+        if c == '/' && s.peek_at(1) == Some('*') {
+            s.bump();
+            s.bump();
+            let mut depth = 1usize;
+            while depth > 0 {
+                match (s.peek(), s.peek_at(1)) {
+                    (Some('/'), Some('*')) => {
+                        s.bump();
+                        s.bump();
+                        depth += 1;
+                    }
+                    (Some('*'), Some('/')) => {
+                        s.bump();
+                        s.bump();
+                        depth -= 1;
+                    }
+                    (Some(_), _) => {
+                        s.bump();
+                    }
+                    (None, _) => break,
+                }
+            }
+            continue;
+        }
+        if c == '"' {
+            s.bump();
+            skip_string_body(&mut s);
+            push(&mut tokens, Tok::Literal, line, col);
+            continue;
+        }
+        if c == '\'' {
+            lex_quote(&mut s, &mut tokens, line, col);
+            continue;
+        }
+        if c.is_ascii_digit() {
+            // consume `.` only before another digit, so ranges
+            // (`0..n`) and tuple-index method chains (`x.0.unwrap()`)
+            // don't get swallowed into the number
+            while let Some(ch) = s.peek() {
+                if is_ident_continue(ch) {
+                    s.bump();
+                } else if ch == '.'
+                    && s.peek_at(1)
+                        .is_some_and(|n| n.is_ascii_digit())
+                {
+                    s.bump();
+                } else {
+                    break;
+                }
+            }
+            push(&mut tokens, Tok::Literal, line, col);
+            continue;
+        }
+        if is_ident_start(c) {
+            let mut name = String::new();
+            while s.peek().is_some_and(is_ident_continue) {
+                name.push(s.bump().unwrap_or(' '));
+            }
+            if lex_literal_prefix(&mut s, &mut tokens, &name, line, col)
+            {
+                continue;
+            }
+            push(&mut tokens, Tok::Ident(name), line, col);
+            continue;
+        }
+        s.bump();
+        push(&mut tokens, Tok::Punct(c), line, col);
+    }
+
+    mark_test_regions(&mut tokens);
+
+    let mut code_lines: Vec<usize> =
+        tokens.iter().map(|t| t.line).collect();
+    code_lines.dedup();
+    code_lines.sort_unstable();
+    code_lines.dedup();
+
+    LexedFile { tokens, allows, bad_allows, code_lines }
+}
+
+fn push(tokens: &mut Vec<Spanned>, tok: Tok, line: usize, col: usize) {
+    tokens.push(Spanned { tok, line, col, in_test: false });
+}
+
+/// Consume a (non-raw) string body after the opening `"`.
+fn skip_string_body(s: &mut Scan) {
+    while let Some(ch) = s.peek() {
+        s.bump();
+        match ch {
+            '"' => return,
+            '\\' => {
+                s.bump(); // the escaped char, whatever it is
+            }
+            _ => {}
+        }
+    }
+}
+
+/// `'` starts either a lifetime or a char literal. Uses the same
+/// lookahead rustc does: `'x'` (next-next is a closing quote) or an
+/// escape means char literal; `'ident` without a closing quote is a
+/// lifetime; anything else (`'('`, `'∈'`) is a char literal.
+fn lex_quote(s: &mut Scan, tokens: &mut Vec<Spanned>, line: usize,
+             col: usize) {
+    s.bump(); // the opening '
+    match (s.peek(), s.peek_at(1)) {
+        (Some('\\'), _) => {
+            s.bump();
+            s.bump(); // escape designator
+            while s.peek().is_some_and(|ch| ch != '\'') {
+                s.bump(); // \u{..} payloads
+            }
+            s.bump(); // closing '
+            push(tokens, Tok::Literal, line, col);
+        }
+        (Some(a), Some('\'')) if is_ident_continue(a) => {
+            s.bump();
+            s.bump();
+            push(tokens, Tok::Literal, line, col);
+        }
+        (Some(a), _) if is_ident_start(a) => {
+            while s.peek().is_some_and(is_ident_continue) {
+                s.bump();
+            }
+            push(tokens, Tok::Lifetime, line, col);
+        }
+        (Some(_), _) => {
+            s.bump();
+            if s.peek() == Some('\'') {
+                s.bump();
+            }
+            push(tokens, Tok::Literal, line, col);
+        }
+        (None, _) => push(tokens, Tok::Literal, line, col),
+    }
+}
+
+/// Handle `r"..."`, `r#"..."#`, `b"..."`, `br"..."`, `b'..'` and raw
+/// identifiers `r#name` after the ident characters of `name` have been
+/// consumed. Returns true when a literal (or raw ident) was emitted.
+fn lex_literal_prefix(s: &mut Scan, tokens: &mut Vec<Spanned>,
+                      name: &str, line: usize, col: usize) -> bool {
+    let raw = name == "r" || name == "br";
+    if raw && matches!(s.peek(), Some('"') | Some('#')) {
+        let mut hashes = 0usize;
+        while s.peek() == Some('#') {
+            hashes += 1;
+            s.bump();
+        }
+        if s.peek() != Some('"') {
+            // `r#ident` — a raw identifier, not a string
+            if hashes == 1 && s.peek().is_some_and(is_ident_start) {
+                let mut id = String::new();
+                while s.peek().is_some_and(is_ident_continue) {
+                    id.push(s.bump().unwrap_or(' '));
+                }
+                push(tokens, Tok::Ident(id), line, col);
+                return true;
+            }
+            return false;
+        }
+        s.bump(); // opening "
+        'body: while s.peek().is_some() {
+            if s.peek() == Some('"') {
+                let mut ok = true;
+                for h in 0..hashes {
+                    if s.peek_at(1 + h) != Some('#') {
+                        ok = false;
+                        break;
+                    }
+                }
+                if ok {
+                    for _ in 0..=hashes {
+                        s.bump();
+                    }
+                    break 'body;
+                }
+            }
+            s.bump();
+        }
+        push(tokens, Tok::Literal, line, col);
+        return true;
+    }
+    if name == "b" || name == "br" {
+        if s.peek() == Some('"') {
+            s.bump();
+            skip_string_body(s);
+            push(tokens, Tok::Literal, line, col);
+            return true;
+        }
+        if name == "b" && s.peek() == Some('\'') {
+            lex_quote(s, tokens, line, col);
+            return true;
+        }
+    }
+    false
+}
+
+/// Flag every token belonging to a `#[test]` or `#[cfg(test)]` item
+/// (through the end of its balanced `{..}` block, or its terminating
+/// `;`). `#[cfg(not(test))]` is recognised as NOT test code.
+fn mark_test_regions(tokens: &mut [Spanned]) {
+    let mut i = 0usize;
+    while i < tokens.len() {
+        let starts_attr = matches!(tokens[i].tok, Tok::Punct('#'))
+            && matches!(tokens.get(i + 1).map(|t| &t.tok),
+                        Some(Tok::Punct('[')));
+        if !starts_attr {
+            i += 1;
+            continue;
+        }
+        let mut j = i + 2;
+        let mut depth = 1usize;
+        let mut has_test = false;
+        let mut has_not = false;
+        while j < tokens.len() && depth > 0 {
+            match &tokens[j].tok {
+                Tok::Punct('[') => depth += 1,
+                Tok::Punct(']') => depth -= 1,
+                Tok::Ident(s) if s == "test" => has_test = true,
+                Tok::Ident(s) if s == "not" => has_not = true,
+                _ => {}
+            }
+            j += 1;
+        }
+        if !(has_test && !has_not) {
+            i = j;
+            continue;
+        }
+        // Skip over any further attributes, then the item signature, to
+        // its body. The first `{` at depth 0 opens the body; a `;`
+        // before any `{` ends a block-less item (use, const, …).
+        let mut k = j;
+        let mut brace = 0usize;
+        let mut entered = false;
+        while k < tokens.len() {
+            match &tokens[k].tok {
+                Tok::Punct('{') => {
+                    brace += 1;
+                    entered = true;
+                }
+                Tok::Punct('}') => {
+                    brace = brace.saturating_sub(1);
+                    if entered && brace == 0 {
+                        k += 1;
+                        break;
+                    }
+                }
+                Tok::Punct(';') if !entered => {
+                    k += 1;
+                    break;
+                }
+                _ => {}
+            }
+            k += 1;
+        }
+        let end = k.min(tokens.len());
+        for t in &mut tokens[i..end] {
+            t.in_test = true;
+        }
+        i = end;
+    }
+}
+
+enum AllowParse {
+    /// No `lint:allow` marker in this comment.
+    None,
+    Ok(Allow),
+    Bad(String),
+}
+
+/// Parse `lint:allow(<rule>): <reason>` out of a line comment's text.
+/// A bare `lint:allow` mention without the `(` is comment prose, not
+/// a (malformed) directive.
+fn parse_allow(comment: &str, line: usize) -> AllowParse {
+    let Some(pos) = comment.find("lint:allow(") else {
+        return AllowParse::None;
+    };
+    let rest = &comment[pos + "lint:allow(".len()..];
+    let Some(close) = rest.find(')') else {
+        return AllowParse::Bad(
+            "unclosed rule name in lint:allow(...)".into());
+    };
+    let rule = rest[..close].trim().to_string();
+    if rule.is_empty() {
+        return AllowParse::Bad("empty rule name in lint:allow".into());
+    }
+    let after = &rest[close + 1..];
+    let Some(reason) = after.trim_start().strip_prefix(':') else {
+        return AllowParse::Bad(format!(
+            "lint:allow({rule}) needs a `: <reason>` suffix"));
+    };
+    let reason = reason.trim().to_string();
+    if reason.is_empty() {
+        return AllowParse::Bad(format!(
+            "lint:allow({rule}) has an empty reason"));
+    }
+    AllowParse::Ok(Allow { rule, reason, line })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(f: &LexedFile) -> Vec<(String, usize, bool)> {
+        f.tokens
+            .iter()
+            .filter_map(|t| match &t.tok {
+                Tok::Ident(s) => {
+                    Some((s.clone(), t.line, t.in_test))
+                }
+                _ => None,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn comments_strings_and_chars_hide_their_contents() {
+        let src = "// Instant in a comment\n\
+                   /* HashMap /* nested */ still comment */\n\
+                   let s = \"Instant::now() inside\";\n\
+                   let r = r#\"unwrap() \"quoted\" inside\"#;\n\
+                   let c = '{';\n\
+                   let b = b'\\'';\n\
+                   let real = 1;\n";
+        let f = lex(src);
+        let names: Vec<String> =
+            idents(&f).into_iter().map(|(n, _, _)| n).collect();
+        assert!(!names.contains(&"Instant".to_string()), "{names:?}");
+        assert!(!names.contains(&"HashMap".to_string()));
+        assert!(!names.contains(&"unwrap".to_string()));
+        assert!(names.contains(&"real".to_string()));
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        let f = lex("fn f<'a>(x: &'a str) -> char { 'a' }");
+        let lifetimes = f
+            .tokens
+            .iter()
+            .filter(|t| t.tok == Tok::Lifetime)
+            .count();
+        assert_eq!(lifetimes, 2);
+        let literals = f
+            .tokens
+            .iter()
+            .filter(|t| t.tok == Tok::Literal)
+            .count();
+        assert_eq!(literals, 1);
+    }
+
+    #[test]
+    fn numbers_do_not_swallow_ranges_or_tuple_methods() {
+        let f = lex("for i in 0..n { x.0.unwrap(); let y = 1.5e3; }");
+        let names: Vec<String> =
+            idents(&f).into_iter().map(|(n, _, _)| n).collect();
+        assert!(names.contains(&"n".to_string()), "{names:?}");
+        assert!(names.contains(&"unwrap".to_string()), "{names:?}");
+    }
+
+    #[test]
+    fn spans_are_one_based_lines_and_columns() {
+        let f = lex("let a = 1;\n  foo();\n");
+        let foo = f
+            .tokens
+            .iter()
+            .find(|t| t.tok == Tok::Ident("foo".into()))
+            .map(|t| (t.line, t.col));
+        assert_eq!(foo, Some((2, 3)));
+    }
+
+    #[test]
+    fn cfg_test_blocks_are_flagged() {
+        let src = "fn hot() { work(); }\n\
+                   #[cfg(test)]\n\
+                   mod tests {\n\
+                       fn helper() { scratch(); }\n\
+                   }\n\
+                   fn also_hot() { more(); }\n";
+        let f = lex(src);
+        for (name, _, in_test) in idents(&f) {
+            match name.as_str() {
+                "work" | "more" | "hot" | "also_hot" => {
+                    assert!(!in_test, "{name} wrongly flagged")
+                }
+                "helper" | "scratch" | "tests" => {
+                    assert!(in_test, "{name} not flagged")
+                }
+                _ => {}
+            }
+        }
+    }
+
+    #[test]
+    fn cfg_not_test_is_not_test_code() {
+        let f = lex("#[cfg(not(test))]\nfn hot() { work(); }\n");
+        for (name, _, in_test) in idents(&f) {
+            if name == "work" {
+                assert!(!in_test);
+            }
+        }
+    }
+
+    #[test]
+    fn test_attribute_marks_only_its_fn() {
+        let src = "#[test]\nfn check() { probe(); }\n\
+                   fn hot() { work(); }\n";
+        let f = lex(src);
+        for (name, _, in_test) in idents(&f) {
+            match name.as_str() {
+                "probe" | "check" => assert!(in_test, "{name}"),
+                "work" | "hot" => assert!(!in_test, "{name}"),
+                _ => {}
+            }
+        }
+    }
+
+    #[test]
+    fn allow_comments_parse_and_reject_missing_reasons() {
+        let src = "// lint:allow(clock-discipline): bench timing\n\
+                   let a = 1;\n\
+                   let b = 2; // lint:allow(seeded-rng): trailing ok\n\
+                   // lint:allow(no-reason)\n";
+        let f = lex(src);
+        assert_eq!(f.allows.len(), 2);
+        assert_eq!(f.allows[0].rule, "clock-discipline");
+        assert_eq!(f.allows[0].line, 1);
+        assert_eq!(f.next_code_line(1), Some(2));
+        assert_eq!(f.allows[1].rule, "seeded-rng");
+        assert_eq!(f.allows[1].line, 3);
+        assert_eq!(f.bad_allows.len(), 1);
+        assert_eq!(f.bad_allows[0].0, 4);
+    }
+
+    #[test]
+    fn doc_comments_and_prose_mentions_are_not_directives() {
+        let src = "//! docs may show `lint:allow(<rule>): <reason>`\n\
+                   /// same for item docs: lint:allow(x)\n\
+                   // prose mentioning lint:allow without parens\n\
+                   fn f() {}\n";
+        let f = lex(src);
+        assert!(f.allows.is_empty(), "{:?}", f.allows);
+        assert!(f.bad_allows.is_empty(), "{:?}", f.bad_allows);
+    }
+}

@@ -1,0 +1,189 @@
+//! `repro lint` — the repo-specific determinism lint pass.
+//!
+//! The repo's headline claims are bit-exactness claims: the batched
+//! plane kernel is bit-identical to scalar `softmax_algo2`, and the
+//! serving sim asserts deterministic latency percentiles over
+//! thousands of virtual-clock requests. Nothing in rustc guards those
+//! invariants — one `Instant::now()`, one ambient RNG, one `HashMap`
+//! iteration or one reassociated f32 reduction silently breaks them.
+//! This pass turns the invariants into machine-checked, named rules
+//! with spans (see [`rules::RULES`] and CONTRIBUTING.md).
+//!
+//! The image vendors no crates, so instead of a `syn` AST walk the
+//! rules run over an in-tree token stream ([`lexer`]) — the same
+//! dependency-free trade as `util::json`. Diagnostics are emitted
+//! human-readable (`file:line:col: rule: message`) and, on request,
+//! as machine-readable JSON through [`crate::util::json`].
+//!
+//! Exit-code contract of the `repro lint` subcommand:
+//! 0 = clean, 1 = violations found, 2 = internal error.
+
+pub mod lexer;
+pub mod rules;
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use crate::util::error::{anyhow, Context, Result};
+use crate::util::json::Json;
+
+pub use rules::{Violation, RULES};
+
+/// Directories scanned below the repo root, in deterministic order.
+const SCAN_DIRS: &[&str] =
+    &["rust/src", "rust/tests", "benches", "examples"];
+
+/// Directories whose files are wholly test code: every rule skips
+/// them, exactly like `#[cfg(test)]` items.
+const TEST_DIRS: &[&str] = &["rust/tests"];
+
+/// Result of linting one source string or a whole tree.
+pub struct Report {
+    /// Files scanned (0 for single-source runs).
+    pub files: usize,
+    pub violations: Vec<Violation>,
+    /// Candidates silenced by `lint:allow` comments.
+    pub suppressed: usize,
+}
+
+impl Report {
+    pub fn is_clean(&self) -> bool {
+        self.violations.is_empty()
+    }
+
+    /// Machine-readable form of the report.
+    pub fn to_json(&self, root: &str) -> Json {
+        let mut obj = BTreeMap::new();
+        obj.insert("tool".to_string(),
+                   Json::Str("repro-lint".to_string()));
+        obj.insert("root".to_string(), Json::Str(root.to_string()));
+        obj.insert("files".to_string(), Json::Num(self.files as f64));
+        obj.insert("suppressed".to_string(),
+                   Json::Num(self.suppressed as f64));
+        let vs = self
+            .violations
+            .iter()
+            .map(|v| {
+                let mut m = BTreeMap::new();
+                m.insert("rule".to_string(),
+                         Json::Str(v.rule.to_string()));
+                m.insert("file".to_string(),
+                         Json::Str(v.file.clone()));
+                m.insert("line".to_string(), Json::Num(v.line as f64));
+                m.insert("col".to_string(), Json::Num(v.col as f64));
+                m.insert("message".to_string(),
+                         Json::Str(v.message.clone()));
+                Json::Obj(m)
+            })
+            .collect();
+        obj.insert("violations".to_string(), Json::Arr(vs));
+        Json::Obj(obj)
+    }
+}
+
+/// Lint one source string as if it lived at repo-relative path `rel`
+/// (forward slashes). This is the fixture-test entry point; rule
+/// scoping (hot paths, exempt modules, test directories) is driven
+/// entirely by `rel`.
+pub fn lint_source(rel: &str, src: &str) -> Report {
+    let rel = rel.replace('\\', "/");
+    let mut lexed = lexer::lex(src);
+    let in_test_dir = TEST_DIRS
+        .iter()
+        .any(|d| rel.starts_with(&format!("{d}/")));
+    if in_test_dir {
+        for t in &mut lexed.tokens {
+            t.in_test = true;
+        }
+    }
+    let (violations, suppressed) = rules::check_file(&rel, &lexed);
+    Report { files: 0, violations, suppressed }
+}
+
+/// Lint the whole tree under `root` (the repo checkout). Files are
+/// visited in sorted path order so output and JSON are stable.
+pub fn run_tree(root: &Path) -> Result<Report> {
+    if !root.join("rust/src").is_dir() {
+        return Err(anyhow!(
+            "{} does not look like the repo root (no rust/src)",
+            root.display()));
+    }
+    let mut files: Vec<PathBuf> = Vec::new();
+    for d in SCAN_DIRS {
+        let dir = root.join(d);
+        if dir.is_dir() {
+            collect_rs(&dir, &mut files)?;
+        }
+    }
+    files.sort();
+
+    let mut violations = Vec::new();
+    let mut suppressed = 0usize;
+    for f in &files {
+        let src = fs::read_to_string(f)
+            .with_context(|| format!("reading {}", f.display()))?;
+        let rel = f
+            .strip_prefix(root)
+            .unwrap_or(f)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let r = lint_source(&rel, &src);
+        violations.extend(r.violations);
+        suppressed += r.suppressed;
+    }
+    Ok(Report { files: files.len(), violations, suppressed })
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    let entries = fs::read_dir(dir)
+        .with_context(|| format!("scanning {}", dir.display()))?;
+    for entry in entries {
+        let entry = entry
+            .with_context(|| format!("reading {}", dir.display()))?;
+        let p = entry.path();
+        if p.is_dir() {
+            collect_rs(&p, out)?;
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_json_round_trips_through_util_json() {
+        let r = lint_source(
+            "rust/src/runtime/fake.rs",
+            "use std::collections::HashMap;\n",
+        );
+        assert_eq!(r.violations.len(), 1);
+        let j = r.to_json(".");
+        let txt = j.to_string_pretty();
+        let back = Json::parse(&txt).expect("valid json");
+        let vs = back.get("violations").and_then(Json::as_arr)
+            .expect("violations array");
+        assert_eq!(vs.len(), 1);
+        assert_eq!(vs[0].get("rule").and_then(Json::as_str),
+                   Some("deterministic-iteration"));
+        assert_eq!(vs[0].get("line").and_then(Json::as_f64), Some(1.0));
+    }
+
+    #[test]
+    fn test_dir_files_are_exempt() {
+        let src = "use std::collections::HashMap;\n\
+                   fn f() { x.unwrap(); }\n";
+        let r = lint_source("rust/tests/some_integration.rs", src);
+        assert!(r.is_clean(), "{:?}", r.violations);
+    }
+
+    #[test]
+    fn run_tree_rejects_non_repo_roots() {
+        let err = run_tree(Path::new("/definitely/not/a/repo"));
+        assert!(err.is_err());
+    }
+}

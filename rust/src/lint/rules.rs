@@ -1,0 +1,317 @@
+//! The determinism rules and their token-level matchers.
+//!
+//! Every rule is named, scoped to the paths where its invariant
+//! matters, and skips test code (`#[cfg(test)]` / `#[test]` items and
+//! everything under `rust/tests/`). A violation can be suppressed with
+//! a `// lint:allow(<rule>): <reason>` comment on the same line or on
+//! the line directly above; the reason is mandatory. CONTRIBUTING.md
+//! documents each rule's rationale.
+
+use std::fmt;
+
+use super::lexer::{LexedFile, Spanned, Tok};
+
+/// One rule violation, spanned to the offending token.
+#[derive(Clone, Debug)]
+pub struct Violation {
+    pub rule: &'static str,
+    pub file: String,
+    pub line: usize,
+    pub col: usize,
+    pub message: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}:{}: {}: {}", self.file, self.line, self.col,
+               self.rule, self.message)
+    }
+}
+
+/// Rule registry entry (drives `repro lint --list` and the
+/// unknown-rule check on `lint:allow` comments).
+pub struct RuleInfo {
+    pub name: &'static str,
+    pub summary: &'static str,
+}
+
+pub const CLOCK: &str = "clock-discipline";
+pub const RNG: &str = "seeded-rng";
+pub const ITER: &str = "deterministic-iteration";
+pub const PANIC: &str = "no-panic-hot-path";
+pub const FLOAT: &str = "float-reduction-discipline";
+pub const ALLOW_SYNTAX: &str = "lint-allow-syntax";
+
+pub const RULES: &[RuleInfo] = &[
+    RuleInfo {
+        name: CLOCK,
+        summary: "no raw Instant/SystemTime outside util::clock \
+                  (host time must flow through Clock or Stopwatch)",
+    },
+    RuleInfo {
+        name: RNG,
+        summary: "no ambient randomness (thread_rng, rand::random, \
+                  OsRng, ...) outside util::rng — SplitMix64 only",
+    },
+    RuleInfo {
+        name: ITER,
+        summary: "no HashMap/HashSet in coordinator/, runtime/ or \
+                  model/ — iteration order must be deterministic",
+    },
+    RuleInfo {
+        name: PANIC,
+        summary: "no unwrap()/expect()/panic-family macros on the \
+                  decode-tick and kernel hot paths — use util::error",
+    },
+    RuleInfo {
+        name: FLOAT,
+        summary: "f32 reductions in the softmax kernels must route \
+                  through LutSum::sum_keys (no .sum()/.fold()/manual \
+                  accumulators that could reassociate)",
+    },
+    RuleInfo {
+        name: ALLOW_SYNTAX,
+        summary: "lint:allow comments must name a known rule and give \
+                  a reason",
+    },
+];
+
+/// Files exempt from [`CLOCK`]: the one sanctioned wall-time module.
+const CLOCK_HOME: &str = "rust/src/util/clock.rs";
+/// Files exempt from [`RNG`]: the seeded-RNG home itself.
+const RNG_HOME: &str = "rust/src/util/rng.rs";
+
+/// Path prefixes where [`ITER`] applies (serving-visible state).
+const ITER_SCOPE: &[&str] = &[
+    "rust/src/coordinator/",
+    "rust/src/runtime/",
+    "rust/src/model/",
+];
+
+/// Exact files forming the decode-tick / kernel hot path for [`PANIC`].
+const HOT_PATHS: &[&str] = &[
+    "rust/src/coordinator/batcher.rs",
+    "rust/src/runtime/sim.rs",
+    "rust/src/runtime/engine.rs",
+    "rust/src/model/sampling.rs",
+    "rust/src/exaq/softmax.rs",
+    "rust/src/exaq/batched.rs",
+    "rust/src/exaq/lut.rs",
+];
+
+/// Files where [`FLOAT`] applies. `exaq/lut.rs` is deliberately NOT
+/// here: `LutSum::sum_keys` (and the table builds feeding it) is the
+/// blessed reduction the rule funnels everyone else into.
+const FLOAT_SCOPE: &[&str] = &[
+    "rust/src/exaq/batched.rs",
+    "rust/src/exaq/softmax.rs",
+];
+
+/// Run every rule over one lexed file; returns surviving violations
+/// plus how many candidates `lint:allow` comments suppressed.
+pub fn check_file(rel: &str, lexed: &LexedFile)
+                  -> (Vec<Violation>, usize) {
+    let mut candidates = Vec::new();
+    clock_discipline(rel, &lexed.tokens, &mut candidates);
+    seeded_rng(rel, &lexed.tokens, &mut candidates);
+    deterministic_iteration(rel, &lexed.tokens, &mut candidates);
+    no_panic_hot_path(rel, &lexed.tokens, &mut candidates);
+    float_reduction(rel, &lexed.tokens, &mut candidates);
+
+    let mut suppressed = 0usize;
+    let mut out: Vec<Violation> = Vec::new();
+    for v in candidates {
+        let allowed = lexed.allows.iter().any(|a| {
+            a.rule == v.rule
+                && (a.line == v.line
+                    || lexed.next_code_line(a.line) == Some(v.line))
+        });
+        if allowed {
+            suppressed += 1;
+        } else {
+            out.push(v);
+        }
+    }
+
+    // allow-comment hygiene (not itself suppressible)
+    for (line, msg) in &lexed.bad_allows {
+        out.push(Violation {
+            rule: ALLOW_SYNTAX,
+            file: rel.to_string(),
+            line: *line,
+            col: 1,
+            message: msg.clone(),
+        });
+    }
+    for a in &lexed.allows {
+        if !RULES.iter().any(|r| r.name == a.rule) {
+            out.push(Violation {
+                rule: ALLOW_SYNTAX,
+                file: rel.to_string(),
+                line: a.line,
+                col: 1,
+                message: format!("lint:allow names unknown rule \
+                                  '{}'", a.rule),
+            });
+        }
+    }
+
+    out.sort_by(|a, b| (a.line, a.col).cmp(&(b.line, b.col)));
+    (out, suppressed)
+}
+
+fn violation(rule: &'static str, rel: &str, t: &Spanned,
+             message: String) -> Violation {
+    Violation {
+        rule,
+        file: rel.to_string(),
+        line: t.line,
+        col: t.col,
+        message,
+    }
+}
+
+fn ident<'a>(t: &'a Spanned) -> Option<&'a str> {
+    match &t.tok {
+        Tok::Ident(s) => Some(s.as_str()),
+        _ => None,
+    }
+}
+
+fn is_punct(t: &Spanned, c: char) -> bool {
+    t.tok == Tok::Punct(c)
+}
+
+fn clock_discipline(rel: &str, toks: &[Spanned],
+                    out: &mut Vec<Violation>) {
+    if rel == CLOCK_HOME {
+        return;
+    }
+    for t in toks.iter().filter(|t| !t.in_test) {
+        if let Some(name) = ident(t) {
+            if name == "Instant" || name == "SystemTime" {
+                out.push(violation(CLOCK, rel, t, format!(
+                    "raw `{name}` outside util::clock — route host \
+                     timing through util::clock::Stopwatch (benches, \
+                     compile timing) or the Clock trait (serving)")));
+            }
+        }
+    }
+}
+
+fn seeded_rng(rel: &str, toks: &[Spanned], out: &mut Vec<Violation>) {
+    if rel == RNG_HOME {
+        return;
+    }
+    const AMBIENT: &[&str] = &[
+        "thread_rng", "ThreadRng", "OsRng", "from_entropy",
+        "RandomState", "getrandom", "StdRng", "SmallRng",
+    ];
+    for (i, t) in toks.iter().enumerate() {
+        if t.in_test {
+            continue;
+        }
+        let Some(name) = ident(t) else { continue };
+        if AMBIENT.contains(&name) {
+            out.push(violation(RNG, rel, t, format!(
+                "ambient randomness `{name}` — every random stream \
+                 must come from a seeded util::rng::SplitMix64")));
+        }
+        // `rand::random` (the ident pair around a `::`)
+        if name == "rand"
+            && toks.get(i + 1).is_some_and(|t| is_punct(t, ':'))
+            && toks.get(i + 2).is_some_and(|t| is_punct(t, ':'))
+            && toks.get(i + 3).and_then(ident) == Some("random")
+        {
+            out.push(violation(RNG, rel, t, "`rand::random` draws \
+                from an ambient RNG — use a seeded \
+                util::rng::SplitMix64".to_string()));
+        }
+    }
+}
+
+fn deterministic_iteration(rel: &str, toks: &[Spanned],
+                           out: &mut Vec<Violation>) {
+    if !ITER_SCOPE.iter().any(|p| rel.starts_with(p)) {
+        return;
+    }
+    for t in toks.iter().filter(|t| !t.in_test) {
+        if let Some(name) = ident(t) {
+            if name == "HashMap" || name == "HashSet" {
+                out.push(violation(ITER, rel, t, format!(
+                    "`{name}` on a serving-visible path — iteration \
+                     order is nondeterministic; use BTreeMap/BTreeSet \
+                     or explicitly sorted iteration")));
+            }
+        }
+    }
+}
+
+fn no_panic_hot_path(rel: &str, toks: &[Spanned],
+                     out: &mut Vec<Violation>) {
+    if !HOT_PATHS.contains(&rel) {
+        return;
+    }
+    const MACROS: &[&str] =
+        &["panic", "unreachable", "todo", "unimplemented"];
+    for (i, t) in toks.iter().enumerate() {
+        if t.in_test {
+            continue;
+        }
+        let Some(name) = ident(t) else { continue };
+        let method_call = i > 0
+            && is_punct(&toks[i - 1], '.')
+            && toks.get(i + 1).is_some_and(|t| is_punct(t, '('));
+        if method_call && (name == "unwrap" || name == "expect") {
+            out.push(violation(PANIC, rel, t, format!(
+                "`.{name}()` on the decode/kernel hot path — convert \
+                 to a util::error Result (`?`, ok_or_else, let-else)")));
+        }
+        if MACROS.contains(&name)
+            && toks.get(i + 1).is_some_and(|t| is_punct(t, '!'))
+        {
+            out.push(violation(PANIC, rel, t, format!(
+                "`{name}!` on the decode/kernel hot path — return a \
+                 util::error Result instead of aborting the tick")));
+        }
+    }
+}
+
+fn float_reduction(rel: &str, toks: &[Spanned],
+                   out: &mut Vec<Violation>) {
+    if !FLOAT_SCOPE.contains(&rel) {
+        return;
+    }
+    const ACCUMULATORS: &[&str] = &["sum", "acc", "total"];
+    for (i, t) in toks.iter().enumerate() {
+        if t.in_test {
+            continue;
+        }
+        let Some(name) = ident(t) else { continue };
+        // iterator reductions: `.sum(` / `.sum::<` / `.fold(` / ...
+        let is_method = i > 0 && is_punct(&toks[i - 1], '.');
+        let called = toks.get(i + 1).is_some_and(|n| {
+            is_punct(n, '(') || is_punct(n, ':')
+        });
+        if is_method
+            && called
+            && matches!(name, "sum" | "fold" | "product")
+        {
+            out.push(violation(FLOAT, rel, t, format!(
+                "iterator `.{name}()` in a softmax kernel — packed-\
+                 code reductions must go through LutSum::sum_keys so \
+                 scalar and batched paths stay bit-identical")));
+        }
+        // manual accumulation: `sum += ...` on a well-known
+        // accumulator name
+        if ACCUMULATORS.contains(&name)
+            && toks.get(i + 1).is_some_and(|n| is_punct(n, '+'))
+            && toks.get(i + 2).is_some_and(|n| is_punct(n, '='))
+        {
+            out.push(violation(FLOAT, rel, t, format!(
+                "manual accumulation `{name} +=` in a softmax kernel \
+                 — route the reduction through LutSum::sum_keys (or \
+                 lint:allow with the numerical argument)")));
+        }
+    }
+}

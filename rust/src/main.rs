@@ -12,13 +12,15 @@
 //!   serve-demo    batched serving demo over the coordinator
 //!   stress        deterministic serving stress run on the SimBackend
 //!                 (no artifacts needed; virtual-clock latency report)
+//!   lint          determinism lint over the repo tree
+//!                 (exit 0 clean / 1 violations / 2 internal error)
 //!   selftest      engine smoke: load bundle, run one prefill
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::path::PathBuf;
 use std::rc::Rc;
 
-use exaq_repro::util::clock::{VirtualClock, WallClock};
+use exaq_repro::util::clock::{Stopwatch, VirtualClock, WallClock};
 use exaq_repro::util::error::{anyhow, bail, Result};
 
 use exaq_repro::calib;
@@ -39,12 +41,12 @@ use exaq_repro::runtime::{Engine, QuantMode, SimBackend, SimConfig};
 
 /// Tiny flag parser: `--key value` pairs + positional subcommand.
 struct Args {
-    flags: HashMap<String, String>,
+    flags: BTreeMap<String, String>,
 }
 
 impl Args {
     fn parse(argv: &[String]) -> (Option<String>, Args) {
-        let mut flags = HashMap::new();
+        let mut flags = BTreeMap::new();
         let mut cmd = None;
         let mut i = 0;
         while i < argv.len() {
@@ -93,11 +95,12 @@ fn main() -> Result<()> {
         Some("generate") => cmd_generate(&args),
         Some("serve-demo") => cmd_serve_demo(&args),
         Some("stress") => cmd_stress(&args),
+        Some("lint") => std::process::exit(cmd_lint(&args)),
         Some("selftest") => cmd_selftest(&args),
         other => {
             eprintln!("usage: repro <solve-clip|fit-table1|mse-curve|\
                        breakdown|calibrate|eval|generate|serve-demo|\
-                       stress|selftest> [--flags]");
+                       stress|lint|selftest> [--flags]");
             if let Some(o) = other {
                 bail!("unknown command {o}");
             }
@@ -322,7 +325,7 @@ fn cmd_damage(args: &Args) -> Result<()> {
         let stream = generate_tokens(&world, &tok, 987654,
                                      n_batches * 8 * seq + 1);
         let mut base = Vec::new();
-        let mut kls = HashMap::new();
+        let mut kls = BTreeMap::new();
         let configs: Vec<(String, QuantMode, Option<Vec<f32>>)> = vec![
             ("NAIVE-INT2".into(), QuantMode::Static { bits: 2 },
              Some(clip_naive(&cal.layers))),
@@ -503,10 +506,10 @@ fn cmd_stress(args: &Args) -> Result<()> {
         decode_batch,
     };
     let trace = workload::generate(&spec);
-    let host0 = std::time::Instant::now();
+    let host0 = Stopwatch::start();
     let (resps, sim_secs, sched) =
         serve_trace(&mut sim, &cfg, trace, clock)?;
-    let host_secs = host0.elapsed().as_secs_f64();
+    let host_secs = host0.seconds();
 
     if resps.len() != n {
         bail!("stress run lost requests: {} of {n} completed",
@@ -537,6 +540,42 @@ fn cmd_stress(args: &Args) -> Result<()> {
             fnum(m.total_latency.max(), 5)]);
     println!("{}", t.to_markdown());
     Ok(())
+}
+
+/// `repro lint [--root DIR] [--json FILE] [--list]` — run the
+/// determinism lint pass over the repo tree. Returns the process exit
+/// code per the contract: 0 clean, 1 violations, 2 internal error.
+fn cmd_lint(args: &Args) -> i32 {
+    if args.flags.contains_key("list") {
+        for r in exaq_repro::lint::RULES {
+            println!("{:<28} {}", r.name, r.summary);
+        }
+        return 0;
+    }
+    let root = PathBuf::from(args.get("root", "."));
+    let report = match exaq_repro::lint::run_tree(&root) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("repro lint: internal error: {e}");
+            return 2;
+        }
+    };
+    for v in &report.violations {
+        println!("{v}");
+    }
+    let json_path = args.get("json", "");
+    if !json_path.is_empty() {
+        let j = report.to_json(&root.to_string_lossy());
+        let body = j.to_string_pretty() + "\n";
+        if let Err(e) = std::fs::write(&json_path, body) {
+            eprintln!("repro lint: writing {json_path}: {e}");
+            return 2;
+        }
+    }
+    eprintln!("repro lint: {} files, {} violation(s), {} suppressed",
+              report.files, report.violations.len(),
+              report.suppressed);
+    if report.is_clean() { 0 } else { 1 }
 }
 
 fn cmd_selftest(args: &Args) -> Result<()> {

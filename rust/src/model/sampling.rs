@@ -99,7 +99,7 @@ fn apply_top_k(probs: &mut [f32], k: usize, idx: &mut Vec<usize>) {
     idx.clear();
     idx.extend(0..probs.len());
     idx.select_nth_unstable_by(k - 1, |&a, &b| {
-        probs[b].partial_cmp(&probs[a]).unwrap()
+        probs[b].total_cmp(&probs[a])
     });
     for &i in &idx[k..] {
         probs[i] = 0.0;
@@ -228,8 +228,15 @@ impl BatchSampler {
                 self.map.push(usize::MAX);
                 continue;
             }
-            let gi =
-                self.groups.iter().position(|g| g.0 == cl).unwrap();
+            let Some(gi) =
+                self.groups.iter().position(|g| g.0 == cl)
+            else {
+                // unreachable by construction (every non-greedy class
+                // was registered in the partition pass); degrade to the
+                // greedy fallback rather than aborting a decode tick
+                self.map.push(usize::MAX);
+                continue;
+            };
             let slot = self.cursor[gi];
             self.cursor[gi] += 1;
             self.map.push(slot);
@@ -252,20 +259,22 @@ impl BatchSampler {
                     }
                 }
                 RowClass::Exaq(bits, c) => {
-                    let engine = match self
+                    let ei = match self
                         .engines
-                        .iter_mut()
+                        .iter()
                         .position(|e| e.matches(bits, c))
                     {
-                        Some(i) => &mut self.engines[i],
+                        Some(i) => i,
                         None => {
                             self.engines.push(BatchSoftmax::new(bits, c));
-                            self.engines.last_mut().unwrap()
+                            self.engines.len() - 1
                         }
                     };
-                    engine.softmax_rows(slice, count, vocab, &[]);
+                    self.engines[ei]
+                        .softmax_rows(slice, count, vocab, &[]);
                 }
-                RowClass::Greedy => unreachable!(),
+                // greedy rows never enter the partition groups
+                RowClass::Greedy => {}
             }
         }
 

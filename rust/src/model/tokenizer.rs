@@ -1,6 +1,6 @@
 //! Closed-vocabulary word tokenizer (manifest-driven).
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use crate::util::error::{anyhow, Result};
 
@@ -8,7 +8,7 @@ use crate::util::error::{anyhow, Result};
 #[derive(Clone, Debug)]
 pub struct Tokenizer {
     vocab: Vec<String>,
-    index: HashMap<String, i32>,
+    index: BTreeMap<String, i32>,
     pub pad: i32,
     pub bos: i32,
     pub eos: i32,

@@ -8,10 +8,10 @@
 //! crate cannot split a tuple buffer on-device, see DESIGN.md §Perf);
 //! weights never re-cross after load thanks to `execute_b`.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
-use std::time::Instant;
 
+use crate::util::clock::Stopwatch;
 use crate::util::error::{anyhow, bail, Result};
 
 use super::backend::InferenceBackend;
@@ -78,8 +78,10 @@ pub struct Engine {
     client: xla::PjRtClient,
     dir: PathBuf,
     pub manifest: Manifest,
-    models: HashMap<String, LoadedModel>,
-    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    // BTreeMaps, not HashMaps: model/executable walk order is
+    // deterministic, per the deterministic-iteration lint rule
+    models: BTreeMap<String, LoadedModel>,
+    executables: BTreeMap<String, xla::PjRtLoadedExecutable>,
     pub stats: EngineStats,
 }
 
@@ -93,8 +95,8 @@ impl Engine {
             client,
             dir: dir.to_path_buf(),
             manifest,
-            models: HashMap::new(),
-            executables: HashMap::new(),
+            models: BTreeMap::new(),
+            executables: BTreeMap::new(),
             stats: EngineStats::default(),
         })
     }
@@ -148,10 +150,11 @@ impl Engine {
     fn executable(&mut self, file: &str, key: &str)
                   -> Result<&xla::PjRtLoadedExecutable> {
         if !self.executables.contains_key(key) {
-            let t0 = Instant::now();
+            let t0 = Stopwatch::start();
             let path = self.dir.join(file);
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().unwrap())
+            let path_str = path.to_str().ok_or_else(
+                || anyhow!("non-UTF8 artifact path {path:?}"))?;
+            let proto = xla::HloModuleProto::from_text_file(path_str)
                 .map_err(|e| anyhow!("parsing HLO {path:?}: {e}"))?;
             let comp = xla::XlaComputation::from_proto(&proto);
             let exe = self
@@ -160,7 +163,7 @@ impl Engine {
                 .map_err(|e| anyhow!("compiling {key}: {e}"))?;
             self.stats.compiles += 1;
             eprintln!("[engine] compiled {key} in {:.2}s",
-                      t0.elapsed().as_secs_f64());
+                      t0.seconds());
             self.executables.insert(key.to_string(), exe);
         }
         Ok(&self.executables[key])
@@ -210,12 +213,12 @@ impl Engine {
         args.extend(model_bufs.iter());
         args.extend(uploaded.iter());
 
-        let t0 = Instant::now();
+        let t0 = Stopwatch::start();
         let outs = exe
             .execute_b(&args)
             .map_err(|e| anyhow!("executing {artifact_key}: {e}"))?;
         self.stats.executions += 1;
-        self.stats.exec_micros += t0.elapsed().as_micros() as u64;
+        self.stats.exec_micros += t0.micros();
 
         let lit = outs[0][0]
             .to_literal_sync()
@@ -250,12 +253,15 @@ impl Engine {
             extra.push(HostTensor::f32(c.to_vec(), &[c.len()]));
         }
         let mut outs = self.run(model, &key, &extra)?;
-        if outs.len() != 3 {
-            bail!("prefill returned {} outputs, expected 3", outs.len());
+        let (Some(vc), Some(kc), Some(logits)) =
+            (outs.pop(), outs.pop(), outs.pop())
+        else {
+            bail!("prefill returned too few outputs, expected 3");
+        };
+        if !outs.is_empty() {
+            bail!("prefill returned {} outputs, expected 3",
+                  outs.len() + 3);
         }
-        let vc = outs.pop().unwrap();
-        let kc = outs.pop().unwrap();
-        let logits = outs.pop().unwrap();
         Ok((logits, DecodeState { kc, vc }))
     }
 
@@ -279,12 +285,18 @@ impl Engine {
             extra.push(HostTensor::f32(c.to_vec(), &[c.len()]));
         }
         let mut outs = self.run(model, &key, &extra)?;
-        if outs.len() != 3 {
-            bail!("decode returned {} outputs, expected 3", outs.len());
+        let (Some(vc), Some(kc), Some(logits)) =
+            (outs.pop(), outs.pop(), outs.pop())
+        else {
+            bail!("decode returned too few outputs, expected 3");
+        };
+        if !outs.is_empty() {
+            bail!("decode returned {} outputs, expected 3",
+                  outs.len() + 3);
         }
-        state.vc = outs.pop().unwrap();
-        state.kc = outs.pop().unwrap();
-        Ok(outs.pop().unwrap())
+        state.vc = vc;
+        state.kc = kc;
+        Ok(logits)
     }
 
     /// Calibration prefill: tokens [B,S], lengths [B] ->
@@ -303,11 +315,15 @@ impl Engine {
             HostTensor::i32(lengths.to_vec(), &[lengths.len()]),
         ];
         let mut outs = self.run(model, &key, &extra)?;
-        if outs.len() != 2 {
-            bail!("prefill_stats returned {} outputs", outs.len());
+        let (Some(stats), Some(logits)) = (outs.pop(), outs.pop())
+        else {
+            bail!("prefill_stats returned too few outputs, \
+                   expected 2");
+        };
+        if !outs.is_empty() {
+            bail!("prefill_stats returned {} outputs, expected 2",
+                  outs.len() + 2);
         }
-        let stats = outs.pop().unwrap();
-        let logits = outs.pop().unwrap();
         Ok((logits, stats))
     }
 

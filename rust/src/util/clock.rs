@@ -54,6 +54,33 @@ impl Clock for WallClock {
     }
 }
 
+/// Host-side elapsed-time stopwatch for bench harnesses and compile /
+/// execute timing. Together with [`WallClock`] this is the only
+/// sanctioned wall-time entry point: the `clock-discipline` lint rule
+/// (`crate::lint`) rejects raw `Instant` / `SystemTime` reads outside
+/// this module, so host timing can never leak into the deterministic
+/// serving or kernel paths unnoticed.
+#[derive(Clone, Copy, Debug)]
+pub struct Stopwatch {
+    epoch: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Self { epoch: Instant::now() }
+    }
+
+    /// Seconds since [`Stopwatch::start`].
+    pub fn seconds(&self) -> f64 {
+        self.epoch.elapsed().as_secs_f64()
+    }
+
+    /// Whole microseconds since [`Stopwatch::start`].
+    pub fn micros(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+}
+
 /// Deterministic simulated time: starts at 0.0 and moves only when
 /// someone calls [`Clock::advance`].
 pub struct VirtualClock {
@@ -107,6 +134,17 @@ mod tests {
         let b = c.now();
         assert!(b >= a);
         assert!(a >= 0.0);
+    }
+
+    #[test]
+    fn stopwatch_is_monotonic() {
+        let w = Stopwatch::start();
+        let a = w.seconds();
+        let b = w.seconds();
+        assert!(a >= 0.0);
+        assert!(b >= a);
+        let us = w.micros();
+        assert!(us as f64 / 1e6 <= w.seconds() + 1e-3);
     }
 
     #[test]

@@ -1,0 +1,275 @@
+//! Fixture suite for the determinism lint (`exaq_repro::lint`): one
+//! violating snippet per rule asserting rule name + file:line:col
+//! span, `lint:allow` suppression, rule scoping, the real repo tree
+//! staying clean, and the `repro lint` CLI exit-code contract
+//! (0 clean / 1 violations / 2 internal error).
+
+use std::path::Path;
+use std::process::Command;
+
+use exaq_repro::lint::{lint_source, run_tree, Violation, RULES};
+use exaq_repro::util::json::Json;
+
+/// Lint one snippet and require exactly one violation.
+fn single(rel: &str, src: &str) -> Violation {
+    let r = lint_source(rel, src);
+    assert_eq!(r.violations.len(), 1, "{rel}: {:?}", r.violations);
+    r.violations.into_iter().next().expect("one violation")
+}
+
+/// Lint one snippet and require zero violations.
+fn clean(rel: &str, src: &str) {
+    let r = lint_source(rel, src);
+    assert!(r.is_clean(), "{rel}: {:?}", r.violations);
+}
+
+// ---- one violating fixture per rule, with spans -----------------
+
+#[test]
+fn clock_discipline_flags_raw_instant() {
+    let v = single("rust/src/coordinator/workload.rs",
+                   "use std::time::Instant;\n");
+    assert_eq!(v.rule, "clock-discipline");
+    assert_eq!((v.line, v.col), (1, 16));
+    let v = single("rust/src/report/mod.rs",
+                   "use std::time::SystemTime;\n");
+    assert_eq!(v.rule, "clock-discipline");
+    assert_eq!((v.line, v.col), (1, 16));
+}
+
+#[test]
+fn seeded_rng_flags_ambient_randomness() {
+    let v = single("rust/src/exaq/quant.rs",
+                   "fn f() -> u64 { thread_rng().gen() }\n");
+    assert_eq!(v.rule, "seeded-rng");
+    assert_eq!((v.line, v.col), (1, 17));
+    let v = single("rust/src/eval/world.rs",
+                   "fn f() -> u8 { rand::random() }\n");
+    assert_eq!(v.rule, "seeded-rng");
+    assert_eq!(v.line, 1);
+}
+
+#[test]
+fn deterministic_iteration_flags_hashmap_in_scope() {
+    let v = single("rust/src/runtime/x.rs",
+                   "use std::collections::HashMap;\n");
+    assert_eq!(v.rule, "deterministic-iteration");
+    assert_eq!((v.line, v.col), (1, 23));
+    let v = single("rust/src/coordinator/x.rs",
+                   "type S = std::collections::HashSet<u32>;\n");
+    assert_eq!(v.rule, "deterministic-iteration");
+}
+
+#[test]
+fn no_panic_hot_path_flags_unwrap_and_macros() {
+    let v = single("rust/src/runtime/sim.rs",
+                   "pub fn f(x: Option<u32>) -> u32 {\n\
+                    \x20   x.unwrap()\n}\n");
+    assert_eq!(v.rule, "no-panic-hot-path");
+    assert_eq!((v.line, v.col), (2, 7));
+    let v = single("rust/src/coordinator/batcher.rs",
+                   "fn f(x: Option<u32>) -> u32 {\n\
+                    \x20   x.expect(\"boom\")\n}\n");
+    assert_eq!(v.rule, "no-panic-hot-path");
+    assert_eq!(v.line, 2);
+    let v = single("rust/src/exaq/lut.rs",
+                   "fn f() {\n    unreachable!()\n}\n");
+    assert_eq!(v.rule, "no-panic-hot-path");
+    assert_eq!((v.line, v.col), (2, 5));
+}
+
+#[test]
+fn float_reduction_flags_iterator_sums_and_accumulators() {
+    let v = single("rust/src/exaq/batched.rs",
+                   "fn d(xs: &[f32]) -> f32 {\n\
+                    \x20   xs.iter().sum()\n}\n");
+    assert_eq!(v.rule, "float-reduction-discipline");
+    assert_eq!((v.line, v.col), (2, 15));
+    let v = single("rust/src/exaq/softmax.rs",
+                   "fn d(xs: &[f32]) -> f32 {\n\
+                    \x20   let mut sum = 0.0f32;\n\
+                    \x20   for &x in xs {\n\
+                    \x20       sum += x;\n\
+                    \x20   }\n\
+                    \x20   sum\n}\n");
+    assert_eq!(v.rule, "float-reduction-discipline");
+    assert_eq!((v.line, v.col), (4, 9));
+    let v = single("rust/src/exaq/batched.rs",
+                   "fn d(xs: &[f32]) -> f32 {\n\
+                    \x20   xs.iter().fold(0.0, |a, b| a + b)\n}\n");
+    assert_eq!(v.rule, "float-reduction-discipline");
+    assert_eq!(v.line, 2);
+}
+
+// ---- suppression ------------------------------------------------
+
+#[test]
+fn standalone_allow_suppresses_next_code_line() {
+    let src = "pub fn f(x: Option<u32>) -> u32 {\n\
+               \x20   // lint:allow(no-panic-hot-path): fixture\n\
+               \x20   x.unwrap()\n}\n";
+    let r = lint_source("rust/src/runtime/sim.rs", src);
+    assert!(r.is_clean(), "{:?}", r.violations);
+    assert_eq!(r.suppressed, 1);
+}
+
+#[test]
+fn trailing_allow_suppresses_its_own_line() {
+    let src = "fn d(xs: &[f32]) -> f32 {\n\
+               \x20   xs.iter().sum() \
+               // lint:allow(float-reduction-discipline): fixture\n}\n";
+    let r = lint_source("rust/src/exaq/batched.rs", src);
+    assert!(r.is_clean(), "{:?}", r.violations);
+    assert_eq!(r.suppressed, 1);
+}
+
+#[test]
+fn allow_for_the_wrong_rule_does_not_suppress() {
+    let src = "pub fn f(x: Option<u32>) -> u32 {\n\
+               \x20   // lint:allow(clock-discipline): wrong rule\n\
+               \x20   x.unwrap()\n}\n";
+    let r = lint_source("rust/src/runtime/sim.rs", src);
+    assert_eq!(r.violations.len(), 1);
+    assert_eq!(r.violations[0].rule, "no-panic-hot-path");
+    assert_eq!(r.suppressed, 0);
+}
+
+#[test]
+fn malformed_and_unknown_allows_are_violations() {
+    let v = single("rust/src/util/json.rs",
+                   "// lint:allow(no-panic-hot-path)\nfn f() {}\n");
+    assert_eq!(v.rule, "lint-allow-syntax");
+    assert_eq!(v.line, 1);
+    let v = single("rust/src/util/json.rs",
+                   "// lint:allow(bogus-rule): whatever\nfn f() {}\n");
+    assert_eq!(v.rule, "lint-allow-syntax");
+    assert!(v.message.contains("bogus-rule"), "{}", v.message);
+}
+
+// ---- scoping ----------------------------------------------------
+
+#[test]
+fn rules_stay_inside_their_scopes() {
+    // HashMap outside coordinator/runtime/model is fine
+    clean("rust/src/eval/world.rs",
+          "use std::collections::HashMap;\n");
+    // unwrap off the hot path is fine
+    clean("rust/src/report/mod.rs",
+          "fn f(x: Option<u32>) -> u32 { x.unwrap() }\n");
+    // .sum() outside the kernel files is fine
+    clean("rust/src/cost/mod.rs",
+          "fn d(xs: &[f32]) -> f32 { xs.iter().sum() }\n");
+    // util::clock itself may hold Instant; util::rng is exempt
+    clean("rust/src/util/clock.rs", "use std::time::Instant;\n");
+    clean("rust/src/util/rng.rs",
+          "fn f() -> u64 { getrandom() }\n");
+}
+
+#[test]
+fn test_code_is_exempt() {
+    clean("rust/src/runtime/sim.rs",
+          "#[cfg(test)]\nmod tests {\n\
+           \x20   fn f(x: Option<u32>) -> u32 { x.unwrap() }\n}\n");
+    clean("rust/tests/whatever.rs",
+          "use std::time::Instant;\n\
+           fn f(x: Option<u32>) -> u32 { x.unwrap() }\n");
+}
+
+#[test]
+fn comments_and_strings_never_trigger_rules() {
+    clean("rust/src/runtime/x.rs",
+          "// HashMap in a comment\n\
+           fn f() -> &'static str { \"Instant::now() unwrap()\" }\n");
+}
+
+// ---- the real tree ----------------------------------------------
+
+#[test]
+fn repo_tree_is_clean() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let r = run_tree(root).expect("tree lint runs");
+    assert!(r.is_clean(), "violations in the repo tree:\n{}",
+            r.violations
+                .iter()
+                .map(|v| v.to_string())
+                .collect::<Vec<_>>()
+                .join("\n"));
+    assert!(r.files >= 30, "only {} files scanned", r.files);
+    // the three sanctioned scalar-baseline accumulations in
+    // exaq/softmax.rs ride on lint:allow
+    assert!(r.suppressed >= 3, "suppressed {}", r.suppressed);
+}
+
+#[test]
+fn rule_registry_is_complete() {
+    let names: Vec<&str> = RULES.iter().map(|r| r.name).collect();
+    for expected in ["clock-discipline", "seeded-rng",
+                     "deterministic-iteration", "no-panic-hot-path",
+                     "float-reduction-discipline",
+                     "lint-allow-syntax"] {
+        assert!(names.contains(&expected), "missing rule {expected}");
+    }
+}
+
+// ---- CLI exit-code contract -------------------------------------
+
+#[test]
+fn cli_exits_zero_on_the_repo_tree() {
+    let out = Command::new(env!("CARGO_BIN_EXE_repro"))
+        .args(["lint", "--root", env!("CARGO_MANIFEST_DIR")])
+        .output()
+        .expect("repro lint runs");
+    assert_eq!(out.status.code(), Some(0), "stdout: {}\nstderr: {}",
+               String::from_utf8_lossy(&out.stdout),
+               String::from_utf8_lossy(&out.stderr));
+}
+
+#[test]
+fn cli_exits_one_with_span_on_a_violating_tree() {
+    let tmp = std::env::temp_dir()
+        .join(format!("exaq-lint-fixture-{}", std::process::id()));
+    let src_dir = tmp.join("rust/src/runtime");
+    std::fs::create_dir_all(&src_dir).expect("mkdir fixture");
+    std::fs::write(
+        src_dir.join("sim.rs"),
+        "pub fn f(x: Option<u32>) -> u32 { x.unwrap() }\n",
+    ).expect("write fixture");
+
+    let out = Command::new(env!("CARGO_BIN_EXE_repro"))
+        .args(["lint", "--root", &tmp.to_string_lossy()])
+        .output()
+        .expect("repro lint runs");
+    assert_eq!(out.status.code(), Some(1));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains(
+        "rust/src/runtime/sim.rs:1:37: no-panic-hot-path"),
+        "missing named rule + span in:\n{stdout}");
+
+    // --json emits a parseable report through util::json
+    let jpath = tmp.join("lint.json");
+    let out = Command::new(env!("CARGO_BIN_EXE_repro"))
+        .args(["lint", "--root", &tmp.to_string_lossy(), "--json",
+               &jpath.to_string_lossy()])
+        .output()
+        .expect("repro lint runs");
+    assert_eq!(out.status.code(), Some(1));
+    let body = std::fs::read_to_string(&jpath).expect("json written");
+    let j = Json::parse(&body).expect("valid json");
+    let vs = j.get("violations").and_then(Json::as_arr)
+        .expect("violations array");
+    assert_eq!(vs.len(), 1);
+    assert_eq!(vs[0].get("rule").and_then(Json::as_str),
+               Some("no-panic-hot-path"));
+    assert_eq!(vs[0].get("line").and_then(Json::as_f64), Some(1.0));
+
+    std::fs::remove_dir_all(&tmp).ok();
+}
+
+#[test]
+fn cli_exits_two_on_a_broken_root() {
+    let out = Command::new(env!("CARGO_BIN_EXE_repro"))
+        .args(["lint", "--root", "/definitely/not/a/repo"])
+        .output()
+        .expect("repro lint runs");
+    assert_eq!(out.status.code(), Some(2));
+}
