@@ -63,6 +63,10 @@ fn main() -> Result<()> {
     let mut out = BenchJson::new("serving");
     out.meta("requests", jnum(n as f64));
     out.meta("decode_batch", jnum(8.0));
+    out.meta("simd",
+             jstr(exaq_repro::exaq::simd::default_level().name()));
+    out.meta("threads",
+             jnum(exaq_repro::util::pool::default_threads() as f64));
 
     // ---- scenario sweep (batched kernel, the serving default) ------
     let mut t = Table::new(

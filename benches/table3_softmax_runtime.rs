@@ -9,14 +9,19 @@
 //! Hand-rolled harness (the image has no criterion): warmup + N timed
 //! repetitions, best-of-5 reporting. `EXAQ_BENCH_REPS` overrides the
 //! rep count (CI smoke runs with 1). Emits `BENCH_softmax.json` for
-//! the perf trajectory.
+//! the perf trajectory (`EXAQ_BENCH_COMMIT=1` also snapshots it to
+//! `BENCH_baseline/` for the `repro compare` gate). `baseline_us` is
+//! the same kernel pinned to scalar lanes + one worker — the
+//! pre-SIMD/pool configuration the fast path must keep beating.
 
 use exaq_repro::cost::CycleTable;
 use exaq_repro::exaq::batched::BatchSoftmax;
+use exaq_repro::exaq::simd;
 use exaq_repro::exaq::softmax::{softmax_algo1, softmax_algo2,
                                 Algo2Scratch};
 use exaq_repro::report::{f as fnum, jnum, jstr, pct, BenchJson, Table};
 use exaq_repro::util::clock::Stopwatch;
+use exaq_repro::util::pool;
 use exaq_repro::util::rng::SplitMix64;
 
 fn bench<F: FnMut()>(mut f: F, reps: usize) -> f64 {
@@ -51,11 +56,14 @@ fn main() {
         "Table 3 — softmax runtime, Algo.1 vs Algo.2 scalar vs batched \
          bit-packed (wall-clock, Rust)",
         &["rows x len", "bits", "algo1 (us)", "scalar a2 (us)",
-          "batched a2 (us)", "batched/scalar", "saving vs a1",
-          "cycle-model saving", "accum speedup (model)"]);
+          "baseline a2 (us)", "batched a2 (us)", "batched/scalar",
+          "vs baseline", "saving vs a1", "cycle-model saving",
+          "accum speedup (model)"]);
     let mut out = BenchJson::new("softmax");
     out.meta("reps", jnum(reps as f64));
     out.meta("clip", jnum(c as f64));
+    out.meta("simd", jstr(simd::default_level().name()));
+    out.meta("threads", jnum(pool::default_threads() as f64));
 
     for (rows, len) in [(32usize, 2048usize), (64, 1024), (256, 256)] {
         let base: Vec<f32> = (0..rows * len)
@@ -91,6 +99,21 @@ fn main() {
                 },
                 reps,
             );
+            // the PR-5 configuration pinned as regression baseline:
+            // scalar lanes, one worker — what `batched` was before
+            // the SIMD + row-pool work landed
+            let mut base_engine = BatchSoftmax::new(bits, c);
+            base_engine
+                .set_simd_level(simd::Level::Scalar)
+                .set_threads(1);
+            buf.copy_from_slice(&base);
+            let baseline = bench(
+                || {
+                    base_engine.softmax_rows(&mut buf, rows, len,
+                                             &[]);
+                },
+                reps,
+            );
             buf.copy_from_slice(&base);
             let batched = bench(
                 || {
@@ -98,7 +121,7 @@ fn main() {
                 },
                 reps,
             );
-            // the two Algo-2 paths must agree bit-for-bit (the bench
+            // every Algo-2 path must agree bit-for-bit (the bench
             // would otherwise compare different arithmetic)
             {
                 let mut sb = base.clone();
@@ -109,6 +132,10 @@ fn main() {
                 engine.softmax_rows(&mut bb, rows, len, &[]);
                 assert_eq!(sb, bb,
                            "scalar/batched mismatch at bits={bits}");
+                let mut pb = base.clone();
+                base_engine.softmax_rows(&mut pb, rows, len, &[]);
+                assert_eq!(pb, bb,
+                           "baseline/fast mismatch at bits={bits}");
             }
             let cycles = CycleTable::default();
             t.row(&[
@@ -116,8 +143,10 @@ fn main() {
                 bits.to_string(),
                 fnum(a1 * 1e6, 1),
                 fnum(scalar * 1e6, 1),
+                fnum(baseline * 1e6, 1),
                 fnum(batched * 1e6, 1),
                 format!("{:.2}x", scalar / batched.max(1e-12)),
+                format!("{:.2}x", baseline / batched.max(1e-12)),
                 pct((a1 - batched) / a1.max(1e-12)),
                 pct(cycles.softmax_saving(len, bits)),
                 fnum(cycles.accumulation_speedup_grouped(
@@ -130,11 +159,16 @@ fn main() {
                 ("group", jnum(engine.group() as f64)),
                 ("algo1_us", jnum(a1 * 1e6)),
                 ("scalar_us", jnum(scalar * 1e6)),
+                ("baseline_us", jnum(baseline * 1e6)),
                 ("batched_us", jnum(batched * 1e6)),
                 // guarded: a coarse timer at EXAQ_BENCH_REPS=1 could
                 // report 0, and inf would not serialise as valid JSON
                 ("batched_speedup",
                  jnum(scalar / batched.max(1e-12))),
+                ("speedup_vs_baseline",
+                 jnum(baseline / batched.max(1e-12))),
+                ("simd", jstr(engine.simd_level().name())),
+                ("threads", jnum(engine.threads() as f64)),
                 ("kernel", jstr("softmax_rows")),
             ]);
         }

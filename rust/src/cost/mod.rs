@@ -53,6 +53,26 @@ impl CycleTable {
             + n * self.div
     }
 
+    /// Critical-path cycles of an `[rows × n]` Algo-1 plane split over
+    /// `threads` deterministic row-pool workers: the longest worker
+    /// owns `ceil(rows / threads)` rows. `threads = 0` is treated as 1
+    /// (the pool's inline path).
+    pub fn algo1_softmax_plane(&self, rows: usize, n: usize,
+                               threads: usize) -> f64 {
+        rows.div_ceil(threads.max(1)) as f64 * self.algo1_softmax(n)
+    }
+
+    /// Critical-path cycles of an `[rows × n]` Algo-2 plane over the
+    /// row pool. `group` comes from the live kernel
+    /// (`BatchSoftmax::group()`) and `threads` from
+    /// `BatchSoftmax::threads()` so the accounting tracks what the
+    /// pooled kernel actually executes.
+    pub fn algo2_softmax_plane(&self, rows: usize, n: usize,
+                               group: usize, threads: usize) -> f64 {
+        rows.div_ceil(threads.max(1)) as f64
+            * self.algo2_softmax_grouped(n, group)
+    }
+
     /// Fractional runtime saving of Algo. 2 over Algo. 1 (Table 3's
     /// 36.9% figure is (3.274 − 2.066) / 3.274).
     pub fn softmax_saving(&self, n: usize, bits: u32) -> f64 {
@@ -292,6 +312,30 @@ mod tests {
                      - t.algo2_softmax_grouped(1024, eng.group()))
                         .abs() < 1e-12);
         }
+    }
+
+    #[test]
+    fn plane_accounting_tracks_the_live_kernel_knobs() {
+        use crate::exaq::BatchSoftmax;
+        let t = CycleTable::default();
+        let mut eng = BatchSoftmax::new(2, -4.0);
+        eng.set_threads(4);
+        let (rows, n) = (64usize, 256usize);
+        // the plane variants take group/threads straight off the engine
+        let plane = t.algo2_softmax_plane(rows, n, eng.group(),
+                                          eng.threads());
+        let per_row = t.algo2_softmax_grouped(n, eng.group());
+        assert!((plane - 16.0 * per_row).abs() < 1e-9,
+                "64 rows on 4 workers = 16 rows critical path");
+        // threads = 0 (auto sentinel upstream) accounts as inline
+        let inline = t.algo1_softmax_plane(rows, n, 0);
+        assert!((inline - rows as f64 * t.algo1_softmax(n)).abs()
+                    < 1e-9);
+        // uneven split charges the longest worker
+        let uneven = t.algo1_softmax_plane(10, n, 4);
+        assert!((uneven - 3.0 * t.algo1_softmax(n)).abs() < 1e-9);
+        // parallel Algo-2 still beats parallel Algo-1 cell-for-cell
+        assert!(plane < t.algo1_softmax_plane(rows, n, eng.threads()));
     }
 
     #[test]

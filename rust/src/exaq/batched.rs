@@ -25,6 +25,23 @@
 //! * **M = 3/4**: one `u16` key per two codes (`c0 | c1<<M`), the 2x
 //!   accumulation configuration of Table 3.
 //!
+//! ## SIMD lanes and the row pool
+//!
+//! The per-row passes (max-shift, quantize+pack, premultiplied decode)
+//! dispatch through [`simd`] — explicit sse2/avx2/neon lanes with the
+//! always-compiled scalar reference (`EXAQ_SIMD` overrides the level
+//! process-wide, [`set_simd_level`](BatchSoftmax::set_simd_level) per
+//! engine). Across rows, large planes are split into row-range chunks
+//! and drained by the scoped worker pool in [`util::pool`]
+//! (`EXAQ_THREADS` caps the auto default,
+//! [`set_threads`](BatchSoftmax::set_threads) pins an engine). Each
+//! chunk owns a disjoint `&mut` slice of both the f32 plane and the
+//! packed key plane plus its own `norm` scratch, and rows are pure
+//! functions of their input lanes — so the output is bit-identical
+//! for every level, every thread count, and every interleaving.
+//! Workers never touch the thread-local [`with_cached_engine`] cache:
+//! they borrow the engine's tables directly.
+//!
 //! ## Bit-exactness with the scalar path
 //!
 //! `softmax_rows` agrees *bit-for-bit* with per-row
@@ -36,11 +53,24 @@
 //! decodes output lanes from the packed keys — same values, ~40% less
 //! memory traffic, no per-element divide/multiply pass.
 
-use std::cell::RefCell;
+use std::cell::{Cell, RefCell};
 
 use super::lut::{LutExp, LutSum, PackedKey};
 use super::quant::Quantizer;
+use super::simd;
 use super::softmax::{softmax_algo2, Algo2Scratch};
+use crate::util::pool;
+
+/// Largest `2^M` the per-chunk premultiplied table must hold.
+const NORM_LANES: usize = 256;
+
+/// Auto mode: do not parallelise planes smaller than this many lanes
+/// (scoped spawns cost ~tens of µs — a decode tick over a small vocab
+/// must stay inline).
+const PAR_MIN_LANES: usize = 16_384;
+
+/// Auto mode: at least this many lanes per worker before adding one.
+const PAR_LANES_PER_WORKER: usize = 8_192;
 
 /// Reusable bit-packed code plane: one LUT_sum key per code group,
 /// `rows × ceil(len/group)` keys per plane (see the module docs for
@@ -69,11 +99,13 @@ pub struct BatchSoftmax {
     lut_sum: LutSum,
     /// Requested clip before the quantizer's sanity clamp (cache key).
     req_clip: f32,
-    /// Per-row premultiplied normalisation table: `lut_exp[c] * inv`.
-    norm: Vec<f32>,
     packed: PackedCodes,
     /// Scratch for the scalar-compatible single-row entry point.
     scratch: Algo2Scratch,
+    /// Worker-count override; 0 = auto (pool default + size heuristic).
+    threads: usize,
+    /// Lane-specialisation level for the per-row passes.
+    level: simd::Level,
 }
 
 impl BatchSoftmax {
@@ -86,9 +118,10 @@ impl BatchSoftmax {
             lut_exp,
             lut_sum,
             req_clip: clip,
-            norm: Vec::new(),
             packed: PackedCodes::default(),
             scratch: Algo2Scratch::default(),
+            threads: 0,
+            level: simd::default_level(),
         }
     }
 
@@ -103,7 +136,9 @@ impl BatchSoftmax {
     }
 
     /// Does this engine serve the requested configuration? (Compares
-    /// the *requested* clip, pre-clamp, so cache keys are exact.)
+    /// the *requested* clip, pre-clamp, so cache keys are exact.
+    /// Thread count and SIMD level are *not* part of the key — every
+    /// combination produces bit-identical output.)
     pub fn matches(&self, bits: u32, clip: f32) -> bool {
         self.quant.bits == bits && self.req_clip == clip
     }
@@ -115,6 +150,55 @@ impl BatchSoftmax {
     /// Current packed-plane footprint in bytes.
     pub fn plane_bytes(&self) -> usize {
         self.packed.plane_bytes()
+    }
+
+    /// Pin the worker count. Explicit values (>= 1) parallelise any
+    /// plane with >= 2 rows — the determinism tests rely on that; 0
+    /// restores auto mode (pool default capped by the plane-size
+    /// heuristic, so decode ticks over small vocabs stay inline).
+    pub fn set_threads(&mut self, threads: usize) -> &mut Self {
+        self.threads = threads;
+        self
+    }
+
+    /// The effective worker cap (auto mode reports the pool default).
+    pub fn threads(&self) -> usize {
+        if self.threads == 0 {
+            pool::default_threads()
+        } else {
+            self.threads
+        }
+    }
+
+    /// Pin the lane level; an unavailable level falls back to scalar
+    /// (never faults). Output is bit-identical across levels.
+    pub fn set_simd_level(&mut self, level: simd::Level) -> &mut Self {
+        self.level = if simd::available_levels().contains(&level) {
+            level
+        } else {
+            simd::Level::Scalar
+        };
+        self
+    }
+
+    pub fn simd_level(&self) -> simd::Level {
+        self.level
+    }
+
+    /// Workers to use for a `[rows × len]` plane.
+    fn plan_workers(&self, rows: usize, len: usize) -> usize {
+        if rows < 2 {
+            return 1;
+        }
+        if self.threads > 0 {
+            return self.threads.min(rows);
+        }
+        let cap = pool::default_threads();
+        let lanes = rows * len;
+        if cap <= 1 || lanes < PAR_MIN_LANES {
+            return 1;
+        }
+        cap.min(rows).min((lanes / PAR_LANES_PER_WORKER).max(1))
     }
 
     /// Single-row entry point — exactly [`softmax_algo2`] with this
@@ -130,7 +214,8 @@ impl BatchSoftmax {
     /// `valid_lens[r]` clamped to `len` (`valid_lens = &[]` means every
     /// row is fully valid). Lanes past the valid prefix are zeroed,
     /// exactly like [`softmax_algo2`] — and the whole plane is
-    /// bit-identical to calling [`softmax_algo2`] row by row.
+    /// bit-identical to calling [`softmax_algo2`] row by row, at any
+    /// SIMD level and any thread count.
     pub fn softmax_rows(&mut self, data: &mut [f32], rows: usize,
                         len: usize, valid_lens: &[usize]) {
         assert_eq!(data.len(), rows * len,
@@ -141,157 +226,280 @@ impl BatchSoftmax {
         if rows == 0 || len == 0 {
             return;
         }
-        let Self { quant, lut_exp, lut_sum, norm, packed, .. } = self;
+        let workers = self.plan_workers(rows, len);
+        let Self { quant, lut_exp, lut_sum, packed, level, .. } = self;
         let tables = (&*quant, &*lut_exp, &*lut_sum);
-        if quant.bits <= 2 {
-            rows_kernel::<u8>(tables, norm, &mut packed.bytes, data,
-                              (rows, len), valid_lens);
-        } else {
-            rows_kernel::<u16>(tables, norm, &mut packed.words, data,
-                               (rows, len), valid_lens);
+        let level = *level;
+        let g = lut_sum.group;
+        let dims = (rows, len);
+        match quant.bits {
+            2 => drive_rows(
+                &mut packed.bytes, data, dims, g, valid_lens, workers,
+                |row, keys, n, norm| {
+                    row_g4(tables, level, row, keys, n, norm)
+                },
+            ),
+            3 | 4 => drive_rows(
+                &mut packed.words, data, dims, g, valid_lens, workers,
+                |row, keys, n, norm| {
+                    row_g2(tables, level, row, keys, n, norm)
+                },
+            ),
+            b if b <= 2 => drive_rows(
+                &mut packed.bytes, data, dims, g, valid_lens, workers,
+                |row, keys, n, norm| row_generic(tables, row, keys, n, norm),
+            ),
+            _ => drive_rows(
+                &mut packed.words, data, dims, g, valid_lens, workers,
+                |row, keys, n, norm| row_generic(tables, row, keys, n, norm),
+            ),
         }
     }
 }
 
-/// The plane kernel, monomorphised per key width. Per row: max-shift,
-/// quantize-and-pack (no f32 writes), fixed-tree key reduction,
-/// premultiplied-table decode. See the module docs for why each step
-/// is bit-identical to the scalar path.
-fn rows_kernel<K: PackedKey>(
-    tables: (&Quantizer, &LutExp, &LutSum), norm: &mut Vec<f32>,
-    plane: &mut Vec<K>, data: &mut [f32], dims: (usize, usize),
-    valid_lens: &[usize],
-) {
-    let (quant, lut_exp, lut_sum) = tables;
+/// Split the f32 plane and the packed key plane into matching row
+/// ranges and run `row_fn` over every valid row — inline for one
+/// worker, through the scoped pool otherwise. Each chunk carries its
+/// own `norm` scratch; output locations are fixed by the split before
+/// any worker starts, so the plane is bit-identical for every worker
+/// count.
+fn drive_rows<K, F>(plane: &mut Vec<K>, data: &mut [f32],
+                    dims: (usize, usize), g: usize,
+                    valid_lens: &[usize], workers: usize, row_fn: F)
+where
+    K: PackedKey + Send,
+    F: Fn(&mut [f32], &mut [K], usize, &mut [f32; NORM_LANES]) + Sync,
+{
     let (rows, len) = dims;
-    let g = lut_sum.group;
-    let bits = lut_sum.bits as usize;
-    let mask = (1usize << bits) - 1;
     let stride = len.div_ceil(g);
     plane.resize(rows * stride, K::default());
+    if workers <= 1 {
+        let mut norm = [0.0f32; NORM_LANES];
+        chunk_pass(0, data, plane, (len, stride), valid_lens,
+                   &mut norm, &row_fn);
+        return;
+    }
+    // Over-split by 4x for dynamic balance; chunk identity still fixes
+    // every output location.
+    let chunk_rows = rows.div_ceil(workers * 4).max(1);
+    let mut chunks = Vec::new();
+    let mut drest: &mut [f32] = data;
+    let mut krest: &mut [K] = plane;
+    let mut r0 = 0usize;
+    while r0 < rows {
+        let take = chunk_rows.min(rows - r0);
+        let (d, dtail) =
+            std::mem::take(&mut drest).split_at_mut(take * len);
+        let (k, ktail) =
+            std::mem::take(&mut krest).split_at_mut(take * stride);
+        chunks.push((r0, d, k));
+        drest = dtail;
+        krest = ktail;
+        r0 += take;
+    }
+    pool::run_chunks(chunks, workers, |(r0, d, k)| {
+        let mut norm = [0.0f32; NORM_LANES];
+        chunk_pass(r0, d, k, (len, stride), valid_lens, &mut norm,
+                   &row_fn);
+    });
+}
 
-    for (r, row) in data.chunks_exact_mut(len).enumerate() {
+/// Run `row_fn` over every row of one chunk (`r0` = first global row,
+/// for `valid_lens` addressing).
+fn chunk_pass<K, F>(r0: usize, data: &mut [f32], keys: &mut [K],
+                    geom: (usize, usize), valid_lens: &[usize],
+                    norm: &mut [f32; NORM_LANES], row_fn: &F)
+where
+    K: PackedKey,
+    F: Fn(&mut [f32], &mut [K], usize, &mut [f32; NORM_LANES]),
+{
+    let (len, stride) = geom;
+    for (i, row) in data.chunks_exact_mut(len).enumerate() {
+        let r = r0 + i;
         let n = if valid_lens.is_empty() { len } else { valid_lens[r] }
             .min(len);
         if n == 0 {
             row.fill(0.0);
             continue;
         }
-        // max-shift (same linear scan as the scalar path)
-        let mut m = f32::NEG_INFINITY;
-        for &x in &row[..n] {
-            m = m.max(x);
-        }
-        let padded = n.next_multiple_of(g);
-        let nkeys = padded / g;
-        let full = n / g; // groups whose lanes are all < n
-        let keys = &mut plane[r * stride..r * stride + nkeys];
-
-        // ---- quantize + pack: emit the key plane, touch no f32 lanes
-        if g == 4 {
-            // M = 2: the packed byte is the key (Fig. 5)
-            for (k, lanes) in keys[..full]
-                .iter_mut()
-                .zip(row[..full * 4].chunks_exact(4))
-            {
-                let c0 = quant.code(lanes[0] - m) as usize;
-                let c1 = quant.code(lanes[1] - m) as usize;
-                let c2 = quant.code(lanes[2] - m) as usize;
-                let c3 = quant.code(lanes[3] - m) as usize;
-                *k = K::pack(c0 | (c1 << 2) | (c2 << 4) | (c3 << 6));
-            }
-        } else if g == 2 {
-            // M = 3/4: two codes per u16 key
-            for (k, lanes) in keys[..full]
-                .iter_mut()
-                .zip(row[..full * 2].chunks_exact(2))
-            {
-                let c0 = quant.code(lanes[0] - m) as usize;
-                let c1 = quant.code(lanes[1] - m) as usize;
-                *k = K::pack(c0 | (c1 << bits));
-            }
-        } else {
-            for (k, lanes) in keys[..full]
-                .iter_mut()
-                .zip(row[..full * g].chunks_exact(g))
-            {
-                let mut key = 0usize;
-                for (j, &x) in lanes.iter().enumerate() {
-                    key |= (quant.code(x - m) as usize) << (bits * j);
-                }
-                *k = K::pack(key);
-            }
-        }
-        // tail group: lanes in [full*g, n) quantized, the padding
-        // lanes sit on code 0 (exactly the scalar path's zero pad)
-        if full < nkeys {
-            let mut key = 0usize;
-            for (j, lane) in (full * g..n).enumerate() {
-                key |= (quant.code(row[lane] - m) as usize)
-                    << (bits * j);
-            }
-            keys[full] = K::pack(key);
-        }
-
-        // ---- denominator: the shared fixed-tree reduction
-        let mut sum = lut_sum.sum_keys(&keys[..nkeys]);
-        sum -= (padded - n) as f32 * lut_exp.floor_value();
-        let inv = 1.0 / sum.max(1e-30);
-
-        // ---- decode: norm[c] = lut_exp[c] * inv, computed once per
-        // code — bit-identical to the scalar per-lane `exp * inv`
-        norm.clear();
-        norm.extend(lut_exp.table.iter().map(|&e| e * inv));
-        let full_lanes = full * g;
-        if g == 4 {
-            for (lanes, &k) in row[..full_lanes]
-                .chunks_exact_mut(4)
-                .zip(keys[..full].iter())
-            {
-                let k = k.index();
-                lanes[0] = norm[k & 3];
-                lanes[1] = norm[(k >> 2) & 3];
-                lanes[2] = norm[(k >> 4) & 3];
-                lanes[3] = norm[(k >> 6) & 3];
-            }
-        } else if g == 2 {
-            for (lanes, &k) in row[..full_lanes]
-                .chunks_exact_mut(2)
-                .zip(keys[..full].iter())
-            {
-                let k = k.index();
-                lanes[0] = norm[k & mask];
-                lanes[1] = norm[(k >> bits) & mask];
-            }
-        } else {
-            for (lanes, &k) in row[..full_lanes]
-                .chunks_exact_mut(g)
-                .zip(keys[..full].iter())
-            {
-                let mut k = k.index();
-                for x in lanes {
-                    *x = norm[k & mask];
-                    k >>= bits;
-                }
-            }
-        }
-        if full_lanes < n {
-            let mut k = keys[full].index();
-            for x in &mut row[full_lanes..n] {
-                *x = norm[k & mask];
-                k >>= bits;
-            }
-        }
-        row[n..].fill(0.0);
+        let krow = &mut keys[i * stride..(i + 1) * stride];
+        row_fn(row, krow, n, norm);
     }
+}
+
+/// Fill `norm[..2^M]` with the premultiplied `lut_exp[c] * inv` table.
+fn fill_norm(lut_exp: &LutExp, inv: f32,
+             norm: &mut [f32; NORM_LANES]) -> usize {
+    let nl = lut_exp.table.len();
+    for (d, &e) in norm[..nl].iter_mut().zip(lut_exp.table.iter()) {
+        *d = e * inv;
+    }
+    nl
+}
+
+/// M = 2 row: the packed byte is the key (Fig. 5). SIMD-dispatched
+/// quantize+pack and decode; fixed-tree denominator.
+fn row_g4(tables: (&Quantizer, &LutExp, &LutSum), level: simd::Level,
+          row: &mut [f32], keys: &mut [u8], n: usize,
+          norm: &mut [f32; NORM_LANES]) {
+    let (quant, lut_exp, lut_sum) = tables;
+    let m = simd::row_max(level, &row[..n]);
+    let padded = n.next_multiple_of(4);
+    let nkeys = padded / 4;
+    let full = n / 4; // groups whose lanes are all < n
+    let keys = &mut keys[..nkeys];
+
+    simd::quant_pack4(level, &row[..full * 4], m, quant,
+                      &mut keys[..full]);
+    // tail group: lanes in [full*4, n) quantized, the padding lanes
+    // sit on code 0 (exactly the scalar path's zero pad)
+    if full < nkeys {
+        let mut key = 0usize;
+        for (j, lane) in (full * 4..n).enumerate() {
+            key |= (quant.code(row[lane] - m) as usize) << (2 * j);
+        }
+        keys[full] = key as u8;
+    }
+
+    let mut sum = lut_sum.sum_keys(keys);
+    sum -= (padded - n) as f32 * lut_exp.floor_value();
+    let inv = 1.0 / sum.max(1e-30);
+
+    let nl = fill_norm(lut_exp, inv, norm);
+    simd::decode4(level, &keys[..full], &norm[..nl],
+                  &mut row[..full * 4]);
+    if full * 4 < n {
+        let mut k = keys[full] as usize;
+        for x in &mut row[full * 4..n] {
+            *x = norm[k & 3];
+            k >>= 2;
+        }
+    }
+    row[n..].fill(0.0);
+}
+
+/// M = 3/4 row: two codes per u16 key. SIMD-dispatched quantize+pack
+/// and decode; fixed-tree denominator.
+fn row_g2(tables: (&Quantizer, &LutExp, &LutSum), level: simd::Level,
+          row: &mut [f32], keys: &mut [u16], n: usize,
+          norm: &mut [f32; NORM_LANES]) {
+    let (quant, lut_exp, lut_sum) = tables;
+    let bits = quant.bits as usize;
+    let mask = (1usize << bits) - 1;
+    let m = simd::row_max(level, &row[..n]);
+    let padded = n.next_multiple_of(2);
+    let nkeys = padded / 2;
+    let full = n / 2;
+    let keys = &mut keys[..nkeys];
+
+    simd::quant_pack2(level, &row[..full * 2], m, quant,
+                      &mut keys[..full], bits);
+    if full < nkeys {
+        // odd n: one real lane, one zero-pad lane on code 0
+        keys[full] = quant.code(row[n - 1] - m) as u16;
+    }
+
+    let mut sum = lut_sum.sum_keys(keys);
+    sum -= (padded - n) as f32 * lut_exp.floor_value();
+    let inv = 1.0 / sum.max(1e-30);
+
+    let nl = fill_norm(lut_exp, inv, norm);
+    simd::decode2(level, &keys[..full], &norm[..nl],
+                  &mut row[..full * 2], bits);
+    if full * 2 < n {
+        let k = keys[full] as usize;
+        row[n - 1] = norm[k & mask];
+    }
+    row[n..].fill(0.0);
+}
+
+/// Any other grouping (M = 1 and M >= 5 run at group 1): the original
+/// scalar loops, still the shape every specialisation mirrors.
+fn row_generic<K: PackedKey>(tables: (&Quantizer, &LutExp, &LutSum),
+                             row: &mut [f32], keys: &mut [K],
+                             n: usize,
+                             norm: &mut [f32; NORM_LANES]) {
+    let (quant, lut_exp, lut_sum) = tables;
+    let g = lut_sum.group;
+    let bits = lut_sum.bits as usize;
+    let mask = (1usize << bits) - 1;
+    let mut m = f32::NEG_INFINITY;
+    for &x in &row[..n] {
+        m = m.max(x);
+    }
+    let padded = n.next_multiple_of(g);
+    let nkeys = padded / g;
+    let full = n / g;
+    let keys = &mut keys[..nkeys];
+
+    for (k, lanes) in keys[..full]
+        .iter_mut()
+        .zip(row[..full * g].chunks_exact(g))
+    {
+        let mut key = 0usize;
+        for (j, &x) in lanes.iter().enumerate() {
+            key |= (quant.code(x - m) as usize) << (bits * j);
+        }
+        *k = K::pack(key);
+    }
+    if full < nkeys {
+        let mut key = 0usize;
+        for (j, lane) in (full * g..n).enumerate() {
+            key |= (quant.code(row[lane] - m) as usize) << (bits * j);
+        }
+        keys[full] = K::pack(key);
+    }
+
+    let mut sum = lut_sum.sum_keys(keys);
+    sum -= (padded - n) as f32 * lut_exp.floor_value();
+    let inv = 1.0 / sum.max(1e-30);
+
+    fill_norm(lut_exp, inv, norm);
+    let full_lanes = full * g;
+    for (lanes, &k) in row[..full_lanes]
+        .chunks_exact_mut(g)
+        .zip(keys[..full].iter())
+    {
+        let mut k = k.index();
+        for x in lanes {
+            *x = norm[k & mask];
+            k >>= bits;
+        }
+    }
+    if full_lanes < n {
+        let mut k = keys[full].index();
+        for x in &mut row[full_lanes..n] {
+            *x = norm[k & mask];
+            k >>= bits;
+        }
+    }
+    row[n..].fill(0.0);
 }
 
 thread_local! {
     /// Per-thread engine cache backing [`with_cached_engine`] (and,
     /// through it, `softmax_algo2_once`): loops over a fixed (bits,
-    /// clip) stop paying the three table builds per call.
+    /// clip) stop paying the three table builds per call. Pool workers
+    /// never consult this cache — `softmax_rows` hands them the owning
+    /// engine's tables by reference — so worker threads cannot trigger
+    /// per-tick rebuilds.
     static CACHED_ENGINE: RefCell<Option<BatchSoftmax>> =
         const { RefCell::new(None) };
+    static CACHE_HITS: Cell<u64> = const { Cell::new(0) };
+    static CACHE_MISSES: Cell<u64> = const { Cell::new(0) };
+}
+
+/// This thread's `(hits, misses)` counters for [`with_cached_engine`]
+/// — tests pin that steady-state serving re-uses tables instead of
+/// rebuilding them every tick.
+pub fn cache_stats() -> (u64, u64) {
+    (CACHE_HITS.with(Cell::get), CACHE_MISSES.with(Cell::get))
+}
+
+/// Zero this thread's [`cache_stats`] counters.
+pub fn reset_cache_stats() {
+    CACHE_HITS.with(|c| c.set(0));
+    CACHE_MISSES.with(|c| c.set(0));
 }
 
 /// Find-or-rebuild an engine slot for (`bits`, `clip`) — the one
@@ -312,6 +520,11 @@ pub fn with_cached_engine<R>(
 ) -> R {
     CACHED_ENGINE.with(|cell| {
         let mut slot = cell.borrow_mut();
+        if matches!(slot.as_ref(), Some(e) if e.matches(bits, clip)) {
+            CACHE_HITS.with(|c| c.set(c.get() + 1));
+        } else {
+            CACHE_MISSES.with(|c| c.set(c.get() + 1));
+        }
         f(ensure_engine(&mut slot, bits, clip))
     })
 }
@@ -425,6 +638,44 @@ mod tests {
             assert!((s - 1.0).abs() < 1e-4, "bits={bits}: {s}");
             assert!(plane[len + 5..2 * len].iter().all(|&p| p == 0.0));
         }
+    }
+
+    #[test]
+    fn pooled_plane_is_bit_identical_to_inline() {
+        // Small plane on purpose: miri walks the pool + split machinery
+        // for UB while staying fast. Hostile valid_lens included.
+        let (rows, len) = (9usize, 21usize);
+        let vlens = [21usize, 1, 0, 5, 21, 2, 7, 20, 3];
+        for bits in [2u32, 3] {
+            let mut a = random_plane(rows, len, 31 + bits as u64, 2.0);
+            let mut b = a.clone();
+            let mut inline_eng = BatchSoftmax::new(bits, -4.0);
+            inline_eng.set_threads(1);
+            inline_eng.softmax_rows(&mut a, rows, len, &vlens);
+            let mut pooled = BatchSoftmax::new(bits, -4.0);
+            pooled.set_threads(3);
+            pooled.softmax_rows(&mut b, rows, len, &vlens);
+            assert_bit_exact(&a, &b, &format!("pooled bits={bits}"));
+        }
+    }
+
+    #[test]
+    fn cache_stats_count_hits_misses_and_ignore_pool_workers() {
+        reset_cache_stats();
+        with_cached_engine(4, -3.5, |_| ());
+        with_cached_engine(4, -3.5, |_| ());
+        with_cached_engine(4, -3.5, |_| ());
+        assert_eq!(cache_stats(), (2, 1));
+        with_cached_engine(2, -3.5, |_| ());
+        assert_eq!(cache_stats(), (2, 2));
+        // Pooled plane calls borrow the engine's tables directly;
+        // worker threads must not touch the thread-local cache.
+        let mut eng = BatchSoftmax::new(2, -4.0);
+        eng.set_threads(4);
+        let mut plane = vec![0.25f32; 8 * 32];
+        eng.softmax_rows(&mut plane, 8, 32, &[]);
+        assert_eq!(cache_stats(), (2, 2),
+                   "pool workers leaked into the engine cache");
     }
 
     #[test]

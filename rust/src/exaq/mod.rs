@@ -19,6 +19,9 @@
 //!   [`BatchSoftmax`] runs whole `[rows × len]` logit/attention planes
 //!   through a packed code plane whose bytes *are* the LUT_sum keys
 //!   (Fig. 5's storage layout), bit-identical to the scalar path.
+//! * [`simd`]   — explicit-SIMD quantize+pack / decode lanes
+//!   (sse2/avx2/neon behind `cfg(target_arch)`) with the always-compiled
+//!   scalar reference; the batched kernel dispatches through these.
 //! * [`clip`]   — calibration-statistics -> per-layer clip thresholds
 //!   (EXAQ via Table 1; NAIVE via min/max midpoint).
 
@@ -30,6 +33,7 @@ pub mod lut;
 pub mod mc;
 pub mod mse;
 pub mod quant;
+pub mod simd;
 pub mod softmax;
 pub mod solver;
 

@@ -41,6 +41,20 @@ impl Quantizer {
         self.step
     }
 
+    /// The exact reciprocal step [`code`](Self::code) multiplies by.
+    /// SIMD lanes must use *this* value (not `1.0 / step()` recomputed)
+    /// to stay bit-identical with the scalar path.
+    #[inline]
+    pub fn inv_step(&self) -> f32 {
+        self.inv_step
+    }
+
+    /// Largest code (`2^M − 1`) — the clamp bound of [`code`](Self::code).
+    #[inline]
+    pub fn max_code(&self) -> u8 {
+        self.max_code
+    }
+
     #[inline]
     pub fn n_levels(&self) -> usize {
         1usize << self.bits

@@ -1,0 +1,662 @@
+//! Explicit-SIMD lanes for the batched Algorithm-2 kernel, and the one
+//! sanctioned `cfg(target_arch)` site (`thread-discipline` lint).
+//!
+//! Three passes of [`BatchSoftmax`](super::batched::BatchSoftmax) are
+//! lane-parallel with *no* cross-lane f32 arithmetic, so they can go
+//! wide without touching the bit-exactness story:
+//!
+//! * [`row_max`] — the max-shift scan. `max` over reals is associative
+//!   and exact, vector `max` drops NaN lanes exactly like the scalar
+//!   `m.max(x)` fold, and a ±0.0 sign difference in the result is
+//!   absorbed by the subsequent `x - m` / `xs - c` subtractions.
+//! * [`quant_pack4`] / [`quant_pack2`] — quantize-and-pack. Each lane
+//!   runs the *same* op sequence as [`Quantizer::code`]: subtract `m`,
+//!   subtract `c`, multiply by the stored `inv_step`, add 0.5, clamp
+//!   at zero (NaN → 0, matching `f32::max`), truncate, clamp at
+//!   `max_code`. No FMA contraction, no reassociation — every
+//!   intermediate is the identical IEEE f32, so the packed key stream
+//!   is bit-identical to the scalar path.
+//! * [`decode4`] / [`decode2`] — the premultiplied `lut_exp*inv`
+//!   output pass is a pure table *selection* (no arithmetic), so any
+//!   vector permute that copies the same `norm[code]` entries is
+//!   trivially bit-exact.
+//!
+//! The denominator reduction is deliberately **not** here: f32
+//! addition is order-sensitive, so summation stays in the fixed-tree
+//! [`LutSum::sum_keys`](super::lut::LutSum::sum_keys) for every level.
+//!
+//! [`Level::Scalar`] is always compiled and is the reference the
+//! randomized sweeps in `rust/tests/batched_softmax.rs` pin every
+//! other level against. x86-64 gets an always-available SSE2 path and
+//! a runtime-detected AVX2 path; aarch64 gets NEON. `EXAQ_SIMD`
+//! (`scalar` / `sse2` / `avx2` / `neon`) overrides the default pick;
+//! an unavailable request falls back to scalar rather than faulting.
+
+use std::sync::OnceLock;
+
+use super::quant::Quantizer;
+
+/// A lane-specialisation level. All variants exist on every arch (so
+/// configuration code is portable); dispatch falls back to scalar for
+/// levels the current binary does not implement.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Level {
+    /// The always-compiled reference implementation.
+    Scalar,
+    /// x86-64 baseline vectors (always available on x86-64).
+    Sse2,
+    /// x86-64 256-bit vectors (runtime-detected).
+    Avx2,
+    /// aarch64 baseline vectors (always available on aarch64).
+    Neon,
+}
+
+impl Level {
+    pub fn name(self) -> &'static str {
+        match self {
+            Level::Scalar => "scalar",
+            Level::Sse2 => "sse2",
+            Level::Avx2 => "avx2",
+            Level::Neon => "neon",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Level> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "scalar" => Some(Level::Scalar),
+            "sse2" => Some(Level::Sse2),
+            "avx2" => Some(Level::Avx2),
+            "neon" => Some(Level::Neon),
+            _ => None,
+        }
+    }
+}
+
+/// Levels usable in this process, in ascending preference order
+/// (always starts with [`Level::Scalar`]).
+pub fn available_levels() -> Vec<Level> {
+    let mut v = vec![Level::Scalar];
+    if cfg!(miri) {
+        // Keep the interpreter on the reference path.
+        return v;
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        v.push(Level::Sse2);
+        if is_x86_feature_detected!("avx2") {
+            v.push(Level::Avx2);
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    v.push(Level::Neon);
+    v
+}
+
+/// Process-wide default level: `EXAQ_SIMD` if set and available, else
+/// the best available. Read once; engines can override per-instance.
+pub fn default_level() -> Level {
+    static CACHED: OnceLock<Level> = OnceLock::new();
+    *CACHED.get_or_init(|| {
+        let avail = available_levels();
+        match std::env::var("EXAQ_SIMD").ok()
+            .and_then(|v| Level::parse(&v))
+        {
+            Some(l) if avail.contains(&l) => l,
+            Some(_) => Level::Scalar,
+            None => avail.last().copied().unwrap_or(Level::Scalar),
+        }
+    })
+}
+
+/// Max over `xs`, seeded at `NEG_INFINITY`; NaN lanes are ignored,
+/// exactly like the scalar `m = m.max(x)` fold.
+pub fn row_max(level: Level, xs: &[f32]) -> f32 {
+    match level {
+        #[cfg(target_arch = "x86_64")]
+        Level::Sse2 => unsafe { x86::row_max_sse2(xs) },
+        #[cfg(target_arch = "x86_64")]
+        Level::Avx2 => unsafe { x86::row_max_avx2(xs) },
+        #[cfg(target_arch = "aarch64")]
+        Level::Neon => unsafe { neon::row_max(xs) },
+        _ => scalar::row_max(xs),
+    }
+}
+
+/// Quantize `lanes` (after subtracting `m`) and pack four 2-bit codes
+/// per byte key: `c0 | c1<<2 | c2<<4 | c3<<6`. Requires
+/// `lanes.len() == 4 * keys.len()`.
+pub fn quant_pack4(level: Level, lanes: &[f32], m: f32, q: &Quantizer,
+                   keys: &mut [u8]) {
+    debug_assert_eq!(lanes.len(), 4 * keys.len());
+    match level {
+        #[cfg(target_arch = "x86_64")]
+        Level::Sse2 => unsafe { x86::quant_pack4_sse2(lanes, m, q, keys) },
+        #[cfg(target_arch = "x86_64")]
+        Level::Avx2 => unsafe { x86::quant_pack4_avx2(lanes, m, q, keys) },
+        #[cfg(target_arch = "aarch64")]
+        Level::Neon => unsafe { neon::quant_pack4(lanes, m, q, keys) },
+        _ => scalar::quant_pack4(lanes, m, q, keys),
+    }
+}
+
+/// Quantize `lanes` (after subtracting `m`) and pack two M-bit codes
+/// per u16 key: `c0 | c1<<bits`. Requires
+/// `lanes.len() == 2 * keys.len()`.
+pub fn quant_pack2(level: Level, lanes: &[f32], m: f32, q: &Quantizer,
+                   keys: &mut [u16], bits: usize) {
+    debug_assert_eq!(lanes.len(), 2 * keys.len());
+    match level {
+        #[cfg(target_arch = "x86_64")]
+        Level::Sse2 => unsafe {
+            x86::quant_pack2_sse2(lanes, m, q, keys, bits)
+        },
+        #[cfg(target_arch = "x86_64")]
+        Level::Avx2 => unsafe {
+            x86::quant_pack2_avx2(lanes, m, q, keys, bits)
+        },
+        #[cfg(target_arch = "aarch64")]
+        Level::Neon => unsafe { neon::quant_pack2(lanes, m, q, keys, bits) },
+        _ => scalar::quant_pack2(lanes, m, q, keys, bits),
+    }
+}
+
+/// Decode byte keys (four 2-bit codes each) through the premultiplied
+/// `norm` table (>= 4 entries). Requires `lanes.len() == 4 * keys.len()`.
+pub fn decode4(level: Level, keys: &[u8], norm: &[f32],
+               lanes: &mut [f32]) {
+    debug_assert_eq!(lanes.len(), 4 * keys.len());
+    match level {
+        #[cfg(target_arch = "x86_64")]
+        Level::Avx2 => unsafe { x86::decode4_avx2(keys, norm, lanes) },
+        // A 4-entry in-register LUT needs a variable permute, which
+        // SSE2/NEON lack cheaply; the table lives in L1 either way.
+        _ => scalar::decode4(keys, norm, lanes),
+    }
+}
+
+/// Decode u16 keys (two M-bit codes each) through the premultiplied
+/// `norm` table (>= 2^bits entries). Requires
+/// `lanes.len() == 2 * keys.len()`.
+pub fn decode2(level: Level, keys: &[u16], norm: &[f32],
+               lanes: &mut [f32], bits: usize) {
+    debug_assert_eq!(lanes.len(), 2 * keys.len());
+    match (level, bits) {
+        // M = 3: the whole 8-entry table fits one 256-bit register.
+        #[cfg(target_arch = "x86_64")]
+        (Level::Avx2, 3) => unsafe { x86::decode2_avx2(keys, norm, lanes) },
+        _ => scalar::decode2(keys, norm, lanes, bits),
+    }
+}
+
+/// The reference lanes: bit-for-bit the loops of the pre-SIMD batched
+/// kernel. Every other level is tested against these.
+mod scalar {
+    use super::Quantizer;
+
+    pub(super) fn row_max(xs: &[f32]) -> f32 {
+        let mut m = f32::NEG_INFINITY;
+        for &x in xs {
+            m = m.max(x);
+        }
+        m
+    }
+
+    pub(super) fn quant_pack4(lanes: &[f32], m: f32, q: &Quantizer,
+                              keys: &mut [u8]) {
+        for (k, c) in keys.iter_mut().zip(lanes.chunks_exact(4)) {
+            let c0 = q.code(c[0] - m) as usize;
+            let c1 = q.code(c[1] - m) as usize;
+            let c2 = q.code(c[2] - m) as usize;
+            let c3 = q.code(c[3] - m) as usize;
+            *k = (c0 | (c1 << 2) | (c2 << 4) | (c3 << 6)) as u8;
+        }
+    }
+
+    pub(super) fn quant_pack2(lanes: &[f32], m: f32, q: &Quantizer,
+                              keys: &mut [u16], bits: usize) {
+        for (k, c) in keys.iter_mut().zip(lanes.chunks_exact(2)) {
+            let c0 = q.code(c[0] - m) as usize;
+            let c1 = q.code(c[1] - m) as usize;
+            *k = (c0 | (c1 << bits)) as u16;
+        }
+    }
+
+    pub(super) fn decode4(keys: &[u8], norm: &[f32], lanes: &mut [f32]) {
+        for (c, &k) in lanes.chunks_exact_mut(4).zip(keys) {
+            let k = k as usize;
+            c[0] = norm[k & 3];
+            c[1] = norm[(k >> 2) & 3];
+            c[2] = norm[(k >> 4) & 3];
+            c[3] = norm[(k >> 6) & 3];
+        }
+    }
+
+    pub(super) fn decode2(keys: &[u16], norm: &[f32],
+                          lanes: &mut [f32], bits: usize) {
+        let mask = (1usize << bits) - 1;
+        for (c, &k) in lanes.chunks_exact_mut(2).zip(keys) {
+            let k = k as usize;
+            c[0] = norm[k & mask];
+            c[1] = norm[(k >> bits) & mask];
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use core::arch::x86_64::*;
+
+    use super::Quantizer;
+
+    /// Broadcast constants of the quantize pass (one build per call,
+    /// hoisted out of the lane loop).
+    #[derive(Clone, Copy)]
+    struct Consts {
+        m: __m128,
+        c: __m128,
+        inv: __m128,
+        half: __m128,
+        zero: __m128,
+        maxc: __m128i,
+    }
+
+    unsafe fn consts(m: f32, q: &Quantizer) -> Consts {
+        Consts {
+            m: _mm_set1_ps(m),
+            c: _mm_set1_ps(q.c),
+            inv: _mm_set1_ps(q.inv_step()),
+            half: _mm_set1_ps(0.5),
+            zero: _mm_setzero_ps(),
+            maxc: _mm_set1_epi32(q.max_code() as i32),
+        }
+    }
+
+    /// Four codes at once, each the exact op sequence of
+    /// `Quantizer::code` applied to `lane - m`:
+    /// sub, sub, mul, add 0.5, max(…, 0) with NaN → 0 (maxps returns
+    /// its second operand on NaN, like `f32::max(NaN, 0.0)`), truncate
+    /// (`cvttps` = `as u32` in range), clamp at `max_code` (emulated
+    /// compare+select — `_mm_min_epi32` is SSE4.1, not SSE2).
+    unsafe fn quant4_sse2(ptr: *const f32, k: &Consts) -> __m128i {
+        let v = _mm_loadu_ps(ptr);
+        let v = _mm_sub_ps(v, k.m);
+        let v = _mm_sub_ps(v, k.c);
+        let v = _mm_mul_ps(v, k.inv);
+        let v = _mm_add_ps(v, k.half);
+        let v = _mm_max_ps(v, k.zero);
+        let c = _mm_cvttps_epi32(v);
+        let gt = _mm_cmpgt_epi32(c, k.maxc);
+        _mm_or_si128(_mm_and_si128(gt, k.maxc), _mm_andnot_si128(gt, c))
+    }
+
+    pub(super) unsafe fn row_max_sse2(xs: &[f32]) -> f32 {
+        let mut acc = _mm_set1_ps(f32::NEG_INFINITY);
+        let mut it = xs.chunks_exact(4);
+        for chunk in it.by_ref() {
+            // (x, acc) order: maxps keeps acc on a NaN lane, exactly
+            // like the scalar `m.max(x)` fold ignoring NaN.
+            acc = _mm_max_ps(_mm_loadu_ps(chunk.as_ptr()), acc);
+        }
+        let mut tmp = [0f32; 4];
+        _mm_storeu_ps(tmp.as_mut_ptr(), acc);
+        let mut m = tmp[0].max(tmp[1]).max(tmp[2].max(tmp[3]));
+        for &x in it.remainder() {
+            m = m.max(x);
+        }
+        m
+    }
+
+    pub(super) unsafe fn quant_pack4_sse2(lanes: &[f32], m: f32,
+                                          q: &Quantizer,
+                                          keys: &mut [u8]) {
+        let k = consts(m, q);
+        let mut tmp = [0i32; 4];
+        for (key, c) in keys.iter_mut().zip(lanes.chunks_exact(4)) {
+            let v = quant4_sse2(c.as_ptr(), &k);
+            _mm_storeu_si128(tmp.as_mut_ptr() as *mut __m128i, v);
+            *key = (tmp[0] | (tmp[1] << 2) | (tmp[2] << 4)
+                    | (tmp[3] << 6)) as u8;
+        }
+    }
+
+    pub(super) unsafe fn quant_pack2_sse2(lanes: &[f32], m: f32,
+                                          q: &Quantizer,
+                                          keys: &mut [u16],
+                                          bits: usize) {
+        let k = consts(m, q);
+        let mut tmp = [0i32; 4];
+        let pairs = keys.len() / 2;
+        let (kmain, krest) = keys.split_at_mut(pairs * 2);
+        let (lmain, lrest) = lanes.split_at(pairs * 4);
+        for (kc, c) in kmain.chunks_exact_mut(2)
+            .zip(lmain.chunks_exact(4))
+        {
+            let v = quant4_sse2(c.as_ptr(), &k);
+            _mm_storeu_si128(tmp.as_mut_ptr() as *mut __m128i, v);
+            kc[0] = (tmp[0] | (tmp[1] << bits)) as u16;
+            kc[1] = (tmp[2] | (tmp[3] << bits)) as u16;
+        }
+        super::scalar::quant_pack2(lrest, m, q, krest, bits);
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn row_max_avx2(xs: &[f32]) -> f32 {
+        let mut acc = _mm256_set1_ps(f32::NEG_INFINITY);
+        let mut it = xs.chunks_exact(8);
+        for chunk in it.by_ref() {
+            acc = _mm256_max_ps(_mm256_loadu_ps(chunk.as_ptr()), acc);
+        }
+        let mut tmp = [0f32; 8];
+        _mm256_storeu_ps(tmp.as_mut_ptr(), acc);
+        let mut m = f32::NEG_INFINITY;
+        for &t in &tmp {
+            m = m.max(t);
+        }
+        for &x in it.remainder() {
+            m = m.max(x);
+        }
+        m
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn quant8_avx2(ptr: *const f32, m: __m256, c: __m256,
+                          inv: __m256, maxc: __m256i) -> __m256i {
+        let v = _mm256_loadu_ps(ptr);
+        let v = _mm256_sub_ps(v, m);
+        let v = _mm256_sub_ps(v, c);
+        let v = _mm256_mul_ps(v, inv);
+        let v = _mm256_add_ps(v, _mm256_set1_ps(0.5));
+        let v = _mm256_max_ps(v, _mm256_setzero_ps());
+        _mm256_min_epi32(_mm256_cvttps_epi32(v), maxc)
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn quant_pack4_avx2(lanes: &[f32], m: f32,
+                                          q: &Quantizer,
+                                          keys: &mut [u8]) {
+        let mv = _mm256_set1_ps(m);
+        let cv = _mm256_set1_ps(q.c);
+        let iv = _mm256_set1_ps(q.inv_step());
+        let maxc = _mm256_set1_epi32(q.max_code() as i32);
+        let mut tmp = [0i32; 8];
+        let pairs = keys.len() / 2;
+        let (kmain, krest) = keys.split_at_mut(pairs * 2);
+        let (lmain, lrest) = lanes.split_at(pairs * 8);
+        for (kc, c) in kmain.chunks_exact_mut(2)
+            .zip(lmain.chunks_exact(8))
+        {
+            let v = quant8_avx2(c.as_ptr(), mv, cv, iv, maxc);
+            _mm256_storeu_si256(tmp.as_mut_ptr() as *mut __m256i, v);
+            kc[0] = (tmp[0] | (tmp[1] << 2) | (tmp[2] << 4)
+                     | (tmp[3] << 6)) as u8;
+            kc[1] = (tmp[4] | (tmp[5] << 2) | (tmp[6] << 4)
+                     | (tmp[7] << 6)) as u8;
+        }
+        quant_pack4_sse2(lrest, m, q, krest);
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn quant_pack2_avx2(lanes: &[f32], m: f32,
+                                          q: &Quantizer,
+                                          keys: &mut [u16],
+                                          bits: usize) {
+        let mv = _mm256_set1_ps(m);
+        let cv = _mm256_set1_ps(q.c);
+        let iv = _mm256_set1_ps(q.inv_step());
+        let maxc = _mm256_set1_epi32(q.max_code() as i32);
+        let mut tmp = [0i32; 8];
+        let quads = keys.len() / 4;
+        let (kmain, krest) = keys.split_at_mut(quads * 4);
+        let (lmain, lrest) = lanes.split_at(quads * 8);
+        for (kc, c) in kmain.chunks_exact_mut(4)
+            .zip(lmain.chunks_exact(8))
+        {
+            let v = quant8_avx2(c.as_ptr(), mv, cv, iv, maxc);
+            _mm256_storeu_si256(tmp.as_mut_ptr() as *mut __m256i, v);
+            kc[0] = (tmp[0] | (tmp[1] << bits)) as u16;
+            kc[1] = (tmp[2] | (tmp[3] << bits)) as u16;
+            kc[2] = (tmp[4] | (tmp[5] << bits)) as u16;
+            kc[3] = (tmp[6] | (tmp[7] << bits)) as u16;
+        }
+        quant_pack2_sse2(lrest, m, q, krest, bits);
+    }
+
+    /// Decode is pure selection: `vpermps` copies `norm` entries by
+    /// code index — bit-identical to the scalar lookups by definition.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn decode4_avx2(keys: &[u8], norm: &[f32],
+                                      lanes: &mut [f32]) {
+        let t = _mm256_setr_ps(norm[0], norm[1], norm[2], norm[3],
+                               norm[0], norm[1], norm[2], norm[3]);
+        let pairs = keys.len() / 2;
+        let (kmain, krest) = keys.split_at(pairs * 2);
+        let (lmain, lrest) = lanes.split_at_mut(pairs * 8);
+        for (kc, c) in kmain.chunks_exact(2)
+            .zip(lmain.chunks_exact_mut(8))
+        {
+            let a = kc[0] as i32;
+            let b = kc[1] as i32;
+            let idx = _mm256_setr_epi32(
+                a & 3, (a >> 2) & 3, (a >> 4) & 3, (a >> 6) & 3,
+                b & 3, (b >> 2) & 3, (b >> 4) & 3, (b >> 6) & 3,
+            );
+            _mm256_storeu_ps(c.as_mut_ptr(),
+                             _mm256_permutevar8x32_ps(t, idx));
+        }
+        super::scalar::decode4(krest, norm, lrest);
+    }
+
+    /// M = 3 only: the 8-entry premultiplied table is exactly one
+    /// 256-bit register.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn decode2_avx2(keys: &[u16], norm: &[f32],
+                                      lanes: &mut [f32]) {
+        let t = _mm256_loadu_ps(norm.as_ptr());
+        let quads = keys.len() / 4;
+        let (kmain, krest) = keys.split_at(quads * 4);
+        let (lmain, lrest) = lanes.split_at_mut(quads * 8);
+        for (kc, c) in kmain.chunks_exact(4)
+            .zip(lmain.chunks_exact_mut(8))
+        {
+            let (a, b) = (kc[0] as i32, kc[1] as i32);
+            let (d, e) = (kc[2] as i32, kc[3] as i32);
+            let idx = _mm256_setr_epi32(
+                a & 7, (a >> 3) & 7, b & 7, (b >> 3) & 7,
+                d & 7, (d >> 3) & 7, e & 7, (e >> 3) & 7,
+            );
+            _mm256_storeu_ps(c.as_mut_ptr(),
+                             _mm256_permutevar8x32_ps(t, idx));
+        }
+        super::scalar::decode2(krest, norm, lrest, 3);
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use core::arch::aarch64::*;
+
+    use super::Quantizer;
+
+    #[derive(Clone, Copy)]
+    struct Consts {
+        m: float32x4_t,
+        c: float32x4_t,
+        inv: float32x4_t,
+        half: float32x4_t,
+        zero: float32x4_t,
+        maxc: uint32x4_t,
+    }
+
+    unsafe fn consts(m: f32, q: &Quantizer) -> Consts {
+        Consts {
+            m: vdupq_n_f32(m),
+            c: vdupq_n_f32(q.c),
+            inv: vdupq_n_f32(q.inv_step()),
+            half: vdupq_n_f32(0.5),
+            zero: vdupq_n_f32(0.0),
+            maxc: vdupq_n_u32(q.max_code() as u32),
+        }
+    }
+
+    /// `vmaxq` propagates NaN (unlike maxps), but `vcvtq_u32_f32`
+    /// (FCVTZU) then maps NaN to 0 — the same final code the scalar
+    /// `k.max(0.0) as u32` produces. Truncation and saturation match
+    /// the Rust `as` cast.
+    unsafe fn quant4(ptr: *const f32, k: &Consts) -> uint32x4_t {
+        let v = vld1q_f32(ptr);
+        let v = vsubq_f32(v, k.m);
+        let v = vsubq_f32(v, k.c);
+        let v = vmulq_f32(v, k.inv);
+        let v = vaddq_f32(v, k.half);
+        let v = vmaxq_f32(v, k.zero);
+        vminq_u32(vcvtq_u32_f32(v), k.maxc)
+    }
+
+    pub(super) unsafe fn row_max(xs: &[f32]) -> f32 {
+        let mut acc = vdupq_n_f32(f32::NEG_INFINITY);
+        let mut it = xs.chunks_exact(4);
+        for chunk in it.by_ref() {
+            // FMAXNM = IEEE maxNum: NaN lanes lose, like `f32::max`.
+            acc = vmaxnmq_f32(acc, vld1q_f32(chunk.as_ptr()));
+        }
+        let mut m = vmaxnmvq_f32(acc);
+        for &x in it.remainder() {
+            m = m.max(x);
+        }
+        m
+    }
+
+    pub(super) unsafe fn quant_pack4(lanes: &[f32], m: f32,
+                                     q: &Quantizer, keys: &mut [u8]) {
+        let k = consts(m, q);
+        let mut tmp = [0u32; 4];
+        for (key, c) in keys.iter_mut().zip(lanes.chunks_exact(4)) {
+            vst1q_u32(tmp.as_mut_ptr(), quant4(c.as_ptr(), &k));
+            *key = (tmp[0] | (tmp[1] << 2) | (tmp[2] << 4)
+                    | (tmp[3] << 6)) as u8;
+        }
+    }
+
+    pub(super) unsafe fn quant_pack2(lanes: &[f32], m: f32,
+                                     q: &Quantizer, keys: &mut [u16],
+                                     bits: usize) {
+        let k = consts(m, q);
+        let mut tmp = [0u32; 4];
+        let pairs = keys.len() / 2;
+        let (kmain, krest) = keys.split_at_mut(pairs * 2);
+        let (lmain, lrest) = lanes.split_at(pairs * 4);
+        for (kc, c) in kmain.chunks_exact_mut(2)
+            .zip(lmain.chunks_exact(4))
+        {
+            vst1q_u32(tmp.as_mut_ptr(), quant4(c.as_ptr(), &k));
+            kc[0] = (tmp[0] | (tmp[1] << bits)) as u16;
+            kc[1] = (tmp[2] | (tmp[3] << bits)) as u16;
+        }
+        super::scalar::quant_pack2(lrest, m, q, krest, bits);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::SplitMix64;
+
+    fn hostile_lanes(n: usize, seed: u64) -> Vec<f32> {
+        let mut r = SplitMix64::new(seed);
+        (0..n)
+            .map(|i| match i % 11 {
+                7 => f32::NAN,
+                5 => f32::NEG_INFINITY,
+                3 => f32::INFINITY,
+                _ => (r.normal() as f32) * 3.0,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn every_level_matches_scalar_quant_pack4() {
+        let q = Quantizer::new(2, -4.5);
+        for level in available_levels() {
+            // 13 groups: exercises the avx2 odd-pair remainder
+            let lanes = hostile_lanes(13 * 4, 42);
+            let m = scalar::row_max(&lanes);
+            let mut want = vec![0u8; 13];
+            scalar::quant_pack4(&lanes, m, &q, &mut want);
+            let mut got = vec![0u8; 13];
+            quant_pack4(level, &lanes, m, &q, &mut got);
+            assert_eq!(got, want, "level {}", level.name());
+        }
+    }
+
+    #[test]
+    fn every_level_matches_scalar_quant_pack2() {
+        for bits in [3usize, 4] {
+            let q = Quantizer::new(bits as u32, -6.0);
+            for level in available_levels() {
+                // 9 keys: odd counts hit every remainder path
+                let lanes = hostile_lanes(9 * 2, 7 + bits as u64);
+                let m = scalar::row_max(&lanes);
+                let mut want = vec![0u16; 9];
+                scalar::quant_pack2(&lanes, m, &q, &mut want, bits);
+                let mut got = vec![0u16; 9];
+                quant_pack2(level, &lanes, m, &q, &mut got, bits);
+                assert_eq!(got, want,
+                           "level {} bits {bits}", level.name());
+            }
+        }
+    }
+
+    #[test]
+    fn every_level_matches_scalar_row_max() {
+        for len in [0usize, 1, 3, 4, 5, 8, 17, 64, 65] {
+            let xs = hostile_lanes(len, 1000 + len as u64);
+            let want = scalar::row_max(&xs);
+            for level in available_levels() {
+                let got = row_max(level, &xs);
+                assert_eq!(got.to_bits(), want.to_bits(),
+                           "level {} len {len}", level.name());
+            }
+        }
+    }
+
+    #[test]
+    fn every_level_matches_scalar_decode() {
+        let mut r = SplitMix64::new(9);
+        let norm4: Vec<f32> =
+            (0..4).map(|_| r.uniform() as f32).collect();
+        let norm8: Vec<f32> =
+            (0..8).map(|_| r.uniform() as f32).collect();
+        let keys4: Vec<u8> = (0..13).map(|_| r.below(256) as u8).collect();
+        let keys2: Vec<u16> =
+            (0..9).map(|_| r.below(64) as u16).collect();
+        for level in available_levels() {
+            let mut want = vec![0f32; 13 * 4];
+            scalar::decode4(&keys4, &norm4, &mut want);
+            let mut got = vec![0f32; 13 * 4];
+            decode4(level, &keys4, &norm4, &mut got);
+            assert_eq!(got, want, "decode4 level {}", level.name());
+
+            let mut want = vec![0f32; 9 * 2];
+            scalar::decode2(&keys2, &norm8, &mut want, 3);
+            let mut got = vec![0f32; 9 * 2];
+            decode2(level, &keys2, &norm8, &mut got, 3);
+            assert_eq!(got, want, "decode2 level {}", level.name());
+        }
+    }
+
+    #[test]
+    fn level_names_parse_back() {
+        for l in [Level::Scalar, Level::Sse2, Level::Avx2, Level::Neon] {
+            assert_eq!(Level::parse(l.name()), Some(l));
+        }
+        assert_eq!(Level::parse(" AVX2 "), Some(Level::Avx2));
+        assert_eq!(Level::parse("mmx"), None);
+    }
+
+    #[test]
+    fn scalar_is_always_available_and_default_is_available() {
+        let avail = available_levels();
+        assert_eq!(avail[0], Level::Scalar);
+        assert!(avail.contains(&default_level()));
+    }
+}

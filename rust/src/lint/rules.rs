@@ -40,6 +40,7 @@ pub const RNG: &str = "seeded-rng";
 pub const ITER: &str = "deterministic-iteration";
 pub const PANIC: &str = "no-panic-hot-path";
 pub const FLOAT: &str = "float-reduction-discipline";
+pub const THREAD: &str = "thread-discipline";
 pub const ALLOW_SYNTAX: &str = "lint-allow-syntax";
 
 pub const RULES: &[RuleInfo] = &[
@@ -70,6 +71,12 @@ pub const RULES: &[RuleInfo] = &[
                   accumulators that could reassociate)",
     },
     RuleInfo {
+        name: THREAD,
+        summary: "raw std::thread::spawn/scope only in util::pool; \
+                  cfg(target_arch) intrinsics only in exaq::simd — \
+                  both keep the bit-identical fallback story auditable",
+    },
+    RuleInfo {
         name: ALLOW_SYNTAX,
         summary: "lint:allow comments must name a known rule and give \
                   a reason",
@@ -96,7 +103,9 @@ const HOT_PATHS: &[&str] = &[
     "rust/src/model/sampling.rs",
     "rust/src/exaq/softmax.rs",
     "rust/src/exaq/batched.rs",
+    "rust/src/exaq/simd.rs",
     "rust/src/exaq/lut.rs",
+    "rust/src/util/pool.rs",
 ];
 
 /// Files where [`FLOAT`] applies. `exaq/lut.rs` is deliberately NOT
@@ -104,8 +113,14 @@ const HOT_PATHS: &[&str] = &[
 /// blessed reduction the rule funnels everyone else into.
 const FLOAT_SCOPE: &[&str] = &[
     "rust/src/exaq/batched.rs",
+    "rust/src/exaq/simd.rs",
     "rust/src/exaq/softmax.rs",
 ];
+
+/// File exempt from [`THREAD`]'s spawn/scope check: the scoped pool.
+const POOL_HOME: &str = "rust/src/util/pool.rs";
+/// File exempt from [`THREAD`]'s intrinsics check: the SIMD dispatch.
+const SIMD_HOME: &str = "rust/src/exaq/simd.rs";
 
 /// Run every rule over one lexed file; returns surviving violations
 /// plus how many candidates `lint:allow` comments suppressed.
@@ -117,6 +132,7 @@ pub fn check_file(rel: &str, lexed: &LexedFile)
     deterministic_iteration(rel, &lexed.tokens, &mut candidates);
     no_panic_hot_path(rel, &lexed.tokens, &mut candidates);
     float_reduction(rel, &lexed.tokens, &mut candidates);
+    thread_discipline(rel, &lexed.tokens, &mut candidates);
 
     let mut suppressed = 0usize;
     let mut out: Vec<Violation> = Vec::new();
@@ -312,6 +328,42 @@ fn float_reduction(rel: &str, toks: &[Spanned],
                 "manual accumulation `{name} +=` in a softmax kernel \
                  — route the reduction through LutSum::sum_keys (or \
                  lint:allow with the numerical argument)")));
+        }
+    }
+}
+
+fn thread_discipline(rel: &str, toks: &[Spanned],
+                     out: &mut Vec<Violation>) {
+    for (i, t) in toks.iter().enumerate() {
+        if t.in_test {
+            continue;
+        }
+        let Some(name) = ident(t) else { continue };
+        // `thread::spawn` / `thread::scope` (the ident pair around
+        // `::`) — `thread::sleep` in util::clock stays legal.
+        if rel != POOL_HOME
+            && name == "thread"
+            && toks.get(i + 1).is_some_and(|t| is_punct(t, ':'))
+            && toks.get(i + 2).is_some_and(|t| is_punct(t, ':'))
+            && matches!(toks.get(i + 3).and_then(ident),
+                        Some("spawn" | "scope"))
+        {
+            out.push(violation(THREAD, rel, t, "raw \
+                `std::thread` spawn/scope outside util::pool — \
+                parallel work goes through the scoped pool so chunk \
+                assignment (and therefore output) stays deterministic"
+                .to_string()));
+        }
+        // arch-specific intrinsics: `cfg(target_arch = ...)` gates and
+        // runtime feature probes belong to the simd dispatch module.
+        if rel != SIMD_HOME
+            && (name == "target_arch"
+                || name == "is_x86_feature_detected")
+        {
+            out.push(violation(THREAD, rel, t, format!(
+                "`{name}` outside exaq::simd — arch-specific lanes \
+                 live behind the simd::Level dispatch next to the \
+                 scalar reference they are tested against")));
         }
     }
 }

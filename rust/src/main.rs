@@ -14,6 +14,10 @@
 //!                 (no artifacts needed; virtual-clock latency report)
 //!   lint          determinism lint over the repo tree
 //!                 (exit 0 clean / 1 violations / 2 internal error)
+//!   compare       bench regression gate over two BENCH_*.json files
+//!                 (exit 0 pass / 1 regression / 2 bad input; a
+//!                 missing *baseline* file passes with a note so the
+//!                 gate can ride before baselines are committed)
 //!   selftest      engine smoke: load bundle, run one prefill
 
 use std::collections::BTreeMap;
@@ -39,14 +43,18 @@ use exaq_repro::model::{SamplingParams, Tokenizer};
 use exaq_repro::report::{f as fnum, pct, Table};
 use exaq_repro::runtime::{Engine, QuantMode, SimBackend, SimConfig};
 
-/// Tiny flag parser: `--key value` pairs + positional subcommand.
+/// Tiny flag parser: `--key value` pairs + positional subcommand,
+/// with the remaining positionals kept in order (`compare` takes two
+/// file paths).
 struct Args {
     flags: BTreeMap<String, String>,
+    positionals: Vec<String>,
 }
 
 impl Args {
     fn parse(argv: &[String]) -> (Option<String>, Args) {
         let mut flags = BTreeMap::new();
+        let mut positionals = Vec::new();
         let mut cmd = None;
         let mut i = 0;
         while i < argv.len() {
@@ -57,11 +65,13 @@ impl Args {
             } else {
                 if cmd.is_none() {
                     cmd = Some(argv[i].clone());
+                } else {
+                    positionals.push(argv[i].clone());
                 }
                 i += 1;
             }
         }
-        (cmd, Args { flags })
+        (cmd, Args { flags, positionals })
     }
 
     fn get(&self, k: &str, default: &str) -> String {
@@ -96,11 +106,12 @@ fn main() -> Result<()> {
         Some("serve-demo") => cmd_serve_demo(&args),
         Some("stress") => cmd_stress(&args),
         Some("lint") => std::process::exit(cmd_lint(&args)),
+        Some("compare") => std::process::exit(cmd_compare(&args)),
         Some("selftest") => cmd_selftest(&args),
         other => {
             eprintln!("usage: repro <solve-clip|fit-table1|mse-curve|\
                        breakdown|calibrate|eval|generate|serve-demo|\
-                       stress|lint|selftest> [--flags]");
+                       stress|lint|compare|selftest> [--flags]");
             if let Some(o) = other {
                 bail!("unknown command {o}");
             }
@@ -576,6 +587,76 @@ fn cmd_lint(args: &Args) -> i32 {
               report.files, report.violations.len(),
               report.suppressed);
     if report.is_clean() { 0 } else { 1 }
+}
+
+/// `repro compare <baseline.json> <current.json> [--threshold 0.10]
+/// [--gate hard|soft]` — the bench regression gate. Exit codes: 0
+/// pass, 1 regression (hard gate only), 2 unreadable/invalid input.
+/// A missing *baseline* file passes with a note (repos grow the
+/// baseline snapshot later); a missing *current* file is an error.
+/// `EXAQ_BENCH_GATE=soft` downgrades failures to warnings, same as
+/// `--gate soft` — for riding the gate non-blocking in CI first.
+fn cmd_compare(args: &Args) -> i32 {
+    use exaq_repro::report::compare;
+    use exaq_repro::util::json::Json;
+    let [base_path, cur_path] = args.positionals.as_slice() else {
+        eprintln!("usage: repro compare <baseline.json> \
+                   <current.json> [--threshold 0.10] \
+                   [--gate hard|soft]");
+        return 2;
+    };
+    let base_body = match std::fs::read_to_string(base_path) {
+        Ok(s) => s,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+            println!("repro compare: baseline {base_path} not found \
+                      — nothing to gate against (pass)");
+            return 0;
+        }
+        Err(e) => {
+            eprintln!("repro compare: reading {base_path}: {e}");
+            return 2;
+        }
+    };
+    let cur_body = match std::fs::read_to_string(cur_path) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("repro compare: reading {cur_path}: {e}");
+            return 2;
+        }
+    };
+    let parse = |path: &str, body: &str| match Json::parse(body) {
+        Ok(j) => Some(j),
+        Err(e) => {
+            eprintln!("repro compare: parsing {path}: {e}");
+            None
+        }
+    };
+    let (Some(base), Some(cur)) = (parse(base_path, &base_body),
+                                   parse(cur_path, &cur_body))
+    else {
+        return 2;
+    };
+    let threshold =
+        args.get_f64("threshold", compare::DEFAULT_THRESHOLD);
+    let soft = args.get("gate", "hard") == "soft"
+        || std::env::var("EXAQ_BENCH_GATE").as_deref() == Ok("soft");
+    let report = match compare::compare(&base, &cur, threshold) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("repro compare: {e}");
+            return 2;
+        }
+    };
+    print!("{}", report.render());
+    if report.failed() {
+        if soft {
+            println!("repro compare: FAILED, but gate is soft \
+                      (EXAQ_BENCH_GATE=soft) — not blocking");
+            return 0;
+        }
+        return 1;
+    }
+    0
 }
 
 fn cmd_selftest(args: &Args) -> Result<()> {

@@ -180,9 +180,22 @@ pub struct BatchSampler {
     groups: Vec<(RowClass, usize)>,
     offsets: Vec<usize>,
     cursor: Vec<usize>,
+    /// Worker-count override handed to every engine (0 = auto: the
+    /// pool default behind its plane-size heuristic, so small decode
+    /// ticks stay inline and big ones fan out).
+    threads: usize,
 }
 
 impl BatchSampler {
+    /// Pin the worker count used by the per-config
+    /// [`BatchSoftmax::softmax_rows`] calls. Tokens are identical for
+    /// any value — the pooled kernel is bit-identical to scalar — so
+    /// this is purely a throughput knob.
+    pub fn set_threads(&mut self, threads: usize) -> &mut Self {
+        self.threads = threads;
+        self
+    }
+
     /// Sample one token per entry of `rows` from a `[* × vocab]` logits
     /// plane. `rows` pairs a plane row index with that row's sampling
     /// params; `out` receives one token per entry, in order.
@@ -270,6 +283,7 @@ impl BatchSampler {
                             self.engines.len() - 1
                         }
                     };
+                    self.engines[ei].set_threads(self.threads);
                     self.engines[ei]
                         .softmax_rows(slice, count, vocab, &[]);
                 }

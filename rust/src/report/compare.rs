@@ -1,0 +1,307 @@
+//! Bench-regression comparison over two `BENCH_*.json` documents.
+//!
+//! The gate behind `repro compare <baseline> <current>`: result
+//! records are keyed by their identity fields (kind / scenario / rows
+//! / len / bits / group / kernel / mode — whichever are present), the
+//! timing metrics of matching cells are diffed, and any cell whose
+//! metric grew by more than the threshold (default
+//! [`DEFAULT_THRESHOLD`] = 10%) is a regression. All tracked metrics
+//! are lower-is-better wall times, so "grew" means "got slower".
+//!
+//! The comparison itself is pure (JSON in, report out) so it can be
+//! unit-tested without touching the filesystem; `main.rs` owns file
+//! IO, exit codes, and the soft/hard gate toggle.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use crate::util::json::Json;
+
+/// Default allowed slowdown before a cell counts as a regression.
+pub const DEFAULT_THRESHOLD: f64 = 0.10;
+
+/// Fields that identify a result cell (joined into the match key in
+/// this order; absent fields are skipped so schemas can differ).
+pub const KEY_FIELDS: &[&str] = &[
+    "kind", "scenario", "rows", "len", "bits", "group", "kernel",
+    "mode",
+];
+
+/// Lower-is-better timing metrics eligible for the gate. Derived
+/// ratios (speedups) are deliberately not compared — they move
+/// whenever either side of the division does.
+pub const METRICS: &[&str] = &[
+    "algo1_us", "scalar_us", "batched_us", "baseline_us", "host_s",
+    "scalar_host_s", "batched_host_s",
+];
+
+/// One metric of one matched cell, baseline vs current.
+#[derive(Clone, Debug)]
+pub struct MetricDiff {
+    pub metric: &'static str,
+    pub base: f64,
+    pub current: f64,
+    /// Relative change: `(current - base) / base`. Positive = slower.
+    pub ratio: f64,
+}
+
+/// All compared metrics of one matched cell.
+#[derive(Clone, Debug)]
+pub struct CellDiff {
+    /// Human-readable identity, e.g. `bits=2 rows=64 len=256`.
+    pub key: String,
+    pub diffs: Vec<MetricDiff>,
+}
+
+/// The full comparison of two bench documents.
+#[derive(Clone, Debug)]
+pub struct CompareReport {
+    pub bench: String,
+    pub threshold: f64,
+    pub cells: Vec<CellDiff>,
+    /// Baseline cells with no counterpart in the current run — the
+    /// gate treats vanished coverage as a failure, not a pass.
+    pub missing: Vec<String>,
+}
+
+impl CompareReport {
+    /// Every (cell key, metric diff) beyond the threshold.
+    pub fn regressions(&self) -> Vec<(&str, &MetricDiff)> {
+        let mut out = Vec::new();
+        for cell in &self.cells {
+            for d in &cell.diffs {
+                if d.ratio > self.threshold {
+                    out.push((cell.key.as_str(), d));
+                }
+            }
+        }
+        out
+    }
+
+    /// True when the gate should fail: a regressed metric or a
+    /// baseline cell that disappeared from the current run.
+    pub fn failed(&self) -> bool {
+        !self.missing.is_empty() || !self.regressions().is_empty()
+    }
+
+    /// Render the human-readable gate report.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "bench '{}': {} matched cells, threshold {:.0}%",
+            self.bench,
+            self.cells.len(),
+            100.0 * self.threshold
+        );
+        let regs = self.regressions();
+        for (key, d) in &regs {
+            let _ = writeln!(
+                out,
+                "  REGRESSION {key}: {} {:.3} -> {:.3} ({:+.1}%)",
+                d.metric, d.base, d.current, 100.0 * d.ratio
+            );
+        }
+        for key in &self.missing {
+            let _ = writeln!(
+                out,
+                "  MISSING {key}: in baseline, absent from current"
+            );
+        }
+        if regs.is_empty() && self.missing.is_empty() {
+            let best = self
+                .cells
+                .iter()
+                .flat_map(|c| c.diffs.iter())
+                .map(|d| d.ratio)
+                .fold(f64::INFINITY, f64::min);
+            if best.is_finite() {
+                let _ = writeln!(
+                    out,
+                    "  ok — no regressions (best delta {:+.1}%)",
+                    100.0 * best
+                );
+            } else {
+                let _ = writeln!(out, "  ok — no shared metrics");
+            }
+        }
+        out
+    }
+}
+
+/// Identity key of one result record (present [`KEY_FIELDS`] joined).
+fn cell_key(rec: &Json) -> String {
+    let mut parts = Vec::new();
+    for &field in KEY_FIELDS {
+        let Some(v) = rec.get(field) else { continue };
+        let rendered = match v {
+            Json::Str(s) => s.clone(),
+            _ => match v.as_f64() {
+                Some(x) if x.fract() == 0.0 => {
+                    format!("{}", x as i64)
+                }
+                Some(x) => format!("{x}"),
+                None => continue,
+            },
+        };
+        parts.push(format!("{field}={rendered}"));
+    }
+    if parts.is_empty() {
+        "<unkeyed>".to_string()
+    } else {
+        parts.join(" ")
+    }
+}
+
+fn results_of(doc: &Json) -> Result<&[Json], String> {
+    doc.get("results")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| "document has no 'results' array".to_string())
+}
+
+/// Compare two parsed bench documents. Errors only on structurally
+/// invalid documents (no `results` array); schema drift between the
+/// two sides degrades to fewer shared metrics, not an error.
+pub fn compare(baseline: &Json, current: &Json, threshold: f64)
+               -> Result<CompareReport, String> {
+    let bench = baseline
+        .get("bench")
+        .and_then(Json::as_str)
+        .unwrap_or("?")
+        .to_string();
+    let base_rows = results_of(baseline)?;
+    let cur_rows = results_of(current)?;
+
+    let mut cur_by_key: BTreeMap<String, &Json> = BTreeMap::new();
+    for rec in cur_rows {
+        // last record wins on duplicate keys — benches emit unique
+        // cells, so this only matters for malformed inputs
+        cur_by_key.insert(cell_key(rec), rec);
+    }
+
+    let mut cells = Vec::new();
+    let mut missing = Vec::new();
+    for rec in base_rows {
+        let key = cell_key(rec);
+        let Some(cur) = cur_by_key.get(&key) else {
+            missing.push(key);
+            continue;
+        };
+        let mut diffs = Vec::new();
+        for &metric in METRICS {
+            let (Some(b), Some(c)) = (
+                rec.get(metric).and_then(Json::as_f64),
+                cur.get(metric).and_then(Json::as_f64),
+            ) else {
+                continue;
+            };
+            let ratio = (c - b) / b.max(1e-12);
+            diffs.push(MetricDiff { metric, base: b, current: c,
+                                    ratio });
+        }
+        cells.push(CellDiff { key, diffs });
+    }
+    Ok(CompareReport { bench, threshold, cells, missing })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn doc(rows: &[&str]) -> Json {
+        let body = format!(
+            "{{\"bench\":\"softmax\",\"meta\":{{}},\"results\":[{}]}}",
+            rows.join(",")
+        );
+        Json::parse(&body).unwrap()
+    }
+
+    #[test]
+    fn identical_documents_pass() {
+        let d = doc(&[
+            "{\"bits\":2,\"rows\":64,\"len\":256,\"batched_us\":10.0}",
+        ]);
+        let r = compare(&d, &d, DEFAULT_THRESHOLD).unwrap();
+        assert!(!r.failed());
+        assert_eq!(r.cells.len(), 1);
+        assert_eq!(r.cells[0].key, "rows=64 len=256 bits=2");
+        assert!(r.render().contains("ok — no regressions"));
+    }
+
+    #[test]
+    fn slowdown_beyond_threshold_fails_but_speedup_passes() {
+        let base = doc(&[
+            "{\"bits\":2,\"batched_us\":10.0,\"scalar_us\":40.0}",
+            "{\"bits\":3,\"batched_us\":20.0}",
+        ]);
+        let cur = doc(&[
+            "{\"bits\":2,\"batched_us\":11.5,\"scalar_us\":20.0}",
+            "{\"bits\":3,\"batched_us\":21.0}",
+        ]);
+        let r = compare(&base, &cur, 0.10).unwrap();
+        let regs = r.regressions();
+        // bits=2 batched 10 -> 11.5 is +15%: regression. The 2x
+        // scalar speedup and the +5% bits=3 drift are fine.
+        assert_eq!(regs.len(), 1);
+        assert_eq!(regs[0].0, "bits=2");
+        assert_eq!(regs[0].1.metric, "batched_us");
+        assert!((regs[0].1.ratio - 0.15).abs() < 1e-9);
+        assert!(r.failed());
+        assert!(r.render().contains("REGRESSION bits=2"));
+        // a looser threshold lets the same delta through
+        assert!(!compare(&base, &cur, 0.20).unwrap().failed());
+    }
+
+    #[test]
+    fn vanished_baseline_cell_fails_the_gate() {
+        let base = doc(&[
+            "{\"bits\":2,\"batched_us\":10.0}",
+            "{\"bits\":4,\"batched_us\":12.0}",
+        ]);
+        let cur = doc(&["{\"bits\":2,\"batched_us\":10.0}"]);
+        let r = compare(&base, &cur, DEFAULT_THRESHOLD).unwrap();
+        assert_eq!(r.missing, vec!["bits=4".to_string()]);
+        assert!(r.failed());
+        assert!(r.render().contains("MISSING bits=4"));
+        // extra current-only cells are NOT a failure
+        let widened =
+            compare(&cur, &base, DEFAULT_THRESHOLD).unwrap();
+        assert!(!widened.failed());
+    }
+
+    #[test]
+    fn zero_baseline_metric_does_not_divide_by_zero() {
+        let base = doc(&["{\"bits\":2,\"batched_us\":0.0}"]);
+        let cur = doc(&["{\"bits\":2,\"batched_us\":1.0}"]);
+        let r = compare(&base, &cur, DEFAULT_THRESHOLD).unwrap();
+        assert!(r.cells[0].diffs[0].ratio.is_finite());
+        assert!(r.failed(), "growth from zero is a regression");
+    }
+
+    #[test]
+    fn schema_drift_and_bad_documents() {
+        // disjoint metrics -> no shared diffs, gate passes
+        let base = doc(&["{\"bits\":2,\"algo1_us\":5.0}"]);
+        let cur = doc(&["{\"bits\":2,\"host_s\":0.5}"]);
+        let r = compare(&base, &cur, DEFAULT_THRESHOLD).unwrap();
+        assert!(!r.failed());
+        assert!(r.cells[0].diffs.is_empty());
+        // structurally invalid input errors instead of passing
+        let bad = Json::parse("{\"bench\":\"x\"}").unwrap();
+        assert!(compare(&bad, &cur, DEFAULT_THRESHOLD).is_err());
+        assert!(compare(&base, &bad, DEFAULT_THRESHOLD).is_err());
+    }
+
+    #[test]
+    fn string_and_float_keys_render_stably() {
+        let base = doc(&[
+            "{\"scenario\":\"burst\",\"mode\":\"batched\",\
+             \"host_s\":1.0}",
+        ]);
+        let r = compare(&base, &base, DEFAULT_THRESHOLD).unwrap();
+        assert_eq!(r.cells[0].key, "scenario=burst mode=batched");
+        let frac = doc(&["{\"rows\":1.5,\"host_s\":1.0}"]);
+        let rf = compare(&frac, &frac, DEFAULT_THRESHOLD).unwrap();
+        assert_eq!(rf.cells[0].key, "rows=1.5");
+    }
+}

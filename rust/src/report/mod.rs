@@ -9,6 +9,8 @@ use std::fmt::Write as _;
 
 use crate::util::json::Json;
 
+pub mod compare;
+
 /// A simple column-aligned markdown table builder.
 #[derive(Clone, Debug, Default)]
 pub struct Table {
@@ -152,11 +154,18 @@ impl BenchJson {
     }
 
     /// Serialise to `BENCH_<name>.json`; returns the path written.
+    /// When `EXAQ_BENCH_COMMIT=1`, also snapshot the same document to
+    /// `BENCH_baseline/BENCH_<name>.json` — the checked-in baseline
+    /// the `repro compare` regression gate diffs future runs against.
     pub fn write(&self) -> std::io::Result<String> {
         let path = self.path();
         let mut body = self.to_json().to_string_pretty();
         body.push('\n');
-        std::fs::write(&path, body)?;
+        std::fs::write(&path, &body)?;
+        if std::env::var("EXAQ_BENCH_COMMIT").as_deref() == Ok("1") {
+            std::fs::create_dir_all("BENCH_baseline")?;
+            std::fs::write(format!("BENCH_baseline/{path}"), &body)?;
+        }
         Ok(path)
     }
 }

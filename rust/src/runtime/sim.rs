@@ -53,6 +53,10 @@ pub struct SimConfig {
     /// (default) or the per-row scalar path. Bit-identical results;
     /// the flag exists so benches can report the host-time delta.
     pub batched_softmax: bool,
+    /// Worker count for the batched plane kernel (0 = auto: the row
+    /// pool's own heuristic). Logits are bit-identical for any value —
+    /// the pool is deterministic — so this only moves host time.
+    pub threads: usize,
     /// Simulated accelerator clock in cycles/second (converts the cost
     /// model's cycles into seconds on the shared clock).
     pub clock_hz: f64,
@@ -75,6 +79,7 @@ impl Default for SimConfig {
             shape_bits: 2,
             shape_clip: -4.0,
             batched_softmax: true,
+            threads: 0,
             clock_hz: 1.0e6,
             gemm_precision: GemmPrecision::Bf16,
         }
@@ -136,7 +141,9 @@ impl SimBackend {
         assert!((cfg.eos as usize) < cfg.vocab,
                 "eos id outside the simulated vocabulary");
         assert!(cfg.vocab >= 8, "vocabulary too small to be interesting");
-        let engine = BatchSoftmax::new(cfg.shape_bits, cfg.shape_clip);
+        let mut engine =
+            BatchSoftmax::new(cfg.shape_bits, cfg.shape_clip);
+        engine.set_threads(cfg.threads);
         Self {
             cfg,
             machine: MachineModel::default(),
@@ -472,6 +479,22 @@ mod tests {
                     &[1, 2, 3, 4], &mut state_b, None)
             .unwrap();
         assert_eq!(la.as_f32().unwrap(), lb.as_f32().unwrap());
+    }
+
+    #[test]
+    fn pooled_prefill_is_bit_identical_to_single_thread() {
+        let clock = Rc::new(VirtualClock::new());
+        let one = SimConfig { threads: 1, ..SimConfig::default() };
+        let many = SimConfig { threads: 7, ..SimConfig::default() };
+        let mut a = SimBackend::new(one, clock.clone());
+        let mut b = SimBackend::new(many, clock);
+        let tokens = prompt_tensor(&a.cfg.clone());
+        let (la, _) =
+            a.prefill("sim", QuantMode::None, &tokens, None).unwrap();
+        let (lb, _) =
+            b.prefill("sim", QuantMode::None, &tokens, None).unwrap();
+        assert_eq!(la.as_f32().unwrap(), lb.as_f32().unwrap(),
+                   "worker count changed prefill logits");
     }
 
     #[test]

@@ -1,11 +1,13 @@
 //! Small shared substrates: deterministic RNG, a dependency-free JSON
 //! parser/writer (the image has no serde; artifacts/manifest.json and
 //! calibration.json are parsed with [`json`]), the `anyhow`-style
-//! [`error`] module every layer's `Result` flows through, and the
+//! [`error`] module every layer's `Result` flows through, the
 //! [`clock`] abstraction (wall vs virtual time) the serving coordinator
-//! is tested against.
+//! is tested against, and the scoped worker [`pool`] — the one
+//! sanctioned `std::thread` site (`thread-discipline` lint).
 
 pub mod clock;
 pub mod error;
 pub mod json;
+pub mod pool;
 pub mod rng;

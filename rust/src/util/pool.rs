@@ -1,0 +1,137 @@
+//! The one sanctioned `std::thread` site: a hand-rolled scoped
+//! work-distributing pool (the crate is dependency-free — no rayon).
+//!
+//! [`run_chunks`] takes an explicit list of work chunks and drains it
+//! with `threads` scoped workers self-scheduling off a shared atomic
+//! cursor — dynamic load balancing with zero channels and zero
+//! allocation beyond the slot vector. Determinism falls out of the
+//! shape of the work, not the schedule: every chunk owns a disjoint
+//! `&mut` region fixed *before* any worker starts, and chunk results
+//! land only inside that region, so output is bit-identical for any
+//! thread count or interleaving. Callers (the `BatchSoftmax` plane
+//! kernel) keep per-chunk scratch inside the worker closure, so no
+//! state leaks across chunks either.
+//!
+//! The `thread-discipline` lint pins raw `std::thread::spawn`/`scope`
+//! to this file; everything else parallelises by building chunks and
+//! calling in here.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+/// Default worker count: `EXAQ_THREADS` if set to a positive integer,
+/// else `std::thread::available_parallelism()`. Read once per process.
+pub fn default_threads() -> usize {
+    static CACHED: OnceLock<usize> = OnceLock::new();
+    *CACHED.get_or_init(|| {
+        if cfg!(miri) {
+            // Keep the interpreted test runs single-threaded unless a
+            // test opts in explicitly via `set_threads`.
+            return 1;
+        }
+        let from_env = std::env::var("EXAQ_THREADS")
+            .ok()
+            .and_then(|v| v.trim().parse::<usize>().ok())
+            .filter(|&n| n > 0);
+        from_env.unwrap_or_else(|| {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        })
+    })
+}
+
+/// Run `f` over every chunk, on up to `threads` scoped workers.
+///
+/// Chunks are claimed dynamically (atomic cursor), so a slow chunk
+/// does not stall the rest of the queue; each chunk is processed
+/// exactly once. With `threads <= 1` or a single chunk the call runs
+/// inline on the caller's thread — same results, no spawns.
+pub fn run_chunks<T, F>(chunks: Vec<T>, threads: usize, f: F)
+where
+    T: Send,
+    F: Fn(T) + Sync,
+{
+    let workers = threads.min(chunks.len());
+    if workers <= 1 {
+        for c in chunks {
+            f(c);
+        }
+        return;
+    }
+    let slots: Vec<Mutex<Option<T>>> =
+        chunks.into_iter().map(|c| Mutex::new(Some(c))).collect();
+    let cursor = AtomicUsize::new(0);
+    let drain = |slots: &[Mutex<Option<T>>]| loop {
+        let i = cursor.fetch_add(1, Ordering::Relaxed);
+        let Some(slot) = slots.get(i) else { break };
+        // A poisoned slot means a sibling worker panicked mid-chunk;
+        // the scope is about to propagate that panic, so just skip.
+        let item = slot.lock().ok().and_then(|mut g| g.take());
+        if let Some(c) = item {
+            f(c);
+        }
+    };
+    std::thread::scope(|s| {
+        for _ in 1..workers {
+            s.spawn(|| drain(&slots));
+        }
+        drain(&slots);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn every_chunk_runs_exactly_once_under_any_thread_count() {
+        for threads in [1usize, 2, 7, 64] {
+            let hits: Vec<AtomicU64> =
+                (0..33).map(|_| AtomicU64::new(0)).collect();
+            let chunks: Vec<usize> = (0..33).collect();
+            run_chunks(chunks, threads, |i| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+            for (i, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::Relaxed), 1,
+                           "threads={threads} chunk {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn chunk_outputs_land_in_their_own_regions() {
+        // The determinism contract: results live in per-chunk &mut
+        // regions decided before any worker starts.
+        let mut data = vec![0u64; 40];
+        let chunks: Vec<(usize, &mut [u64])> =
+            data.chunks_mut(7).enumerate().collect();
+        run_chunks(chunks, 5, |(idx, slice)| {
+            for (j, x) in slice.iter_mut().enumerate() {
+                *x = (idx as u64) << 8 | j as u64;
+            }
+        });
+        for (i, &x) in data.iter().enumerate() {
+            assert_eq!(x, ((i / 7) as u64) << 8 | (i % 7) as u64);
+        }
+    }
+
+    #[test]
+    fn empty_and_single_chunk_run_inline() {
+        run_chunks(Vec::<usize>::new(), 8, |_| unreachable!());
+        let seen = AtomicU64::new(0);
+        run_chunks(vec![41usize], 8, |x| {
+            seen.store(x as u64 + 1, Ordering::Relaxed);
+        });
+        assert_eq!(seen.load(Ordering::Relaxed), 42);
+    }
+
+    #[test]
+    fn default_threads_is_positive_and_stable() {
+        let a = default_threads();
+        assert!(a >= 1);
+        assert_eq!(a, default_threads());
+    }
+}

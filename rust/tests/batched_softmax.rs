@@ -4,12 +4,15 @@
 //! `BatchSoftmax::softmax_rows` and per-row scalar `softmax_algo2`
 //! across rows / lens / masks / bit-widths / clips, plus hostile
 //! inputs (all-`-inf` rows, `valid_len` > len, rows = 0, lens not
-//! divisible by the packing group) and the batched-sampler /
-//! per-row-sampler equivalence on full serving planes.
+//! divisible by the packing group), SIMD-level and worker-count
+//! invariance (every available lane width and thread count must be
+//! bit-identical to the scalar inline path), and the batched-sampler
+//! / per-row-sampler equivalence on full serving planes.
 
 use exaq_repro::exaq::batched::BatchSoftmax;
 use exaq_repro::exaq::lut::{LutExp, LutSum};
 use exaq_repro::exaq::quant::Quantizer;
+use exaq_repro::exaq::simd;
 use exaq_repro::exaq::softmax::{softmax_algo2, Algo2Scratch};
 use exaq_repro::model::sampling::{sample_with, BatchSampler,
                                   SamplerScratch, SamplingParams};
@@ -156,6 +159,65 @@ fn single_column_and_single_row_planes() {
         scalar_reference(&mut rref, 77, &[33], bits, -5.0);
         assert_planes_bit_equal(&row, &rref,
                                 &format!("rows=1 bits={bits}"));
+    }
+}
+
+#[test]
+fn every_simd_level_is_bit_exact_with_the_scalar_engine() {
+    // sweep every lane width the host offers against the scalar
+    // reference across lane-tail lengths (len % 4, % 8 ∈ all
+    // residues), every bit-width, and valid_len edge cases — the
+    // kernel contract is bit-identical output at any level
+    let levels = simd::available_levels();
+    assert!(levels.contains(&simd::Level::Scalar));
+    let lens = [1usize, 2, 3, 4, 5, 7, 8, 9, 15, 16, 17, 31, 33, 64,
+                65];
+    for &level in &levels {
+        for bits in [2u32, 3, 4] {
+            for (t, &len) in lens.iter().enumerate() {
+                let rows = 3usize;
+                let seed = 0xABCD + (bits as u64) * 131 + t as u64;
+                let mut plane = random_plane(rows, len, seed, 2.5);
+                // row 0 full, row 1 a mid cut, row 2 over-long
+                let vlens = [len, len / 2, len + 9];
+                let mut reference = plane.clone();
+                let mut engine = BatchSoftmax::new(bits, -4.0);
+                engine.set_simd_level(level);
+                assert_eq!(engine.simd_level(), level);
+                engine.softmax_rows(&mut plane, rows, len, &vlens);
+                scalar_reference(&mut reference, len, &vlens, bits,
+                                 -4.0);
+                assert_planes_bit_equal(
+                    &plane, &reference,
+                    &format!("level={} bits={bits} len={len}",
+                             level.name()));
+            }
+        }
+    }
+}
+
+#[test]
+fn worker_count_never_changes_the_plane() {
+    // the scoped row pool must be invisible in the output: the same
+    // plane through 1, 2, and 7 workers (and the auto heuristic) is
+    // bit-identical, including ragged valid_lens
+    let (rows, len) = (64usize, 96usize);
+    for bits in [2u32, 3, 4] {
+        let plane0 = random_plane(rows, len, 0xF00D + bits as u64,
+                                  2.0);
+        let vlens: Vec<usize> =
+            (0..rows).map(|r| (r * 13) % (len + 2)).collect();
+        let mut want = plane0.clone();
+        scalar_reference(&mut want, len, &vlens, bits, -4.0);
+        for threads in [1usize, 2, 7, 0] {
+            let mut plane = plane0.clone();
+            let mut engine = BatchSoftmax::new(bits, -4.0);
+            engine.set_threads(threads);
+            engine.softmax_rows(&mut plane, rows, len, &vlens);
+            assert_planes_bit_equal(
+                &plane, &want,
+                &format!("bits={bits} threads={threads}"));
+        }
     }
 }
 

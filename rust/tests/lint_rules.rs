@@ -101,6 +101,41 @@ fn float_reduction_flags_iterator_sums_and_accumulators() {
     assert_eq!(v.line, 2);
 }
 
+#[test]
+fn thread_discipline_flags_raw_threads_and_arch_gates() {
+    let v = single("rust/src/coordinator/batcher.rs",
+                   "fn f() { std::thread::spawn(|| {}); }\n");
+    assert_eq!(v.rule, "thread-discipline");
+    assert_eq!((v.line, v.col), (1, 15));
+    let v = single("rust/src/exaq/batched.rs",
+                   "fn f() { std::thread::scope(|_| {}); }\n");
+    assert_eq!(v.rule, "thread-discipline");
+    assert_eq!((v.line, v.col), (1, 15));
+    let v = single("rust/src/exaq/lut.rs",
+                   "#[cfg(target_arch = \"x86_64\")]\nfn f() {}\n");
+    assert_eq!(v.rule, "thread-discipline");
+    assert_eq!((v.line, v.col), (1, 7));
+    let v = single("rust/src/exaq/quant.rs",
+                   "fn f() -> bool { is_x86_feature_detected!(\"avx2\") \
+                    }\n");
+    assert_eq!(v.rule, "thread-discipline");
+    assert_eq!(v.line, 1);
+}
+
+#[test]
+fn thread_discipline_spares_the_sanctioned_homes() {
+    // util::pool is the one place allowed to spawn scoped threads
+    clean("rust/src/util/pool.rs",
+          "fn f() { std::thread::scope(|s| { s.spawn(|| {}); }); }\n");
+    // exaq::simd owns every cfg(target_arch) lane
+    clean("rust/src/exaq/simd.rs",
+          "#[cfg(target_arch = \"x86_64\")]\nfn f() {}\n");
+    // thread::sleep is not a parallelism primitive (util::clock)
+    clean("rust/src/util/clock.rs",
+          "fn f() { std::thread::sleep(\
+           std::time::Duration::from_millis(1)); }\n");
+}
+
 // ---- suppression ------------------------------------------------
 
 #[test]
@@ -206,7 +241,7 @@ fn rule_registry_is_complete() {
     for expected in ["clock-discipline", "seeded-rng",
                      "deterministic-iteration", "no-panic-hot-path",
                      "float-reduction-discipline",
-                     "lint-allow-syntax"] {
+                     "thread-discipline", "lint-allow-syntax"] {
         assert!(names.contains(&expected), "missing rule {expected}");
     }
 }
