@@ -1,0 +1,186 @@
+//! Attention-plane bench — fused packed pipeline
+//! (`AttentionPlane::attend`: scores stay in `PackedCodes` from QK^T
+//! through the weighted-value pass) vs the two-step reference
+//! (`softmax_rows` materializes the f32 probability plane, dense PV
+//! re-reads it). The two paths are bit-identical by contract — the
+//! bench asserts that before timing — so the columns isolate the cost
+//! of the f32 round trip the fused layout deletes. Acceptance floor:
+//! fused beats two-step wall time at M = 2, and the packed plane is
+//! strictly smaller than the dense one at every M.
+//!
+//! Hand-rolled harness (the image has no criterion): warmup + N timed
+//! repetitions, best-of-5 reporting. `EXAQ_BENCH_REPS` overrides the
+//! rep count (CI smoke runs with 1). Emits `BENCH_attention.json`
+//! (`EXAQ_BENCH_COMMIT=1` also snapshots it to `BENCH_baseline/` for
+//! the `repro compare` gate). Meta surfaces the thread-local plane /
+//! engine cache counters so cache-policy regressions stay visible.
+
+use exaq_repro::cost::{CycleTable, MachineModel};
+use exaq_repro::exaq::batched;
+use exaq_repro::exaq::plane::{dense_plane_bytes, packed_plane_bytes,
+                              plane_cache_stats,
+                              reset_plane_cache_stats,
+                              with_cached_plane};
+use exaq_repro::exaq::simd;
+use exaq_repro::report::{f as fnum, jnum, jstr, BenchJson, Table};
+use exaq_repro::util::clock::Stopwatch;
+use exaq_repro::util::pool;
+use exaq_repro::util::rng::SplitMix64;
+
+fn bench<F: FnMut()>(mut f: F, reps: usize) -> f64 {
+    for _ in 0..3 {
+        f(); // warmup
+    }
+    let mut best = f64::INFINITY;
+    for _ in 0..5 {
+        let t0 = Stopwatch::start();
+        for _ in 0..reps {
+            f();
+        }
+        best = best.min(t0.seconds() / reps as f64);
+    }
+    best
+}
+
+fn env_reps(default: usize) -> usize {
+    std::env::var("EXAQ_BENCH_REPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .filter(|&r| r > 0)
+        .unwrap_or(default)
+}
+
+fn main() {
+    let mut rng = SplitMix64::new(7);
+    let c = -6.0f32;
+    let reps = env_reps(8);
+    reset_plane_cache_stats();
+    batched::reset_cache_stats();
+
+    let mut t = Table::new(
+        "Attention plane — fused packed PV vs two-step \
+         softmax + dense PV (wall-clock, Rust)",
+        &["rows x len x d", "bits", "fused (us)", "two-step (us)",
+          "speedup", "packed (B)", "dense (B)", "model speedup"]);
+    let mut out = BenchJson::new("attention");
+    out.meta("reps", jnum(reps as f64));
+    out.meta("clip", jnum(c as f64));
+    out.meta("simd", jstr(simd::default_level().name()));
+    out.meta("threads", jnum(pool::default_threads() as f64));
+
+    for (rows, len, d) in
+        [(64usize, 1024usize, 64usize), (256, 256, 64), (32, 2048, 128)]
+    {
+        let scores: Vec<f32> = (0..rows * len)
+            .map(|_| rng.normal() as f32 * 2.0)
+            .collect();
+        let values: Vec<f32> = (0..len * d)
+            .map(|_| rng.normal() as f32)
+            .collect();
+        for bits in [2u32, 3, 4] {
+            let mut fused_out = vec![0.0f32; rows * d];
+            let mut two_out = vec![0.0f32; rows * d];
+            // bit-exactness first: timing two paths that disagree
+            // would compare different arithmetic
+            with_cached_plane(bits, c, |p| {
+                p.attend(&scores, rows, len, &[], &values, d,
+                         &mut fused_out);
+                p.attend_two_step(&scores, rows, len, &[], &values, d,
+                                  &mut two_out);
+            });
+            assert_eq!(fused_out, two_out,
+                       "fused/two-step mismatch at bits={bits}");
+
+            let fused = bench(
+                || {
+                    with_cached_plane(bits, c, |p| {
+                        p.attend(&scores, rows, len, &[], &values, d,
+                                 &mut fused_out);
+                    });
+                },
+                reps,
+            );
+            let two_step = bench(
+                || {
+                    with_cached_plane(bits, c, |p| {
+                        p.attend_two_step(&scores, rows, len, &[],
+                                          &values, d, &mut two_out);
+                    });
+                },
+                reps,
+            );
+
+            let (group, plane_bytes, threads, level) =
+                with_cached_plane(bits, c, |p| {
+                    (p.group(), p.plane_bytes(), p.threads(),
+                     p.simd_level())
+                });
+            let packed = packed_plane_bytes(rows, len, bits);
+            assert_eq!(plane_bytes, packed,
+                       "live plane footprint disagrees with the \
+                        layout helper at bits={bits}");
+            let dense = dense_plane_bytes(rows, len);
+            assert!(packed < dense,
+                    "packed plane must be smaller than dense");
+            let cycles = CycleTable::default();
+            let machine = MachineModel::default();
+            let workers = pool::default_threads();
+            let model_speedup = machine
+                .attention_plane_cycles(rows, len, d, bits, workers,
+                                        false)
+                / machine
+                    .attention_plane_cycles(rows, len, d, bits,
+                                            workers, true)
+                    .max(1e-12);
+            t.row(&[
+                format!("{rows}x{len}x{d}"),
+                bits.to_string(),
+                fnum(fused * 1e6, 1),
+                fnum(two_step * 1e6, 1),
+                format!("{:.2}x", two_step / fused.max(1e-12)),
+                packed.to_string(),
+                dense.to_string(),
+                format!("{model_speedup:.2}x"),
+            ]);
+            out.result(&[
+                ("rows", jnum(rows as f64)),
+                ("len", jnum(len as f64)),
+                ("d_head", jnum(d as f64)),
+                ("bits", jnum(bits as f64)),
+                ("group", jnum(group as f64)),
+                ("fused_us", jnum(fused * 1e6)),
+                ("two_step_us", jnum(two_step * 1e6)),
+                // guarded: a coarse timer at EXAQ_BENCH_REPS=1 could
+                // report 0, and inf would not serialise as valid JSON
+                ("fused_speedup", jnum(two_step / fused.max(1e-12))),
+                ("plane_bytes", jnum(packed as f64)),
+                ("dense_plane_bytes", jnum(dense as f64)),
+                ("fused_cycles", jnum(cycles.attention_plane_fused(
+                    rows, len, d, bits, workers))),
+                ("two_step_cycles",
+                 jnum(cycles.attention_plane_two_step(
+                     rows, len, d, bits, workers))),
+                ("simd", jstr(level.name())),
+                ("threads", jnum(threads as f64)),
+                ("kernel", jstr("attend")),
+            ]);
+        }
+    }
+    // cache counters go into meta after the sweep so the JSON records
+    // the real hit/miss history of the run
+    let (phits, pmisses) = plane_cache_stats();
+    out.meta("plane_cache_hits", jnum(phits as f64));
+    out.meta("plane_cache_misses", jnum(pmisses as f64));
+    let (ehits, emisses) = batched::cache_stats();
+    out.meta("engine_cache_hits", jnum(ehits as f64));
+    out.meta("engine_cache_misses", jnum(emisses as f64));
+    println!("{}", t.to_markdown());
+    println!("fused keeps the score plane packed end to end; two-step \
+              writes and re-reads the f32 probability plane.");
+    let _ = exaq_repro::report::write_csv(
+        "reports/attention_plane.csv", &t);
+    match out.write() {
+        Ok(path) => println!("bench telemetry -> {path}"),
+        Err(e) => eprintln!("failed to write bench json: {e}"),
+    }
+}

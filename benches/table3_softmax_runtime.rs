@@ -15,6 +15,7 @@
 //! pre-SIMD/pool configuration the fast path must keep beating.
 
 use exaq_repro::cost::CycleTable;
+use exaq_repro::exaq::batched;
 use exaq_repro::exaq::batched::BatchSoftmax;
 use exaq_repro::exaq::simd;
 use exaq_repro::exaq::softmax::{softmax_algo1, softmax_algo2,
@@ -169,10 +170,19 @@ fn main() {
                  jnum(baseline / batched.max(1e-12))),
                 ("simd", jstr(engine.simd_level().name())),
                 ("threads", jnum(engine.threads() as f64)),
+                // true packed-key footprint of the live plane (byte
+                // keys at M = 2, u16 keys at M = 3/4)
+                ("plane_bytes", jnum(engine.plane_bytes() as f64)),
                 ("kernel", jstr("softmax_rows")),
             ]);
         }
     }
+    // thread-local engine-cache counters: zero for this bench's
+    // directly-owned engines, but recorded so any future routing of
+    // the bench through the cached path shows up in the telemetry
+    let (hits, misses) = batched::cache_stats();
+    out.meta("engine_cache_hits", jnum(hits as f64));
+    out.meta("engine_cache_misses", jnum(misses as f64));
     println!("{}", t.to_markdown());
     println!("paper reference: 3.274 ms -> 2.066 ms = 36.9% saving; \
               accumulation ~4x at 2 bits.");

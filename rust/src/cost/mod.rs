@@ -73,6 +73,61 @@ impl CycleTable {
             * self.algo2_softmax_grouped(n, group)
     }
 
+    /// Critical-path cycles of one *fused* packed attention-plane row
+    /// ([`crate::exaq::plane::AttentionPlane::attend`]): quantize+pack
+    /// every lane, one LUT_sum load per key group plus a single
+    /// divide for the denominator, then the PV pass decodes each code
+    /// once through the premultiplied table (a LUT-class load) and
+    /// spends a multiply + add per `(lane, d_head)` element. The f32
+    /// probability plane is never written or re-read.
+    pub fn attention_plane_fused(&self, rows: usize, len: usize,
+                                 d_head: usize, bits: u32,
+                                 threads: usize) -> f64 {
+        self.attention_plane_fused_grouped(
+            rows, len, d_head, crate::exaq::lut::lut_group(bits),
+            threads)
+    }
+
+    /// [`Self::attention_plane_fused`] from an explicit kernel group —
+    /// callers holding a live plane pass `AttentionPlane::group()` /
+    /// `AttentionPlane::threads()` so the accounting can never drift
+    /// from the configuration in use.
+    pub fn attention_plane_fused_grouped(&self, rows: usize,
+                                         len: usize, d_head: usize,
+                                         group: usize,
+                                         threads: usize) -> f64 {
+        let (n, d, g) = (len as f64, d_head as f64, group as f64);
+        let per_row = n * self.quant + (n / g) * self.lut + self.div
+            + n * self.lut + 2.0 * n * d * self.add;
+        rows.div_ceil(threads.max(1)) as f64 * per_row
+    }
+
+    /// The two-step reference
+    /// ([`crate::exaq::plane::AttentionPlane::attend_two_step`]): the
+    /// full Algo-2 softmax (which normalizes and *writes* every f32
+    /// probability — `n` divides) plus a dense PV pass that re-reads
+    /// each probability (a load-class `lut` charge per lane) before
+    /// the same multiply + add accumulation. Strictly dearer than the
+    /// fused row by `n*lut + (n-1)*div` — the round trip.
+    pub fn attention_plane_two_step(&self, rows: usize, len: usize,
+                                    d_head: usize, bits: u32,
+                                    threads: usize) -> f64 {
+        self.attention_plane_two_step_grouped(
+            rows, len, d_head, crate::exaq::lut::lut_group(bits),
+            threads)
+    }
+
+    /// [`Self::attention_plane_two_step`] from an explicit group.
+    pub fn attention_plane_two_step_grouped(&self, rows: usize,
+                                            len: usize, d_head: usize,
+                                            group: usize,
+                                            threads: usize) -> f64 {
+        let (n, d) = (len as f64, d_head as f64);
+        let per_row = self.algo2_softmax_grouped(len, group)
+            + n * self.lut + 2.0 * n * d * self.add;
+        rows.div_ceil(threads.max(1)) as f64 * per_row
+    }
+
     /// Fractional runtime saving of Algo. 2 over Algo. 1 (Table 3's
     /// 36.9% figure is (3.274 − 2.066) / 3.274).
     pub fn softmax_saving(&self, n: usize, bits: u32) -> f64 {
@@ -268,6 +323,42 @@ impl MachineModel {
 
         gemm + softmax + elemwise
     }
+
+    /// Modeled cycles of one `[rows × len] × [len × d_head]` attention
+    /// plane including its score-plane memory traffic — the quantity
+    /// `BENCH_attention.json` claims the fused layout wins. Compute
+    /// runs the [`CycleTable`] attention variants over `vpu_lanes`;
+    /// traffic charges HBM bytes: both paths write + re-read the
+    /// packed key plane and stream the value matrix (the fused path
+    /// refetches V once per `TILE_ROWS` row block), but only the
+    /// two-step path also writes and re-reads the f32 probability
+    /// plane. Tile, group, and worker constants come from
+    /// `exaq::plane` so the model is pinned to the live kernel.
+    pub fn attention_plane_cycles(&self, rows: usize, len: usize,
+                                  d_head: usize, bits: u32,
+                                  threads: usize, fused: bool) -> f64 {
+        use crate::exaq::plane::{
+            dense_plane_bytes, packed_plane_bytes, TILE_ROWS,
+        };
+        let compute = if fused {
+            self.cycles
+                .attention_plane_fused(rows, len, d_head, bits,
+                                       threads)
+        } else {
+            self.cycles
+                .attention_plane_two_step(rows, len, d_head, bits,
+                                          threads)
+        } / self.vpu_lanes;
+        let scores = dense_plane_bytes(rows, len);
+        let packed = 2 * packed_plane_bytes(rows, len, bits);
+        let v_bytes = 4 * len * d_head
+            * if fused { rows.div_ceil(TILE_ROWS) } else { rows };
+        let round_trip =
+            if fused { 0 } else { 2 * dense_plane_bytes(rows, len) };
+        let traffic = (scores + packed + v_bytes + round_trip) as f64
+            / self.hbm_bytes_per_cycle;
+        compute + traffic
+    }
 }
 
 #[cfg(test)]
@@ -336,6 +427,68 @@ mod tests {
         assert!((uneven - 3.0 * t.algo1_softmax(n)).abs() < 1e-9);
         // parallel Algo-2 still beats parallel Algo-1 cell-for-cell
         assert!(plane < t.algo1_softmax_plane(rows, n, eng.threads()));
+    }
+
+    #[test]
+    fn fused_attention_plane_is_strictly_cheaper() {
+        let t = CycleTable::default();
+        let m = MachineModel::default();
+        for bits in [1u32, 2, 3, 4, 5] {
+            for (rows, len, d) in
+                [(1usize, 1usize, 1usize), (8, 64, 16), (64, 2048, 64)]
+            {
+                let fused =
+                    t.attention_plane_fused(rows, len, d, bits, 1);
+                let two =
+                    t.attention_plane_two_step(rows, len, d, bits, 1);
+                assert!(fused < two,
+                        "bits={bits} rows={rows} len={len}: \
+                         fused {fused} !< two-step {two}");
+                // the gap is exactly the round trip the fused path
+                // deletes: n probability re-reads + (n-1) divides
+                let n = len as f64;
+                let want = rows as f64
+                    * (n * t.lut + (n - 1.0) * t.div);
+                assert!(((two - fused) - want).abs() < 1e-6,
+                        "bits={bits} len={len}");
+                // and the machine model (compute + HBM traffic)
+                // agrees once the f32 plane traffic is charged
+                let mf = m.attention_plane_cycles(rows, len, d, bits,
+                                                  1, true);
+                let mt = m.attention_plane_cycles(rows, len, d, bits,
+                                                  1, false);
+                assert!(mf < mt, "bits={bits} machine model");
+            }
+        }
+    }
+
+    #[test]
+    fn attention_plane_accounting_tracks_the_live_plane() {
+        use crate::exaq::AttentionPlane;
+        let t = CycleTable::default();
+        let (rows, len, d) = (64usize, 256usize, 32usize);
+        for bits in [2u32, 3, 4] {
+            let mut plane = AttentionPlane::new(bits, -4.0);
+            plane.set_threads(4);
+            // the grouped variants take group/threads straight off
+            // the live plane and must agree with the bits variants
+            let via_bits =
+                t.attention_plane_fused(rows, len, d, bits, 4);
+            let via_plane = t.attention_plane_fused_grouped(
+                rows, len, d, plane.group(), plane.threads());
+            assert!((via_bits - via_plane).abs() < 1e-9,
+                    "bits={bits}: accounting drifted from the plane");
+            let two_bits =
+                t.attention_plane_two_step(rows, len, d, bits, 4);
+            let two_plane = t.attention_plane_two_step_grouped(
+                rows, len, d, plane.group(), plane.threads());
+            assert!((two_bits - two_plane).abs() < 1e-9, "bits={bits}");
+            // worker split charges the longest worker, like the
+            // softmax plane variants
+            let one = t.attention_plane_fused(1, len, d, bits, 1);
+            assert!((via_bits - 16.0 * one).abs() < 1e-6,
+                    "64 rows on 4 workers = 16 rows critical path");
+        }
     }
 
     #[test]

@@ -84,10 +84,34 @@ pub struct PackedCodes {
 }
 
 impl PackedCodes {
-    /// Bytes of packed-code storage currently held (the M = 2 plane
-    /// packs 4 codes/byte; tests pin the 4x saving over `u8` codes).
+    /// True footprint of the M ≤ 2 byte-key plane (4 codes per byte
+    /// at M = 2 — the packed byte *is* the LUT_sum key).
+    pub fn byte_plane_bytes(&self) -> usize {
+        self.bytes.len() * std::mem::size_of::<u8>()
+    }
+
+    /// True footprint of the M = 3+ u16-key plane (2 codes per
+    /// two-byte key at M = 3/4, one code per key otherwise).
+    pub fn word_plane_bytes(&self) -> usize {
+        self.words.len() * std::mem::size_of::<u16>()
+    }
+
+    /// Bytes of packed-code storage currently held — the sum of both
+    /// key planes' true footprints (tests pin the 4x saving over `u8`
+    /// codes at M = 2 and the byte-per-code saving at M = 3/4).
     pub fn plane_bytes(&self) -> usize {
-        self.bytes.len() + 2 * self.words.len()
+        self.byte_plane_bytes() + self.word_plane_bytes()
+    }
+
+    /// Mutable byte-key storage, for kernels (`exaq::plane`) that keep
+    /// codes packed across passes instead of decoding after softmax.
+    pub(crate) fn bytes_mut(&mut self) -> &mut Vec<u8> {
+        &mut self.bytes
+    }
+
+    /// Mutable u16-key storage; see [`PackedCodes::bytes_mut`].
+    pub(crate) fn words_mut(&mut self) -> &mut Vec<u16> {
+        &mut self.words
     }
 }
 
@@ -185,8 +209,9 @@ impl BatchSoftmax {
         self.level
     }
 
-    /// Workers to use for a `[rows × len]` plane.
-    fn plan_workers(&self, rows: usize, len: usize) -> usize {
+    /// Workers to use for a `[rows × len]` plane (shared with the
+    /// fused attention plane so both paths split rows identically).
+    pub(crate) fn plan_workers(&self, rows: usize, len: usize) -> usize {
         if rows < 2 {
             return 1;
         }

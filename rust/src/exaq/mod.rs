@@ -22,6 +22,10 @@
 //! * [`simd`]   — explicit-SIMD quantize+pack / decode lanes
 //!   (sse2/avx2/neon behind `cfg(target_arch)`) with the always-compiled
 //!   scalar reference; the batched kernel dispatches through these.
+//! * [`plane`]  — the cache-blocked packed attention plane:
+//!   [`AttentionPlane`] keeps scores in `PackedCodes` form from QK^T
+//!   through the weighted-value pass, fusing the premultiplied decode
+//!   into the accumulation tile (bit-identical to softmax + dense PV).
 //! * [`clip`]   — calibration-statistics -> per-layer clip thresholds
 //!   (EXAQ via Table 1; NAIVE via min/max midpoint).
 
@@ -32,12 +36,14 @@ pub mod gauss;
 pub mod lut;
 pub mod mc;
 pub mod mse;
+pub mod plane;
 pub mod quant;
 pub mod simd;
 pub mod softmax;
 pub mod solver;
 
 pub use batched::BatchSoftmax;
+pub use plane::AttentionPlane;
 pub use clip::{clip_exaq, clip_naive, Table1};
 pub use lut::{LutExp, LutSum};
 pub use quant::Quantizer;

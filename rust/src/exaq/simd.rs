@@ -20,6 +20,15 @@
 //!   output pass is a pure table *selection* (no arithmetic), so any
 //!   vector permute that copies the same `norm[code]` entries is
 //!   trivially bit-exact.
+//! * [`pv_axpy`] / [`pv_accum4`] / [`pv_accum2`] — the fused
+//!   weighted-value (PV) pass of
+//!   [`AttentionPlane`](super::plane::AttentionPlane). Every output
+//!   element `out[j]` is an *independent* accumulation chain
+//!   `out[j] = out[j] + p_k * v_kj` in ascending-`k` order; vector
+//!   lanes split over `j`, never over `k`, so no f32 sum is ever
+//!   reassociated. Each step is a separate IEEE multiply then add —
+//!   never an FMA (`vfmadd` / `vmla`), whose single rounding would
+//!   change the bits versus the scalar reference.
 //!
 //! The denominator reduction is deliberately **not** here: f32
 //! addition is order-sensitive, so summation stays in the fixed-tree
@@ -188,6 +197,74 @@ pub fn decode2(level: Level, keys: &[u16], norm: &[f32],
     }
 }
 
+/// One weighted value row folded into the output accumulator:
+/// `out[j] = out[j] + p * v[j]` per lane, separate multiply then add
+/// (never FMA). The per-`j` chains are independent, so vectorising
+/// over `j` is bit-exact for any width.
+pub fn pv_axpy(level: Level, p: f32, v: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(v.len(), out.len());
+    match level {
+        #[cfg(target_arch = "x86_64")]
+        Level::Sse2 => unsafe { x86::pv_axpy_sse2(p, v, out) },
+        #[cfg(target_arch = "x86_64")]
+        Level::Avx2 => unsafe { x86::pv_axpy_avx2(p, v, out) },
+        #[cfg(target_arch = "aarch64")]
+        Level::Neon => unsafe { neon::pv_axpy(p, v, out) },
+        _ => scalar::pv_axpy(p, v, out),
+    }
+}
+
+/// Fused packed-PV accumulation over byte keys (four 2-bit codes
+/// each): for every code, decode through the premultiplied `norm`
+/// table (>= 4 entries) and fold its `d`-wide value row into `out`,
+/// codes in ascending lane order. Requires
+/// `vtile.len() == 4 * keys.len() * d` and `out.len() == d`.
+pub fn pv_accum4(level: Level, keys: &[u8], norm: &[f32],
+                 vtile: &[f32], d: usize, out: &mut [f32]) {
+    debug_assert_eq!(vtile.len(), 4 * keys.len() * d);
+    debug_assert_eq!(out.len(), d);
+    match level {
+        #[cfg(target_arch = "x86_64")]
+        Level::Sse2 => unsafe {
+            x86::pv_accum4_sse2(keys, norm, vtile, d, out)
+        },
+        #[cfg(target_arch = "x86_64")]
+        Level::Avx2 => unsafe {
+            x86::pv_accum4_avx2(keys, norm, vtile, d, out)
+        },
+        #[cfg(target_arch = "aarch64")]
+        Level::Neon => unsafe {
+            neon::pv_accum4(keys, norm, vtile, d, out)
+        },
+        _ => scalar::pv_accum4(keys, norm, vtile, d, out),
+    }
+}
+
+/// Fused packed-PV accumulation over u16 keys (two M-bit codes each);
+/// same contract as [`pv_accum4`] with
+/// `vtile.len() == 2 * keys.len() * d`.
+pub fn pv_accum2(level: Level, keys: &[u16], norm: &[f32],
+                 vtile: &[f32], d: usize, out: &mut [f32],
+                 bits: usize) {
+    debug_assert_eq!(vtile.len(), 2 * keys.len() * d);
+    debug_assert_eq!(out.len(), d);
+    match level {
+        #[cfg(target_arch = "x86_64")]
+        Level::Sse2 => unsafe {
+            x86::pv_accum2_sse2(keys, norm, vtile, d, out, bits)
+        },
+        #[cfg(target_arch = "x86_64")]
+        Level::Avx2 => unsafe {
+            x86::pv_accum2_avx2(keys, norm, vtile, d, out, bits)
+        },
+        #[cfg(target_arch = "aarch64")]
+        Level::Neon => unsafe {
+            neon::pv_accum2(keys, norm, vtile, d, out, bits)
+        },
+        _ => scalar::pv_accum2(keys, norm, vtile, d, out, bits),
+    }
+}
+
 /// The reference lanes: bit-for-bit the loops of the pre-SIMD batched
 /// kernel. Every other level is tested against these.
 mod scalar {
@@ -238,6 +315,33 @@ mod scalar {
             let k = k as usize;
             c[0] = norm[k & mask];
             c[1] = norm[(k >> bits) & mask];
+        }
+    }
+
+    pub(super) fn pv_axpy(p: f32, v: &[f32], out: &mut [f32]) {
+        for (o, &x) in out.iter_mut().zip(v) {
+            *o += p * x;
+        }
+    }
+
+    pub(super) fn pv_accum4(keys: &[u8], norm: &[f32], vtile: &[f32],
+                            d: usize, out: &mut [f32]) {
+        for (&k, vg) in keys.iter().zip(vtile.chunks_exact(4 * d)) {
+            let k = k as usize;
+            pv_axpy(norm[k & 3], &vg[..d], out);
+            pv_axpy(norm[(k >> 2) & 3], &vg[d..2 * d], out);
+            pv_axpy(norm[(k >> 4) & 3], &vg[2 * d..3 * d], out);
+            pv_axpy(norm[(k >> 6) & 3], &vg[3 * d..], out);
+        }
+    }
+
+    pub(super) fn pv_accum2(keys: &[u16], norm: &[f32], vtile: &[f32],
+                            d: usize, out: &mut [f32], bits: usize) {
+        let mask = (1usize << bits) - 1;
+        for (&k, vg) in keys.iter().zip(vtile.chunks_exact(2 * d)) {
+            let k = k as usize;
+            pv_axpy(norm[k & mask], &vg[..d], out);
+            pv_axpy(norm[(k >> bits) & mask], &vg[d..], out);
         }
     }
 }
@@ -446,6 +550,90 @@ mod x86 {
         super::scalar::decode4(krest, norm, lrest);
     }
 
+    /// `out[j] = out[j] + p * v[j]`, four lanes of `j` at a time via
+    /// `mulps` then `addps` — two separately-rounded IEEE ops, exactly
+    /// the scalar chain. `vfmadd` would fuse the rounding and change
+    /// the bits, so it is never emitted here (intrinsics lower to
+    /// their own instructions; LLVM does not contract them).
+    pub(super) unsafe fn pv_axpy_sse2(p: f32, v: &[f32],
+                                      out: &mut [f32]) {
+        let pv = _mm_set1_ps(p);
+        let n = v.len();
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let x = _mm_loadu_ps(v.as_ptr().add(i));
+            let o = _mm_loadu_ps(out.as_ptr().add(i));
+            let r = _mm_add_ps(o, _mm_mul_ps(pv, x));
+            _mm_storeu_ps(out.as_mut_ptr().add(i), r);
+            i += 4;
+        }
+        super::scalar::pv_axpy(p, &v[i..], &mut out[i..]);
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn pv_axpy_avx2(p: f32, v: &[f32],
+                                      out: &mut [f32]) {
+        let pv = _mm256_set1_ps(p);
+        let n = v.len();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let x = _mm256_loadu_ps(v.as_ptr().add(i));
+            let o = _mm256_loadu_ps(out.as_ptr().add(i));
+            let r = _mm256_add_ps(o, _mm256_mul_ps(pv, x));
+            _mm256_storeu_ps(out.as_mut_ptr().add(i), r);
+            i += 8;
+        }
+        pv_axpy_sse2(p, &v[i..], &mut out[i..]);
+    }
+
+    pub(super) unsafe fn pv_accum4_sse2(keys: &[u8], norm: &[f32],
+                                        vtile: &[f32], d: usize,
+                                        out: &mut [f32]) {
+        for (&k, vg) in keys.iter().zip(vtile.chunks_exact(4 * d)) {
+            let k = k as usize;
+            pv_axpy_sse2(norm[k & 3], &vg[..d], out);
+            pv_axpy_sse2(norm[(k >> 2) & 3], &vg[d..2 * d], out);
+            pv_axpy_sse2(norm[(k >> 4) & 3], &vg[2 * d..3 * d], out);
+            pv_axpy_sse2(norm[(k >> 6) & 3], &vg[3 * d..], out);
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn pv_accum4_avx2(keys: &[u8], norm: &[f32],
+                                        vtile: &[f32], d: usize,
+                                        out: &mut [f32]) {
+        for (&k, vg) in keys.iter().zip(vtile.chunks_exact(4 * d)) {
+            let k = k as usize;
+            pv_axpy_avx2(norm[k & 3], &vg[..d], out);
+            pv_axpy_avx2(norm[(k >> 2) & 3], &vg[d..2 * d], out);
+            pv_axpy_avx2(norm[(k >> 4) & 3], &vg[2 * d..3 * d], out);
+            pv_axpy_avx2(norm[(k >> 6) & 3], &vg[3 * d..], out);
+        }
+    }
+
+    pub(super) unsafe fn pv_accum2_sse2(keys: &[u16], norm: &[f32],
+                                        vtile: &[f32], d: usize,
+                                        out: &mut [f32], bits: usize) {
+        let mask = (1usize << bits) - 1;
+        for (&k, vg) in keys.iter().zip(vtile.chunks_exact(2 * d)) {
+            let k = k as usize;
+            pv_axpy_sse2(norm[k & mask], &vg[..d], out);
+            pv_axpy_sse2(norm[(k >> bits) & mask], &vg[d..], out);
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn pv_accum2_avx2(keys: &[u16], norm: &[f32],
+                                        vtile: &[f32], d: usize,
+                                        out: &mut [f32], bits: usize) {
+        let mask = (1usize << bits) - 1;
+        for (&k, vg) in keys.iter().zip(vtile.chunks_exact(2 * d)) {
+            let k = k as usize;
+            pv_axpy_avx2(norm[k & mask], &vg[..d], out);
+            pv_axpy_avx2(norm[(k >> bits) & mask], &vg[d..], out);
+        }
+    }
+
     /// M = 3 only: the 8-entry premultiplied table is exactly one
     /// 256-bit register.
     #[target_feature(enable = "avx2")]
@@ -554,6 +742,46 @@ mod neon {
         }
         super::scalar::quant_pack2(lrest, m, q, krest, bits);
     }
+
+    /// Separate `vmulq` + `vaddq` per step — `vmlaq_f32` lowers to
+    /// FMLA (fused, single rounding) and would break bit-exactness
+    /// against the scalar chain, so it is never used.
+    pub(super) unsafe fn pv_axpy(p: f32, v: &[f32], out: &mut [f32]) {
+        let pv = vdupq_n_f32(p);
+        let n = v.len();
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let x = vld1q_f32(v.as_ptr().add(i));
+            let o = vld1q_f32(out.as_ptr().add(i));
+            let r = vaddq_f32(o, vmulq_f32(pv, x));
+            vst1q_f32(out.as_mut_ptr().add(i), r);
+            i += 4;
+        }
+        super::scalar::pv_axpy(p, &v[i..], &mut out[i..]);
+    }
+
+    pub(super) unsafe fn pv_accum4(keys: &[u8], norm: &[f32],
+                                   vtile: &[f32], d: usize,
+                                   out: &mut [f32]) {
+        for (&k, vg) in keys.iter().zip(vtile.chunks_exact(4 * d)) {
+            let k = k as usize;
+            pv_axpy(norm[k & 3], &vg[..d], out);
+            pv_axpy(norm[(k >> 2) & 3], &vg[d..2 * d], out);
+            pv_axpy(norm[(k >> 4) & 3], &vg[2 * d..3 * d], out);
+            pv_axpy(norm[(k >> 6) & 3], &vg[3 * d..], out);
+        }
+    }
+
+    pub(super) unsafe fn pv_accum2(keys: &[u16], norm: &[f32],
+                                   vtile: &[f32], d: usize,
+                                   out: &mut [f32], bits: usize) {
+        let mask = (1usize << bits) - 1;
+        for (&k, vg) in keys.iter().zip(vtile.chunks_exact(2 * d)) {
+            let k = k as usize;
+            pv_axpy(norm[k & mask], &vg[..d], out);
+            pv_axpy(norm[(k >> bits) & mask], &vg[d..], out);
+        }
+    }
 }
 
 #[cfg(test)]
@@ -641,6 +869,82 @@ mod tests {
             let mut got = vec![0f32; 9 * 2];
             decode2(level, &keys2, &norm8, &mut got, 3);
             assert_eq!(got, want, "decode2 level {}", level.name());
+        }
+    }
+
+    #[test]
+    fn every_level_matches_scalar_pv_axpy() {
+        let mut r = SplitMix64::new(21);
+        // 1..=17 covers the scalar tail, one sse2 vector + tail, and
+        // one avx2 vector + sse2 vector + tail
+        for d in [1usize, 2, 3, 4, 5, 7, 8, 9, 12, 16, 17] {
+            let v: Vec<f32> =
+                (0..d).map(|_| (r.normal() as f32) * 2.0).collect();
+            let p = r.normal() as f32;
+            let base: Vec<f32> =
+                (0..d).map(|_| r.normal() as f32).collect();
+            let mut want = base.clone();
+            scalar::pv_axpy(p, &v, &mut want);
+            for level in available_levels() {
+                let mut got = base.clone();
+                pv_axpy(level, p, &v, &mut got);
+                let wb: Vec<u32> =
+                    want.iter().map(|x| x.to_bits()).collect();
+                let gb: Vec<u32> =
+                    got.iter().map(|x| x.to_bits()).collect();
+                assert_eq!(gb, wb, "level {} d {d}", level.name());
+            }
+        }
+    }
+
+    #[test]
+    fn every_level_matches_scalar_pv_accum() {
+        let mut r = SplitMix64::new(33);
+        let norm4: Vec<f32> =
+            (0..4).map(|_| r.uniform() as f32).collect();
+        let norm16: Vec<f32> =
+            (0..16).map(|_| r.uniform() as f32).collect();
+        for d in [1usize, 3, 4, 5, 8, 11, 16] {
+            let keys4: Vec<u8> =
+                (0..5).map(|_| r.below(256) as u8).collect();
+            let keys2: Vec<u16> =
+                (0..5).map(|_| r.below(256) as u16).collect();
+            let vtile4: Vec<f32> = (0..keys4.len() * 4 * d)
+                .map(|_| r.normal() as f32)
+                .collect();
+            let vtile2: Vec<f32> = (0..keys2.len() * 2 * d)
+                .map(|_| r.normal() as f32)
+                .collect();
+            let base: Vec<f32> =
+                (0..d).map(|_| r.normal() as f32).collect();
+
+            let mut want = base.clone();
+            scalar::pv_accum4(&keys4, &norm4, &vtile4, d, &mut want);
+            for level in available_levels() {
+                let mut got = base.clone();
+                pv_accum4(level, &keys4, &norm4, &vtile4, d, &mut got);
+                let wb: Vec<u32> =
+                    want.iter().map(|x| x.to_bits()).collect();
+                let gb: Vec<u32> =
+                    got.iter().map(|x| x.to_bits()).collect();
+                assert_eq!(gb, wb,
+                           "pv_accum4 level {} d {d}", level.name());
+            }
+
+            let mut want = base.clone();
+            scalar::pv_accum2(&keys2, &norm16, &vtile2, d, &mut want,
+                              4);
+            for level in available_levels() {
+                let mut got = base.clone();
+                pv_accum2(level, &keys2, &norm16, &vtile2, d,
+                          &mut got, 4);
+                let wb: Vec<u32> =
+                    want.iter().map(|x| x.to_bits()).collect();
+                let gb: Vec<u32> =
+                    got.iter().map(|x| x.to_bits()).collect();
+                assert_eq!(gb, wb,
+                           "pv_accum2 level {} d {d}", level.name());
+            }
         }
     }
 

@@ -103,6 +103,7 @@ const HOT_PATHS: &[&str] = &[
     "rust/src/model/sampling.rs",
     "rust/src/exaq/softmax.rs",
     "rust/src/exaq/batched.rs",
+    "rust/src/exaq/plane.rs",
     "rust/src/exaq/simd.rs",
     "rust/src/exaq/lut.rs",
     "rust/src/util/pool.rs",
@@ -113,6 +114,7 @@ const HOT_PATHS: &[&str] = &[
 /// blessed reduction the rule funnels everyone else into.
 const FLOAT_SCOPE: &[&str] = &[
     "rust/src/exaq/batched.rs",
+    "rust/src/exaq/plane.rs",
     "rust/src/exaq/simd.rs",
     "rust/src/exaq/softmax.rs",
 ];

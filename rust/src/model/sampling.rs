@@ -11,6 +11,7 @@
 //!   the RNG stream matches the per-row path draw for draw.
 
 use crate::exaq::batched::{ensure_engine, BatchSoftmax};
+use crate::exaq::plane::AttentionPlane;
 use crate::exaq::softmax::softmax_exact;
 use crate::util::rng::SplitMix64;
 
@@ -175,6 +176,10 @@ pub struct BatchSampler {
     map: Vec<usize>,
     idx: Vec<usize>,
     engines: Vec<BatchSoftmax>,
+    /// Per-(bits, clip) fused attention planes, same keep-per-config
+    /// policy as `engines` so alternating configurations never rebuild
+    /// LUTs or reallocate the packed plane.
+    planes: Vec<AttentionPlane>,
     // partition scratch, reused so a decode tick allocates nothing
     // at steady state
     groups: Vec<(RowClass, usize)>,
@@ -194,6 +199,35 @@ impl BatchSampler {
     pub fn set_threads(&mut self, threads: usize) -> &mut Self {
         self.threads = threads;
         self
+    }
+
+    /// Run a `[rows × len]` attention-score plane through the fused
+    /// packed pipeline ([`AttentionPlane::attend`]) at (`bits`,
+    /// `clip`): quantize once, stay in `PackedCodes` through exp and
+    /// accumulation, and fold the premultiplied decode into the
+    /// weighted-value pass over `values` (`[len × d_head]`). `out`
+    /// (`[rows × d_head]`) receives the attended vectors,
+    /// bit-identical to softmax + dense PV. Planes are cached per
+    /// configuration exactly like the sampling engines.
+    #[allow(clippy::too_many_arguments)]
+    pub fn attend_rows(&mut self, scores: &[f32], rows: usize,
+                       len: usize, valid_lens: &[usize],
+                       values: &[f32], d_head: usize, bits: u32,
+                       clip: f32, out: &mut [f32]) {
+        let pi = match self
+            .planes
+            .iter()
+            .position(|p| p.matches(bits, clip))
+        {
+            Some(i) => i,
+            None => {
+                self.planes.push(AttentionPlane::new(bits, clip));
+                self.planes.len() - 1
+            }
+        };
+        self.planes[pi].set_threads(self.threads);
+        self.planes[pi]
+            .attend(scores, rows, len, valid_lens, values, d_head, out);
     }
 
     /// Sample one token per entry of `rows` from a `[* × vocab]` logits
@@ -450,6 +484,44 @@ mod tests {
         sampler.sample_rows(&logits, vocab, &sel, &mut rng_c,
                             &mut again);
         assert_eq!(batched, again);
+    }
+
+    #[test]
+    fn sampler_attend_rows_matches_two_step_reference() {
+        // the sampler's packed-plane entry must be bit-identical to
+        // the quantize -> softmax_rows -> dense-PV reference, and the
+        // per-config plane cache must be reused across calls
+        let (rows, len, d) = (4usize, 37usize, 6usize);
+        let mut gen = SplitMix64::new(77);
+        let scores: Vec<f32> =
+            (0..rows * len).map(|_| gen.normal() as f32).collect();
+        let values: Vec<f32> =
+            (0..len * d).map(|_| gen.normal() as f32).collect();
+        let vlens = [len, 0, 11, len];
+
+        let mut sampler = BatchSampler::default();
+        sampler.set_threads(2);
+        let mut fused = vec![0.0f32; rows * d];
+        for bits in [2u32, 3, 4] {
+            sampler.attend_rows(&scores, rows, len, &vlens, &values,
+                                d, bits, -4.0, &mut fused);
+            let mut reference = AttentionPlane::new(bits, -4.0);
+            reference.set_threads(2);
+            let mut two_step = vec![0.0f32; rows * d];
+            reference.attend_two_step(&scores, rows, len, &vlens,
+                                      &values, d, &mut two_step);
+            let a: Vec<u32> =
+                fused.iter().map(|x| x.to_bits()).collect();
+            let b: Vec<u32> =
+                two_step.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(a, b, "bits={bits}");
+        }
+        // three configs -> three cached planes, and repeating a
+        // config must not grow the cache
+        assert_eq!(sampler.planes.len(), 3);
+        sampler.attend_rows(&scores, rows, len, &vlens, &values, d, 2,
+                            -4.0, &mut fused);
+        assert_eq!(sampler.planes.len(), 3);
     }
 
     #[test]

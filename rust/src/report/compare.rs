@@ -24,7 +24,7 @@ pub const DEFAULT_THRESHOLD: f64 = 0.10;
 /// this order; absent fields are skipped so schemas can differ).
 pub const KEY_FIELDS: &[&str] = &[
     "kind", "scenario", "rows", "len", "bits", "group", "kernel",
-    "mode",
+    "mode", "d_head",
 ];
 
 /// Lower-is-better timing metrics eligible for the gate. Derived
@@ -32,7 +32,7 @@ pub const KEY_FIELDS: &[&str] = &[
 /// whenever either side of the division does.
 pub const METRICS: &[&str] = &[
     "algo1_us", "scalar_us", "batched_us", "baseline_us", "host_s",
-    "scalar_host_s", "batched_host_s",
+    "scalar_host_s", "batched_host_s", "fused_us", "two_step_us",
 ];
 
 /// One metric of one matched cell, baseline vs current.

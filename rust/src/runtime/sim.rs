@@ -12,11 +12,21 @@
 //! [`crate::cost`] cycle model, so TTFT / latency / occupancy metrics
 //! are exact and reproducible under a
 //! [`crate::util::clock::VirtualClock`].
+//!
+//! Attention is simulated too: each step builds a seeded
+//! `[rows × seq]` score plane (one row per (slot, head) — and per
+//! query position during prefill) and shapes it through the fused
+//! packed pipeline ([`AttentionPlane::attend`]); the attended vectors
+//! become the layer-0 value-cache payload. Set
+//! [`SimConfig::fused_attention`] = false for the two-step
+//! quantize -> softmax -> dense-PV reference — the vectors are
+//! bit-identical, only the host time differs.
 
 use std::rc::Rc;
 
 use crate::cost::{GemmPrecision, MachineModel, TransformerShape};
 use crate::exaq::batched::BatchSoftmax;
+use crate::exaq::plane::AttentionPlane;
 use crate::util::clock::Clock;
 use crate::util::error::{bail, Result};
 use crate::util::rng::SplitMix64;
@@ -53,6 +63,12 @@ pub struct SimConfig {
     /// (default) or the per-row scalar path. Bit-identical results;
     /// the flag exists so benches can report the host-time delta.
     pub batched_softmax: bool,
+    /// Shape attention scores through the fused packed pipeline
+    /// ([`AttentionPlane::attend`], default) or the two-step
+    /// quantize -> softmax -> dense-PV reference. Bit-identical
+    /// vectors; the flag exists so benches can report the host-time
+    /// delta of keeping the plane packed.
+    pub fused_attention: bool,
     /// Worker count for the batched plane kernel (0 = auto: the row
     /// pool's own heuristic). Logits are bit-identical for any value —
     /// the pool is deterministic — so this only moves host time.
@@ -79,6 +95,7 @@ impl Default for SimConfig {
             shape_bits: 2,
             shape_clip: -4.0,
             batched_softmax: true,
+            fused_attention: true,
             threads: 0,
             clock_hz: 1.0e6,
             gemm_precision: GemmPrecision::Bf16,
@@ -129,8 +146,19 @@ pub struct SimBackend {
     /// The batched Algorithm-2 engine shaping every logit plane
     /// (tables + bit-packed code plane, reused across steps).
     engine: BatchSoftmax,
+    /// The fused packed attention plane shaping every step's score
+    /// plane at the same (bits, clip) as the logit engine.
+    plane: AttentionPlane,
+    /// Seeded `[max_seq × head_dim]` value plane shared by every head
+    /// (built once, never mutated — the PV pass only reads it).
+    values: Vec<f32>,
     /// Per-row EOS-bias rolls of the step being generated.
     rolls: Vec<f64>,
+    // attention scratch, reused so steady-state steps allocate
+    // nothing once the high-water shapes are reached
+    att_scores: Vec<f32>,
+    att_vlens: Vec<usize>,
+    att_out: Vec<f32>,
     /// Executed-step counters (inspected by benches/tests).
     pub prefills: u64,
     pub decode_steps: u64,
@@ -144,12 +172,24 @@ impl SimBackend {
         let mut engine =
             BatchSoftmax::new(cfg.shape_bits, cfg.shape_clip);
         engine.set_threads(cfg.threads);
+        let mut plane =
+            AttentionPlane::new(cfg.shape_bits, cfg.shape_clip);
+        plane.set_threads(cfg.threads);
+        let mut vrng = SplitMix64::new(cfg.seed ^ 0xA77E);
+        let values: Vec<f32> = (0..cfg.max_seq * cfg.head_dim)
+            .map(|_| vrng.normal() as f32)
+            .collect();
         Self {
             cfg,
             machine: MachineModel::default(),
             clock,
             engine,
+            plane,
+            values,
             rolls: Vec::new(),
+            att_scores: Vec::new(),
+            att_vlens: Vec::new(),
+            att_out: Vec::new(),
             prefills: 0,
             decode_steps: 0,
         }
@@ -200,6 +240,31 @@ impl SimBackend {
         }
         for x in plane.iter_mut() {
             *x = (*x).max(1e-30).ln();
+        }
+    }
+
+    /// Seed of one (token, position, head) attention-score row —
+    /// decorrelated from the logit stream by the head mix.
+    fn att_seed(&self, token: i32, pos: usize, head: usize) -> u64 {
+        self.seed_for(token, pos)
+            ^ (head as u64 + 1).wrapping_mul(0xA24B_AED4_963E_E407)
+    }
+
+    /// Run the prepared `[rows × max_seq]` score plane
+    /// (`self.att_scores` / `self.att_vlens`) through the packed
+    /// attention pipeline into `self.att_out` (`[rows × head_dim]`).
+    /// Fused and two-step are bit-identical by the plane contract.
+    fn run_attention(&mut self, rows: usize) {
+        let (seq, hd) = (self.cfg.max_seq, self.cfg.head_dim);
+        self.att_out.resize(rows * hd, 0.0);
+        if self.cfg.fused_attention {
+            self.plane.attend(&self.att_scores, rows, seq,
+                              &self.att_vlens, &self.values, hd,
+                              &mut self.att_out);
+        } else {
+            self.plane.attend_two_step(&self.att_scores, rows, seq,
+                                       &self.att_vlens, &self.values,
+                                       hd, &mut self.att_out);
         }
     }
 
@@ -309,8 +374,34 @@ impl InferenceBackend for SimBackend {
         let mut kv_rng = SplitMix64::new(sig);
         let kc: Vec<f32> =
             (0..kv_len).map(|_| kv_rng.uniform() as f32).collect();
-        let vc: Vec<f32> =
+        let mut vc: Vec<f32> =
             (0..kv_len).map(|_| kv_rng.uniform() as f32).collect();
+
+        // attention: one causal score row per (sequence, head, query
+        // position), shaped through the packed plane in one call; the
+        // attended vectors become the layer-0 value-cache payload
+        // (row order matches the [b, heads, seq, hd] cache layout, so
+        // the copy below is a straight prefix write)
+        let heads = self.cfg.n_heads;
+        let hd = self.cfg.head_dim;
+        let rows = b * heads * s;
+        self.att_scores.resize(rows * s, 0.0);
+        self.att_vlens.clear();
+        for bi in 0..b {
+            for h in 0..heads {
+                for q in 0..s {
+                    let seed =
+                        self.att_seed(toks[bi * s + q], q, h);
+                    let r = (bi * heads + h) * s + q;
+                    let row =
+                        &mut self.att_scores[r * s..(r + 1) * s];
+                    fill_noise(seed, row);
+                    self.att_vlens.push(q + 1);
+                }
+            }
+        }
+        self.run_attention(rows);
+        vc[..rows * hd].copy_from_slice(&self.att_out[..rows * hd]);
 
         self.prefills += 1;
         self.clock.advance(self.prefill_seconds(b));
@@ -364,6 +455,37 @@ impl InferenceBackend for SimBackend {
             for (i, &p) in pos.iter().enumerate() {
                 let p = (p as usize).min(seq - 1);
                 kc[(i * heads * seq + p) * hd] = token[i] as f32;
+            }
+        }
+
+        // attention: one score row per (slot, head) over the keys
+        // seen so far, shaped through the packed plane; the attended
+        // vector lands at the slot's position in the layer-0 value
+        // cache (mirroring the kc stamp above)
+        let rows = b * heads;
+        self.att_scores.resize(rows * seq, 0.0);
+        self.att_vlens.clear();
+        for (i, (&tok, &p)) in token.iter().zip(pos).enumerate() {
+            let p = (p as usize).min(seq - 1);
+            for h in 0..heads {
+                let seed = self.att_seed(tok, p, h);
+                let r = i * heads + h;
+                let row =
+                    &mut self.att_scores[r * seq..(r + 1) * seq];
+                fill_noise(seed, row);
+                self.att_vlens.push(p + 1);
+            }
+        }
+        self.run_attention(rows);
+        if let Ok(vc) = state.vc.as_f32_mut() {
+            for (i, &p) in pos.iter().enumerate() {
+                let p = (p as usize).min(seq - 1);
+                for h in 0..heads {
+                    let r = i * heads + h;
+                    let dst = (r * seq + p) * hd;
+                    vc[dst..dst + hd].copy_from_slice(
+                        &self.att_out[r * hd..(r + 1) * hd]);
+                }
             }
         }
 
@@ -495,6 +617,62 @@ mod tests {
             b.prefill("sim", QuantMode::None, &tokens, None).unwrap();
         assert_eq!(la.as_f32().unwrap(), lb.as_f32().unwrap(),
                    "worker count changed prefill logits");
+    }
+
+    #[test]
+    fn fused_and_two_step_attention_write_identical_caches() {
+        // the fused packed pipeline and the two-step reference must
+        // write the exact same attended vectors into the value cache,
+        // for whole prefill planes and for decode steps
+        let clock = Rc::new(VirtualClock::new());
+        let mut a =
+            SimBackend::new(SimConfig::default(), clock.clone());
+        let two_cfg = SimConfig { fused_attention: false,
+                                  ..SimConfig::default() };
+        let mut b = SimBackend::new(two_cfg, clock);
+        let tokens = prompt_tensor(&a.cfg.clone());
+        let (_, mut sa) =
+            a.prefill("sim", QuantMode::None, &tokens, None).unwrap();
+        let (_, mut sb) =
+            b.prefill("sim", QuantMode::None, &tokens, None).unwrap();
+        let va = sa.vc.as_f32().unwrap();
+        let vb = sb.vc.as_f32().unwrap();
+        assert_eq!(va, vb, "fused prefill attention diverged");
+        // the attended payload is real data: every lane finite
+        assert!(va.iter().all(|x| x.is_finite()));
+        a.decode("sim", QuantMode::None, &[5], &[3], &mut sa, None)
+            .unwrap();
+        b.decode("sim", QuantMode::None, &[5], &[3], &mut sb, None)
+            .unwrap();
+        assert_eq!(sa.vc.as_f32().unwrap(), sb.vc.as_f32().unwrap(),
+                   "fused decode attention diverged");
+    }
+
+    #[test]
+    fn decode_attention_lands_at_the_slot_position() {
+        // the attended vector for (slot, head, pos) must overwrite
+        // exactly the layer-0 cache lanes at that position
+        let (mut b, _clock) = backend();
+        let mut state = DecodeState {
+            kc: HostTensor::zeros_f32(&b.kv_shape(2)),
+            vc: HostTensor::zeros_f32(&b.kv_shape(2)),
+        };
+        b.decode("sim", QuantMode::None, &[5, 9], &[3, 7],
+                 &mut state, None)
+            .unwrap();
+        let vc = state.vc.as_f32().unwrap();
+        let (heads, seq, hd) = (2usize, 64usize, 4usize);
+        for (i, &p) in [3usize, 7].iter().enumerate() {
+            for h in 0..heads {
+                let at = ((i * heads + h) * seq + p) * hd;
+                let row = &vc[at..at + hd];
+                assert!(row.iter().any(|&x| x != 0.0),
+                        "slot {i} head {h} untouched");
+                // the neighbouring position stays zero
+                let next = ((i * heads + h) * seq + p + 1) * hd;
+                assert!(vc[next..next + hd].iter().all(|&x| x == 0.0));
+            }
+        }
     }
 
     #[test]

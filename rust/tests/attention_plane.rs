@@ -1,0 +1,264 @@
+//! Integration suite for the cache-blocked packed attention plane:
+//! a property-style randomized sweep (hand-rolled; the image has no
+//! proptest) asserting *bit-exact* agreement between the fused
+//! pipeline (`AttentionPlane::attend` — scores stay packed from QK^T
+//! through the weighted-value pass) and the two-step reference
+//! (quantize -> `softmax_rows` -> dense PV over the f32 plane) across
+//! rows / lens / head dims / bit-widths / clips / masks, plus hostile
+//! inputs (NaN / ±inf rows, all-clipped rows, zero-length tails),
+//! SIMD-level and worker-count invariance with lens straddling the
+//! `TILE_LANES` seam, the sampler's packed-plane entry point, the
+//! thread-local plane cache, and the packed-footprint accounting.
+
+use exaq_repro::exaq::plane::{dense_plane_bytes, packed_plane_bytes,
+                              with_cached_plane, AttentionPlane,
+                              TILE_LANES, TILE_ROWS};
+use exaq_repro::exaq::simd;
+use exaq_repro::exaq::softmax::softmax_algo2_once;
+use exaq_repro::model::sampling::BatchSampler;
+use exaq_repro::util::rng::SplitMix64;
+
+fn random(n: usize, seed: u64, scale: f32) -> Vec<f32> {
+    let mut r = SplitMix64::new(seed);
+    (0..n).map(|_| (r.normal() as f32) * scale).collect()
+}
+
+fn assert_bits_equal(a: &[f32], b: &[f32], tag: &str) {
+    assert_eq!(a.len(), b.len(), "{tag}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(),
+                   "{tag}: lane {i}: {x} vs {y}");
+    }
+}
+
+/// Plain-loop reference: scalar Algorithm-2 softmax per row, then the
+/// canonical `out[j] += p * v[j]` triple loop — no SIMD, no tiling,
+/// no packing.
+fn reference(scores: &[f32], rows: usize, len: usize,
+             valid_lens: &[usize], values: &[f32], d: usize,
+             bits: u32, clip: f32) -> Vec<f32> {
+    let mut probs = scores.to_vec();
+    let mut out = vec![0.0f32; rows * d];
+    for r in 0..rows {
+        let n = if valid_lens.is_empty() {
+            len
+        } else {
+            valid_lens[r].min(len)
+        };
+        if n == 0 {
+            continue;
+        }
+        let row = &mut probs[r * len..(r + 1) * len];
+        softmax_algo2_once(row, n, bits, clip);
+        for k in 0..n {
+            let p = row[k];
+            for j in 0..d {
+                out[r * d + j] += p * values[k * d + j];
+            }
+        }
+    }
+    out
+}
+
+#[test]
+fn randomized_sweep_fused_matches_two_step_and_reference() {
+    // 120 random configurations: rows 0..10, len 1..300 (often not a
+    // multiple of the packing group), d_head 1..40, hostile
+    // valid_lens (0, > len), bits 1-5, random clips and scales —
+    // every output lane must match bit-for-bit
+    let mut meta = SplitMix64::new(0xA77E);
+    let mut planes: Vec<AttentionPlane> = Vec::new();
+    for trial in 0..120 {
+        let rows = meta.below(10);
+        let len = 1 + meta.below(300);
+        let d = 1 + meta.below(40);
+        let bits = 1 + meta.below(5) as u32;
+        let clip = -1.0 - (meta.uniform() as f32) * 6.0;
+        let scale = 0.5 + (meta.uniform() as f32) * 3.0;
+        let valid_lens: Vec<usize> = match meta.below(3) {
+            0 => Vec::new(), // empty = full rows
+            1 => (0..rows).map(|_| meta.below(len + 1)).collect(),
+            _ => (0..rows)
+                .map(|_| meta.below(2 * len + 8)) // often > len
+                .collect(),
+        };
+        let scores = random(rows * len, 0x5EED + trial, scale);
+        let values = random(len * d, 0xFEED + trial, 1.0);
+
+        // reuse planes across trials the way serving does, to also
+        // exercise packed-plane scratch reuse at changing shapes
+        let plane = match planes
+            .iter_mut()
+            .position(|p| p.matches(bits, clip))
+        {
+            Some(i) => &mut planes[i],
+            None => {
+                planes.push(AttentionPlane::new(bits, clip));
+                planes.last_mut().expect("just pushed")
+            }
+        };
+        let tag = format!(
+            "trial {trial}: rows={rows} len={len} d={d} bits={bits}");
+        let mut fused = vec![0.0f32; rows * d];
+        plane.attend(&scores, rows, len, &valid_lens, &values, d,
+                     &mut fused);
+        let mut two = vec![0.0f32; rows * d];
+        plane.attend_two_step(&scores, rows, len, &valid_lens,
+                              &values, d, &mut two);
+        assert_bits_equal(&fused, &two, &format!("{tag} (two-step)"));
+        let want = reference(&scores, rows, len, &valid_lens, &values,
+                             d, bits, clip);
+        assert_bits_equal(&fused, &want, &format!("{tag} (reference)"));
+    }
+}
+
+#[test]
+fn simd_levels_and_workers_are_invariant_across_tile_seams() {
+    // lens straddling the TILE_LANES seam and the packing-group tail,
+    // at every available lane level and worker counts {1, 2, 7, auto}:
+    // all outputs must be bit-identical to scalar/one-worker
+    let lens = [TILE_LANES - 1, TILE_LANES, TILE_LANES + 1,
+                TILE_LANES + 2, 2 * TILE_LANES + 3, 5, 1];
+    let rows = TILE_ROWS + 3; // one full row block plus a partial one
+    let d = 9; // off the 4/8-lane SIMD widths, exercises axpy tails
+    for bits in [2u32, 3, 4] {
+        for (li, &len) in lens.iter().enumerate() {
+            let scores = random(rows * len, 31 + li as u64, 2.0);
+            let values = random(len * d, 67 + li as u64, 1.0);
+            let vlens: Vec<usize> =
+                (0..rows).map(|r| (r * len).div_ceil(rows)).collect();
+            let mut want = vec![0.0f32; rows * d];
+            let mut plane = AttentionPlane::new(bits, -4.0);
+            plane.set_simd_level(simd::Level::Scalar).set_threads(1);
+            plane.attend(&scores, rows, len, &vlens, &values, d,
+                         &mut want);
+            for level in simd::available_levels() {
+                for workers in [1usize, 2, 7, 0] {
+                    let mut got = vec![0.0f32; rows * d];
+                    plane.set_simd_level(level).set_threads(workers);
+                    plane.attend(&scores, rows, len, &vlens, &values,
+                                 d, &mut got);
+                    assert_bits_equal(
+                        &got, &want,
+                        &format!("bits={bits} len={len} \
+                                  level={} workers={workers}",
+                                 level.name()));
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn hostile_planes_stay_bit_stable() {
+    // NaN rows, +inf rows, all--inf (fully clipped) rows, and a row
+    // masked to zero length: fused and two-step must still agree
+    // bit-for-bit, and unmasked-lane outputs must stay finite
+    let (rows, len, d) = (5usize, 67usize, 7usize);
+    let mut scores = random(rows * len, 13, 2.0);
+    scores[3] = f32::NAN;
+    for x in &mut scores[len..2 * len] {
+        *x = f32::INFINITY;
+    }
+    for x in &mut scores[2 * len..3 * len] {
+        *x = f32::NEG_INFINITY;
+    }
+    let values = random(len * d, 14, 1.0);
+    let vlens = [len, len, len, 0, 19];
+    for bits in [1u32, 2, 3, 4] {
+        let mut plane = AttentionPlane::new(bits, -5.0);
+        let mut fused = vec![0.0f32; rows * d];
+        plane.attend(&scores, rows, len, &vlens, &values, d,
+                     &mut fused);
+        let mut two = vec![0.0f32; rows * d];
+        plane.attend_two_step(&scores, rows, len, &vlens, &values, d,
+                              &mut two);
+        assert_bits_equal(&fused, &two, &format!("M={bits}"));
+        // the masked row is exactly zero
+        assert!(fused[3 * d..4 * d].iter().all(|&x| x == 0.0),
+                "masked row leaked at M={bits}");
+        // rows 2 (all clipped) and 4 (short mask) stay finite
+        for &i in &[2usize, 4] {
+            for (j, x) in fused[i * d..(i + 1) * d].iter().enumerate()
+            {
+                assert!(x.is_finite(),
+                        "M={bits} row {i} lane {j} = {x}");
+            }
+        }
+    }
+}
+
+#[test]
+fn zero_length_tails_and_empty_planes_are_no_ops() {
+    let mut plane = AttentionPlane::new(2, -4.0);
+    let mut out: Vec<f32> = Vec::new();
+    plane.attend(&[], 0, 0, &[], &[], 0, &mut out);
+    plane.attend_two_step(&[], 0, 0, &[], &[], 0, &mut out);
+    // len == 0 with live rows: out comes back zeroed, not stale
+    let mut out = vec![9.0f32; 4 * 3];
+    plane.attend(&[], 4, 0, &[], &[], 3, &mut out);
+    assert!(out.iter().all(|&x| x == 0.0));
+    // d_head == 0 is a no-op on an empty out
+    let scores = random(4 * 8, 1, 1.0);
+    let mut empty: Vec<f32> = Vec::new();
+    plane.attend(&scores, 4, 8, &[], &[], 0, &mut empty);
+}
+
+#[test]
+fn sampler_entry_and_cached_plane_agree_with_direct_use() {
+    let (rows, len, d) = (6usize, 129usize, 8usize);
+    let scores = random(rows * len, 91, 2.0);
+    let values = random(len * d, 92, 1.0);
+    let vlens: Vec<usize> = (0..rows).map(|r| r * 25 + 1).collect();
+    for bits in [2u32, 3, 4] {
+        let mut want = vec![0.0f32; rows * d];
+        AttentionPlane::new(bits, -4.5).attend(
+            &scores, rows, len, &vlens, &values, d, &mut want);
+
+        let mut sampler_out = vec![0.0f32; rows * d];
+        let mut sampler = BatchSampler::default();
+        sampler.attend_rows(&scores, rows, len, &vlens, &values, d,
+                            bits, -4.5, &mut sampler_out);
+        assert_bits_equal(&sampler_out, &want,
+                          &format!("sampler M={bits}"));
+
+        let mut cached_out = vec![0.0f32; rows * d];
+        with_cached_plane(bits, -4.5, |p| {
+            p.attend(&scores, rows, len, &vlens, &values, d,
+                     &mut cached_out);
+        });
+        assert_bits_equal(&cached_out, &want,
+                          &format!("cached M={bits}"));
+    }
+}
+
+#[test]
+fn packed_footprint_is_honest_for_both_key_widths() {
+    // M = 2 packs 4 codes/byte; M = 3/4 pack 2 codes per u16; the
+    // live plane must report exactly what the layout helper predicts,
+    // and always less than the dense f32 plane it replaces
+    for (rows, len) in [(1usize, 1usize), (4, 64), (7, 129),
+                        (16, 2048)] {
+        for bits in [1u32, 2, 3, 4, 5] {
+            let scores = random(rows * len, 3, 1.0);
+            let values = random(len * 4, 4, 1.0);
+            let mut plane = AttentionPlane::new(bits, -4.0);
+            let mut out = vec![0.0f32; rows * 4];
+            plane.attend(&scores, rows, len, &[], &values, 4,
+                         &mut out);
+            let predicted = packed_plane_bytes(rows, len, bits);
+            assert_eq!(plane.plane_bytes(), predicted,
+                       "rows={rows} len={len} bits={bits}");
+            if len >= 8 {
+                assert!(predicted < dense_plane_bytes(rows, len),
+                        "rows={rows} len={len} bits={bits}: packed \
+                         {predicted} not below dense");
+            }
+        }
+    }
+    // exact layout pins
+    assert_eq!(packed_plane_bytes(4, 64, 2), 4 * 16); // 4 codes/byte
+    assert_eq!(packed_plane_bytes(4, 64, 3), 4 * 32 * 2); // 2/u16
+    assert_eq!(packed_plane_bytes(4, 64, 4), 4 * 32 * 2);
+    assert_eq!(packed_plane_bytes(1, 5, 2), 2); // tail group rounds up
+}

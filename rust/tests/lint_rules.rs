@@ -123,6 +123,30 @@ fn thread_discipline_flags_raw_threads_and_arch_gates() {
 }
 
 #[test]
+fn attention_plane_is_inside_the_kernel_scopes() {
+    // the fused attention plane is hot-path kernel code: raw thread
+    // primitives, arch gates, panics, and ad-hoc float reductions are
+    // all flagged there exactly like in the batched kernel
+    let v = single("rust/src/exaq/plane.rs",
+                   "fn f() { std::thread::scope(|_| {}); }\n");
+    assert_eq!(v.rule, "thread-discipline");
+    assert_eq!((v.line, v.col), (1, 15));
+    let v = single("rust/src/exaq/plane.rs",
+                   "#[cfg(target_arch = \"x86_64\")]\nfn f() {}\n");
+    assert_eq!(v.rule, "thread-discipline");
+    assert_eq!((v.line, v.col), (1, 7));
+    let v = single("rust/src/exaq/plane.rs",
+                   "fn d(xs: &[f32]) -> f32 {\n\
+                    \x20   xs.iter().sum()\n}\n");
+    assert_eq!(v.rule, "float-reduction-discipline");
+    assert_eq!((v.line, v.col), (2, 15));
+    let v = single("rust/src/exaq/plane.rs",
+                   "fn f(x: Option<u32>) -> u32 { x.unwrap() }\n");
+    assert_eq!(v.rule, "no-panic-hot-path");
+    assert_eq!(v.line, 1);
+}
+
+#[test]
 fn thread_discipline_spares_the_sanctioned_homes() {
     // util::pool is the one place allowed to spawn scoped threads
     clean("rust/src/util/pool.rs",
