@@ -3,7 +3,9 @@
 //! mixes, reporting simulated latency percentiles plus host-side
 //! scheduler throughput (ticks of pure coordinator work per second),
 //! and compares the decode softmax kernel modes (per-row scalar vs
-//! batched bit-packed plane) at M ∈ {2, 3, 4}.
+//! batched bit-packed plane) at M ∈ {2, 3, 4}. A third section runs
+//! the mixed-tenant workload through the router + N-replica fabric at
+//! 1/2/4 replicas and emits per-replica occupancy/TTFT columns.
 //!
 //!     cargo bench --bench serving_stress
 //!
@@ -15,7 +17,8 @@
 
 use std::rc::Rc;
 
-use exaq_repro::coordinator::{serve_trace, workload, Scenario,
+use exaq_repro::coordinator::{serve_trace, workload, Fabric,
+                              FabricConfig, RouterConfig, Scenario,
                               ServeConfig, WorkloadSpec};
 use exaq_repro::report::{f as fnum, jnum, jstr, BenchJson, Table};
 use exaq_repro::runtime::{QuantMode, SimBackend, SimConfig};
@@ -52,7 +55,7 @@ fn run_scenario(
     let host = host0.seconds();
     assert_eq!(resps.len(), n, "lost requests");
     let toks: usize = resps.iter().map(|r| r.tokens.len()).sum();
-    let m = &sched.metrics;
+    let m = sched.metrics();
     Ok((toks, sim_secs, host, m.ttft.quantile(0.5),
         m.ttft.quantile(0.99), m.total_latency.quantile(0.99),
         m.mean_occupancy()))
@@ -149,8 +152,86 @@ fn main() -> Result<()> {
     }
     println!("{}", k.to_markdown());
 
+    // ---- multi-replica fabric: router + N replicas, 4 tenants ------
+    // mixed-tier workload through the fabric at 1/2/4 replicas; the
+    // per-replica rows land in BENCH_serving.json so the baseline
+    // compare pins fleet coverage (a vanished replica column fails
+    // the gate)
+    let n_fab = (n / 2).max(8);
+    let mut fb = Table::new(
+        &format!("Serving fabric — {n_fab} mixed requests, 4 \
+                  tenants, decode batch 8"),
+        &["replicas", "sim s", "sim tok/s", "p99 ttft", "occupancy",
+          "preempts", "host s"]);
+    for replicas in [1usize, 2, 4] {
+        let sim_cfg = SimConfig::default();
+        let spec = WorkloadSpec::new(
+            Scenario::MixedLengths { rate: 400.0 }, n_fab, 7,
+            sim_cfg.vocab, sim_cfg.max_seq)
+            .with_tenants(4);
+        let trace = workload::generate(&spec);
+        let fab_cfg = FabricConfig {
+            serve: ServeConfig {
+                model: "sim".into(),
+                quant: QuantMode::None,
+                c_vec: None,
+                decode_batch: 8,
+            },
+            router: RouterConfig::default(),
+            collect_stream: false,
+        };
+        let mk_cfg = sim_cfg.clone();
+        let mut fab =
+            Fabric::new(replicas, fab_cfg, |_, clock| {
+                Ok(SimBackend::new(mk_cfg.clone(), clock))
+            })?;
+        let host0 = Stopwatch::start();
+        let (resps, sim_secs) = fab.run_trace(trace)?;
+        let host = host0.seconds();
+        assert_eq!(resps.len(), n_fab, "fabric lost requests");
+        let toks: usize =
+            resps.iter().map(|r| r.tokens.len()).sum();
+        let fleet = fab.fleet_metrics();
+        fb.row(&[
+            replicas.to_string(),
+            fnum(sim_secs, 3),
+            fnum(toks as f64 / sim_secs.max(1e-12), 0),
+            fnum(fleet.ttft.quantile(0.99), 4),
+            fnum(fleet.mean_occupancy(), 2),
+            fleet.preemptions.to_string(),
+            fnum(host, 3),
+        ]);
+        out.result(&[
+            ("kind", jstr("fabric")),
+            ("scenario", jstr("mixed")),
+            ("replicas", jnum(replicas as f64)),
+            ("tokens", jnum(toks as f64)),
+            ("sim_s", jnum(sim_secs)),
+            ("host_s", jnum(host)),
+            ("p99_ttft", jnum(fleet.ttft.quantile(0.99))),
+            ("occupancy", jnum(fleet.mean_occupancy())),
+        ]);
+        for i in 0..fab.n_replicas() {
+            let m = fab.replica(i).metrics();
+            out.result(&[
+                ("kind", jstr("replica")),
+                ("scenario", jstr("mixed")),
+                ("replicas", jnum(replicas as f64)),
+                ("replica", jnum(i as f64)),
+                ("requests_done",
+                 jnum(m.requests_done as f64)),
+                ("prefills", jnum(m.prefills as f64)),
+                ("occupancy", jnum(m.mean_occupancy())),
+                ("p99_ttft", jnum(m.ttft.quantile(0.99))),
+            ]);
+        }
+    }
+    println!("{}", fb.to_markdown());
+
     let _ = exaq_repro::report::write_csv(
         "reports/serving_stress.csv", &t);
+    let _ = exaq_repro::report::write_csv(
+        "reports/serving_fabric.csv", &fb);
     let _ = exaq_repro::report::write_csv(
         "reports/serving_kernel_modes.csv", &k);
     match out.write() {

@@ -39,12 +39,8 @@ fn main() -> Result<()> {
     let reqs: Vec<Request> = prompts
         .iter()
         .enumerate()
-        .map(|(i, p)| Request {
-            id: i as u64,
-            prompt: tok.encode(p).unwrap(),
-            max_new_tokens: 10,
-            params: SamplingParams::greedy(),
-        })
+        .map(|(i, p)| Request::new(i as u64, tok.encode(p).unwrap(),
+                                   10, SamplingParams::greedy()))
         .collect();
 
     let (mut resps, wall, _) =

@@ -40,13 +40,13 @@ fn main() -> Result<()> {
                 let task = [Task::Completion, Task::OpenBook,
                             Task::ArcEasy][rng.below(3)];
                 let inst = task.generate(&world, &mut rng);
-                Request {
+                Request::new(
                     id,
-                    prompt: inst.prompt.iter()
+                    inst.prompt.iter()
                         .map(|w| tok.id(w).unwrap()).collect(),
-                    max_new_tokens: 8 + rng.below(9),
-                    params: SamplingParams::greedy(),
-                }
+                    8 + rng.below(9),
+                    SamplingParams::greedy(),
+                )
             })
             .collect()
     };
@@ -74,9 +74,9 @@ fn main() -> Result<()> {
                                 Rc::new(WallClock::new()))?;
         let toks: usize = resps.iter().map(|r| r.tokens.len()).sum();
         t.row(&[name.into(), fnum(toks as f64 / wall, 1),
-                fnum(sched.metrics.ttft.quantile(0.5), 3),
-                fnum(sched.metrics.total_latency.quantile(0.5), 3),
-                fnum(sched.metrics.mean_occupancy(), 2)]);
+                fnum(sched.metrics().ttft.quantile(0.5), 3),
+                fnum(sched.metrics().total_latency.quantile(0.5), 3),
+                fnum(sched.metrics().mean_occupancy(), 2)]);
         assert_eq!(resps.len(), n_req, "all requests must complete");
     }
     println!("{}", t.to_markdown());

@@ -1,55 +1,27 @@
-//! The continuous-batching scheduler: admission FIFO, slot claiming,
-//! prefill-then-join, batched decode stepping.
+//! Single-replica scheduler facade over [`super::replica::Replica`].
 //!
-//! The scheduler is generic over [`InferenceBackend`] (PJRT engine or
-//! the deterministic SimBackend) and reads time exclusively through a
-//! shared [`Clock`], so the same code path serves production traffic
-//! and the virtual-time stress harness.
-//!
-//! Sampling is batched the same way the backend step is: each decode
-//! tick hands every active slot's logit row to ONE
-//! [`BatchSampler::sample_rows`] call, which shapes all EXAQ rows
-//! through a single bit-packed [`crate::exaq::BatchSoftmax`] plane
-//! kernel instead of per-slot scalar softmaxes. Prefill admission
-//! (batch-1 shaping of the freshly padded prompt plane) rides the same
-//! sampler so the whole scheduler owns exactly one set of EXAQ tables.
+//! Historically `Scheduler` *was* the continuous-batching engine; the
+//! multi-replica fabric moved the engine room into
+//! `coordinator::replica` so a front-door router can drive N of them.
+//! This facade keeps the original one-backend API (submit / tick /
+//! drain) for the CLI, examples, and the single-replica serving path
+//! — it is exactly a `Replica` with id 0 and no router in front.
 
-use std::collections::VecDeque;
 use std::rc::Rc;
 
-use crate::model::sampling::{BatchSampler, SamplingParams};
-use crate::runtime::backend::InferenceBackend;
-use crate::runtime::{DecodeState, HostTensor, QuantMode};
-use crate::util::clock::Clock;
-use crate::util::error::{anyhow, Result};
-use crate::util::rng::SplitMix64;
-
-use super::kv::{BatchedKv, KvPool};
+pub use super::replica::DEFAULT_SAMPLER_SEED;
+use super::kv::KvPool;
 use super::metrics::Metrics;
-use super::request::{InFlight, Request, Response};
-
-/// Default seed of the sampling RNG (reproducible serving runs).
-pub const DEFAULT_SAMPLER_SEED: u64 = 0xC0FFEE;
+use super::replica::{Assignment, Replica};
+use super::request::{Request, Response};
+use crate::runtime::backend::InferenceBackend;
+use crate::runtime::QuantMode;
+use crate::util::clock::Clock;
+use crate::util::error::Result;
 
 /// Scheduler over one model at one quantization setting.
 pub struct Scheduler {
-    model: String,
-    quant: QuantMode,
-    c_vec: Option<Vec<f32>>,
-    pending: VecDeque<(Request, f64)>,
-    active: Vec<Option<InFlight>>, // indexed by slot
-    pool: KvPool,
-    kv: BatchedKv,
-    pub metrics: Metrics,
-    rng: SplitMix64,
-    sampler: BatchSampler,
-    /// (plane row, params) pairs for the current sampling call.
-    sample_rows: Vec<(usize, SamplingParams)>,
-    /// Token output of the current sampling call.
-    sample_out: Vec<i32>,
-    seq: usize,
-    eos: i32,
-    decode_batch: usize,
+    replica: Replica,
     clock: Rc<dyn Clock>,
 }
 
@@ -59,32 +31,15 @@ impl Scheduler {
         c_vec: Option<Vec<f32>>, decode_batch: usize,
         clock: Rc<dyn Clock>,
     ) -> Result<Self> {
-        let c = backend.model_config(model)?;
-        Ok(Self {
-            model: model.to_string(),
-            quant,
-            c_vec,
-            pending: VecDeque::new(),
-            active: (0..decode_batch).map(|_| None).collect(),
-            pool: KvPool::new(decode_batch),
-            kv: BatchedKv::new(c.n_layers, decode_batch, c.n_heads,
-                               c.max_seq, c.head_dim),
-            metrics: Metrics::default(),
-            rng: SplitMix64::new(DEFAULT_SAMPLER_SEED),
-            sampler: BatchSampler::default(),
-            sample_rows: Vec::new(),
-            sample_out: Vec::new(),
-            seq: c.max_seq,
-            eos: backend.eos_token(),
-            decode_batch,
-            clock,
-        })
+        let replica = Replica::new(0, backend, model, quant, c_vec,
+                                   decode_batch, clock.clone())?;
+        Ok(Self { replica, clock })
     }
 
     /// Reseed the sampling RNG (call before the first submit to get a
     /// different — still reproducible — stochastic-sampling stream).
     pub fn reseed_sampler(&mut self, seed: u64) {
-        self.rng = SplitMix64::new(seed);
+        self.replica.reseed_sampler(seed);
     }
 
     pub fn submit(&mut self, req: Request) {
@@ -97,26 +52,29 @@ impl Scheduler {
     /// after its simulated arrival, and the wait in between must count
     /// toward its TTFT/latency.
     pub fn submit_at(&mut self, req: Request, enqueued: f64) {
-        self.metrics.requests_in += 1;
-        self.pending.push_back((req, enqueued));
+        self.replica.assign(Assignment::fresh(req, enqueued));
     }
 
     pub fn has_work(&self) -> bool {
-        !self.pending.is_empty()
-            || self.active.iter().any(Option::is_some)
+        self.replica.has_work()
     }
 
     pub fn active_count(&self) -> usize {
-        self.active.iter().filter(|s| s.is_some()).count()
+        self.replica.active_count()
     }
 
     pub fn pending_count(&self) -> usize {
-        self.pending.len()
+        self.replica.queue_len()
     }
 
     /// Slot-pool view for accounting assertions.
     pub fn pool(&self) -> &KvPool {
-        &self.pool
+        self.replica.pool()
+    }
+
+    /// Serving counters and latency histograms.
+    pub fn metrics(&self) -> &Metrics {
+        self.replica.metrics()
     }
 
     /// One scheduling tick: admit (prefill) while slots are free, then
@@ -125,157 +83,8 @@ impl Scheduler {
         &mut self, backend: &mut B,
     ) -> Result<Vec<Response>> {
         let mut done = Vec::new();
-
-        // ---- admission: prefill pending requests into free slots (FIFO)
-        while self.pool.available() > 0 && !self.pending.is_empty() {
-            let Some((req, enqueued)) = self.pending.pop_front() else {
-                break;
-            };
-            let slot = self.pool.alloc().ok_or_else(|| {
-                anyhow!("slot pool reported a free slot but alloc \
-                         failed")
-            })?;
-            let prompt_len = req.prompt.len().min(self.seq - 1);
-            let mut padded = Vec::with_capacity(self.seq);
-            padded.push(1); // <bos>
-            padded.extend_from_slice(&req.prompt[..prompt_len]);
-            padded.resize(self.seq, 0); // <pad>
-            let tokens = HostTensor::i32(padded, &[1, self.seq]);
-            let (logits, state) = backend.prefill(
-                &self.model, self.quant, &tokens,
-                self.c_vec.as_deref())?;
-            self.metrics.prefills += 1;
-            self.kv.fill_slot(slot, &state.kc, &state.vc)?;
-
-            // sample the first generated token from the last prompt
-            // logit (the prefill plane is [1, S, V]; row `pos` predicts
-            // the next token) through the shared batched sampler
-            let vocab = logits.shape[2];
-            let pos = prompt_len; // logits index predicting next token
-            self.sample_rows.clear();
-            self.sample_rows.push((pos, req.params));
-            self.sampler.sample_rows(logits.as_f32()?, vocab,
-                                     &self.sample_rows, &mut self.rng,
-                                     &mut self.sample_out);
-            let tok = self.sample_out.first().copied().ok_or_else(
-                || anyhow!("sampler returned no token for the \
-                            prefill row"))?;
-            let now = self.clock.now();
-            let mut inf = InFlight {
-                req,
-                enqueued,
-                first_token: Some(now),
-                generated: vec![tok],
-                slot,
-                pos: prompt_len + 1, // next write position
-            };
-            if tok == self.eos || inf.req.max_new_tokens <= 1
-                || inf.pos >= self.seq
-            {
-                done.push(self.finish(&mut inf)?);
-                self.pool.release(slot)?;
-            } else {
-                self.active[slot] = Some(inf);
-            }
-        }
-
-        // ---- decode: one batched step over all active slots
-        let active_slots: Vec<usize> = self
-            .active
-            .iter()
-            .enumerate()
-            .filter_map(|(i, s)| s.as_ref().map(|_| i))
-            .collect();
-        if !active_slots.is_empty() {
-            let mut token = vec![0i32; self.decode_batch];
-            let mut pos = vec![0i32; self.decode_batch];
-            for &s in &active_slots {
-                let inf = self.active[s].as_ref().ok_or_else(
-                    || anyhow!("active slot {s} emptied mid-tick"))?;
-                token[s] = inf.generated.last().copied().ok_or_else(
-                    || anyhow!("slot {s} active with no generated \
-                                token"))?;
-                pos[s] = inf.pos as i32;
-            }
-            // move (not clone) the batched KV through the backend call;
-            // the buffers are unconditionally replaced by the returned
-            // state below, so cloning would be pure memcpy overhead
-            let placeholder = || HostTensor::f32(Vec::new(), &[0]);
-            let mut state = DecodeState {
-                kc: std::mem::replace(&mut self.kv.kc, placeholder()),
-                vc: std::mem::replace(&mut self.kv.vc, placeholder()),
-            };
-            let logits = backend.decode(&self.model, self.quant, &token,
-                                        &pos, &mut state,
-                                        self.c_vec.as_deref())?;
-            self.kv.kc = state.kc;
-            self.kv.vc = state.vc;
-            self.metrics.decode_steps += 1;
-            self.metrics.decode_tokens += active_slots.len() as u64;
-            self.metrics.batch_occupancy_sum += active_slots.len() as u64;
-
-            let vocab = logits.shape[1];
-            let lg = logits.as_f32()?;
-            // one batched sampling call over every active slot's row:
-            // all EXAQ rows go through a single bit-packed plane kernel
-            self.sample_rows.clear();
-            for &s in &active_slots {
-                let inf = self.active[s].as_ref().ok_or_else(
-                    || anyhow!("active slot {s} emptied mid-tick"))?;
-                self.sample_rows.push((s, inf.req.params));
-            }
-            self.sampler.sample_rows(lg, vocab, &self.sample_rows,
-                                     &mut self.rng,
-                                     &mut self.sample_out);
-            for (i, &s) in active_slots.iter().enumerate() {
-                let tok = self.sample_out.get(i).copied().ok_or_else(
-                    || anyhow!("sampler produced {} tokens for {} \
-                                active rows", self.sample_out.len(),
-                               active_slots.len()))?;
-                let mut finished = false;
-                {
-                    let inf = self.active[s].as_mut().ok_or_else(
-                        || anyhow!("active slot {s} emptied \
-                                    mid-tick"))?;
-                    inf.generated.push(tok);
-                    inf.pos += 1;
-                    if tok == self.eos
-                        || inf.generated.len() >= inf.req.max_new_tokens
-                        || inf.pos >= self.seq
-                    {
-                        finished = true;
-                    }
-                }
-                if finished {
-                    let mut inf = self.active[s].take().ok_or_else(
-                        || anyhow!("finished slot {s} already \
-                                    empty"))?;
-                    done.push(self.finish(&mut inf)?);
-                    self.pool.release(s)?;
-                }
-            }
-        }
-
-        self.metrics.requests_done += done.len() as u64;
+        self.replica.tick(backend, &mut done)?;
         Ok(done)
-    }
-
-    fn finish(&mut self, inf: &mut InFlight) -> Result<Response> {
-        let now = self.clock.now();
-        let ttft = inf
-            .first_token
-            .map(|t| t - inf.enqueued)
-            .unwrap_or(0.0);
-        let total = now - inf.enqueued;
-        self.metrics.ttft.record(ttft);
-        self.metrics.total_latency.record(total);
-        Ok(Response {
-            id: inf.req.id,
-            prompt_len: inf.req.prompt.len(),
-            tokens: std::mem::take(&mut inf.generated),
-            ttft,
-            total_latency: total,
-        })
     }
 }
 
@@ -284,9 +93,10 @@ mod tests {
     // Scheduler logic that doesn't need a backend is covered through
     // KvPool/Metrics unit tests; end-to-end scheduling — admission
     // FIFO, occupancy, determinism, latency percentiles — is exercised
-    // at scale by rust/tests/serving_integration.rs, which drives the
-    // real Scheduler through the SimBackend on a VirtualClock (no
-    // artifact bundle required).
+    // at scale by rust/tests/serving_integration.rs (single replica)
+    // and rust/tests/fabric_integration.rs (router + N replicas),
+    // which drive the real engine through the SimBackend on a
+    // VirtualClock (no artifact bundle required).
     use std::rc::Rc;
 
     use super::*;
@@ -303,12 +113,8 @@ mod tests {
                                        None, 4, clock.clone())
             .unwrap();
         for id in 0..6u64 {
-            sched.submit(Request {
-                id,
-                prompt: vec![5, 6, 7],
-                max_new_tokens: 4,
-                params: SamplingParams::greedy(),
-            });
+            sched.submit(Request::new(id, vec![5, 6, 7], 4,
+                                      SamplingParams::greedy()));
         }
         assert_eq!(sched.pending_count(), 6);
         let mut done = Vec::new();
@@ -319,6 +125,7 @@ mod tests {
         assert_eq!(done.len(), 6);
         assert_eq!(sched.pool().in_use(), 0);
         assert_eq!(sched.pool().available(), 4);
+        assert_eq!(sched.metrics().requests_done, 6);
         for r in &done {
             assert!(!r.tokens.is_empty());
             assert!(r.tokens.len() <= 4);

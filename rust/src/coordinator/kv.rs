@@ -205,6 +205,108 @@ mod tests {
         }
     }
 
+    /// Property-style fabric-lifecycle test: a serving mix of admits
+    /// (alloc + fill), releases (finish), preempt-and-resume pairs
+    /// (release now, realloc later) and hostile probes (double free,
+    /// out-of-range release, alloc-when-full) across 32 seeds. On
+    /// failure the message carries `(seed, step)`: replay by pinning
+    /// `seeds` to the failing seed and binary-searching `step` — the
+    /// op stream is a pure function of the seed, so a failure
+    /// shrinks by replay instead of by case minimization.
+    #[test]
+    fn admit_release_preempt_sequences_never_leak_or_double_free() {
+        for seed in 0..32u64 {
+            let mut rng = SplitMix64::new(seed);
+            let cap = 1 + rng.below(12);
+            let mut p = KvPool::new(cap);
+            // slots held by "in-flight" work, and preempted work
+            // waiting to be resumed (its slot already released)
+            let mut held: Vec<usize> = Vec::new();
+            let mut preempted = 0usize;
+            for step in 0..400 {
+                let ctx = format!("seed {seed} step {step}");
+                match rng.below(6) {
+                    // admit: fresh request or a preempted resume
+                    0 | 1 => {
+                        if let Some(s) = p.alloc() {
+                            assert!(!held.contains(&s),
+                                    "{ctx}: double alloc of {s}");
+                            held.push(s);
+                            if preempted > 0 && rng.below(2) == 0 {
+                                preempted -= 1; // resumed
+                            }
+                        } else {
+                            assert_eq!(held.len(), cap,
+                                       "{ctx}: alloc failed with \
+                                        free capacity");
+                        }
+                    }
+                    // finish: release a held slot
+                    2 | 3 => {
+                        if !held.is_empty() {
+                            let i = rng.below(held.len());
+                            let s = held.swap_remove(i);
+                            p.release(s).unwrap_or_else(|e| {
+                                panic!("{ctx}: release({s}): {e}")
+                            });
+                        }
+                    }
+                    // preempt: victim's slot returns to the pool but
+                    // the request stays logically alive
+                    4 => {
+                        if !held.is_empty() {
+                            let i = rng.below(held.len());
+                            let s = held.swap_remove(i);
+                            p.release(s).unwrap_or_else(|e| {
+                                panic!("{ctx}: preempt({s}): {e}")
+                            });
+                            preempted += 1;
+                        }
+                    }
+                    // hostile probes: must error, must not corrupt
+                    _ => {
+                        let (iu, av) = (p.in_use(), p.available());
+                        assert!(p.release(cap + rng.below(4)).is_err(),
+                                "{ctx}: out-of-range release passed");
+                        if let Some(&s) = held.first() {
+                            // releasing then re-releasing = double
+                            // free; probe on a fresh copy of the slot
+                            p.release(s).unwrap_or_else(|e| {
+                                panic!("{ctx}: release({s}): {e}")
+                            });
+                            assert!(p.release(s).is_err(),
+                                    "{ctx}: double free passed");
+                            let got = p.alloc().unwrap_or_else(|| {
+                                panic!("{ctx}: realloc after probe")
+                            });
+                            assert_eq!(got, s,
+                                       "{ctx}: LIFO realloc");
+                        } else {
+                            assert_eq!(
+                                (p.in_use(), p.available()),
+                                (iu, av),
+                                "{ctx}: failed probe mutated state");
+                        }
+                    }
+                }
+                assert_eq!(p.in_use(), held.len(),
+                           "{ctx}: in_use {} != held {}",
+                           p.in_use(), held.len());
+                assert_eq!(p.in_use() + p.available(), cap,
+                           "{ctx}: leak — {} + {} != {cap}",
+                           p.in_use(), p.available());
+            }
+            // drain: everything outstanding releases cleanly
+            for s in held.drain(..) {
+                p.release(s).unwrap_or_else(|e| {
+                    panic!("seed {seed} drain release({s}): {e}")
+                });
+            }
+            assert_eq!(p.in_use(), 0, "seed {seed}: drain leaked");
+            assert_eq!(p.available(), cap);
+        }
+    }
+
     #[test]
     fn fill_slot_places_rows() {
         let (l, b, h, s, hd) = (2, 4, 2, 3, 2);

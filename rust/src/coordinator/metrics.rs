@@ -1,4 +1,8 @@
 //! Serving metrics: counters + a fixed-bucket latency histogram.
+//!
+//! Counters saturate instead of wrapping: a million-request stress
+//! run merged across a fleet must never panic in release or wrap in
+//! debug, and a pinned `u64::MAX` is a visible, testable ceiling.
 
 /// Simple log-scale latency histogram (seconds).
 #[derive(Clone, Debug, Default)]
@@ -12,16 +16,37 @@ pub struct Histogram {
 
 impl Histogram {
     pub fn record(&mut self, secs: f64) {
+        self.record_n(secs, 1);
+    }
+
+    /// Record `n` identical samples at once (bulk path for merges and
+    /// the hostile-input tests). Saturates instead of overflowing.
+    pub fn record_n(&mut self, secs: f64, n: u64) {
+        if n == 0 {
+            return;
+        }
         let mut b = 0usize;
         let mut edge = 1e-4;
         while secs >= edge && b + 1 < self.counts.len() {
             edge *= 2.0;
             b += 1;
         }
-        self.counts[b] += 1;
-        self.sum += secs;
-        self.n += 1;
+        self.counts[b] = self.counts[b].saturating_add(n);
+        self.sum += secs * n as f64;
+        self.n = self.n.saturating_add(n);
         self.max = self.max.max(secs);
+    }
+
+    /// Fold another histogram into this one (fleet-wide metrics
+    /// merge). Bucket-exact: merging then reading a quantile equals
+    /// recording every underlying sample into one histogram.
+    pub fn merge(&mut self, other: &Histogram) {
+        for (c, &o) in self.counts.iter_mut().zip(&other.counts) {
+            *c = c.saturating_add(o);
+        }
+        self.sum += other.sum;
+        self.n = self.n.saturating_add(other.n);
+        self.max = self.max.max(other.max);
     }
 
     pub fn count(&self) -> u64 {
@@ -45,7 +70,7 @@ impl Histogram {
         let mut acc = 0u64;
         let mut edge = 1e-4;
         for &c in &self.counts {
-            acc += c;
+            acc = acc.saturating_add(c);
             if acc >= target {
                 return edge;
             }
@@ -56,6 +81,14 @@ impl Histogram {
 }
 
 /// Aggregate serving metrics.
+///
+/// Ownership in the fabric is partitioned so a fleet-wide
+/// [`Metrics::merge`] never double-counts: replicas own
+/// `requests_in` / `requests_done` / the engine counters / the
+/// latency histograms (plus `cancelled` / `timed_out` /
+/// `preemptions` / `resumes` for work that reached them), while the
+/// router owns `rejected` and the `cancelled` / `timed_out` of
+/// requests that never left its queue.
 #[derive(Clone, Debug, Default)]
 pub struct Metrics {
     pub requests_in: u64,
@@ -64,6 +97,16 @@ pub struct Metrics {
     pub decode_steps: u64,
     pub decode_tokens: u64,
     pub batch_occupancy_sum: u64,
+    /// Refused by router admission control (queue full).
+    pub rejected: u64,
+    /// Cancelled by the client (queued or in flight).
+    pub cancelled: u64,
+    /// Expired past their deadline (queued or in flight).
+    pub timed_out: u64,
+    /// In-flight evictions to make room for interactive work.
+    pub preemptions: u64,
+    /// Preempted requests re-admitted for another episode.
+    pub resumes: u64,
     pub ttft: Histogram,
     pub total_latency: Histogram,
 }
@@ -76,6 +119,32 @@ impl Metrics {
         } else {
             self.batch_occupancy_sum as f64 / self.decode_steps as f64
         }
+    }
+
+    /// Fold another metrics block into this one (saturating).
+    pub fn merge(&mut self, other: &Metrics) {
+        self.requests_in =
+            self.requests_in.saturating_add(other.requests_in);
+        self.requests_done =
+            self.requests_done.saturating_add(other.requests_done);
+        self.prefills = self.prefills.saturating_add(other.prefills);
+        self.decode_steps =
+            self.decode_steps.saturating_add(other.decode_steps);
+        self.decode_tokens =
+            self.decode_tokens.saturating_add(other.decode_tokens);
+        self.batch_occupancy_sum = self
+            .batch_occupancy_sum
+            .saturating_add(other.batch_occupancy_sum);
+        self.rejected = self.rejected.saturating_add(other.rejected);
+        self.cancelled =
+            self.cancelled.saturating_add(other.cancelled);
+        self.timed_out =
+            self.timed_out.saturating_add(other.timed_out);
+        self.preemptions =
+            self.preemptions.saturating_add(other.preemptions);
+        self.resumes = self.resumes.saturating_add(other.resumes);
+        self.ttft.merge(&other.ttft);
+        self.total_latency.merge(&other.total_latency);
     }
 }
 
@@ -138,7 +207,131 @@ mod tests {
         assert_eq!(h.count(), 0);
         assert_eq!(h.mean(), 0.0);
         assert_eq!(h.quantile(0.5), 0.0);
+        assert_eq!(h.quantile(0.99), 0.0);
         assert_eq!(h.max(), 0.0);
+    }
+
+    #[test]
+    fn single_sample_pins_every_quantile_to_its_bucket_edge() {
+        let mut h = Histogram::default();
+        h.record(5e-3);
+        // 5 ms lands in bucket 6 (first edge with 5e-3 < 1e-4 * 2^b);
+        // with n = 1 every quantile must return exactly that edge,
+        // computed by the same repeated doubling the bucket walk uses
+        let mut edge = 1e-4;
+        for _ in 0..6 {
+            edge *= 2.0;
+        }
+        for q in [0.01, 0.5, 0.99, 1.0] {
+            assert_eq!(h.quantile(q), edge, "q = {q}");
+        }
+        assert_eq!(h.count(), 1);
+        assert_eq!(h.mean(), 5e-3);
+        assert_eq!(h.max(), 5e-3);
+    }
+
+    #[test]
+    fn all_equal_samples_pin_p50_equal_to_p99() {
+        let mut h = Histogram::default();
+        for _ in 0..100 {
+            h.record(1e-3);
+        }
+        // 1 ms lands in bucket 4: 1e-4 * 2^4 = 1.6 ms upper edge
+        let mut edge = 1e-4;
+        for _ in 0..4 {
+            edge *= 2.0;
+        }
+        assert_eq!(h.quantile(0.5), edge);
+        assert_eq!(h.quantile(0.99), edge);
+        assert_eq!(h.quantile(0.5), h.quantile(0.99));
+        assert_eq!(h.max(), 1e-3);
+    }
+
+    #[test]
+    fn u64_saturation_never_panics_or_wraps() {
+        let mut h = Histogram::default();
+        h.record_n(1e-3, u64::MAX);
+        h.record_n(1e-3, u64::MAX); // would wrap without saturation
+        h.record_n(0.5, u64::MAX); // second bucket saturates too
+        assert_eq!(h.count(), u64::MAX);
+        // quantile accumulation must also saturate, not wrap: p99 of
+        // "MAX fast samples + MAX slow samples" stays in range and
+        // the walk terminates at a real bucket edge
+        let p99 = h.quantile(0.99);
+        assert!(p99.is_finite() && p99 > 0.0, "{p99}");
+        let p50 = h.quantile(0.5);
+        assert!(p50 <= p99, "{p50} vs {p99}");
+        assert!(h.mean().is_finite());
+        assert_eq!(h.max(), 0.5);
+
+        let mut a = Histogram::default();
+        a.record_n(1e-3, u64::MAX);
+        let mut b = Histogram::default();
+        b.record_n(2e-3, 7);
+        a.merge(&b); // saturating merge
+        assert_eq!(a.count(), u64::MAX);
+        assert!(a.quantile(0.5).is_finite());
+    }
+
+    #[test]
+    fn record_n_zero_is_a_no_op() {
+        let mut h = Histogram::default();
+        h.record_n(1.0, 0);
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile(0.5), 0.0);
+        assert_eq!(h.max(), 0.0);
+        assert_eq!(h.mean(), 0.0);
+    }
+
+    #[test]
+    fn merge_equals_recording_into_one_histogram() {
+        let mut one = Histogram::default();
+        let mut left = Histogram::default();
+        let mut right = Histogram::default();
+        for i in 1..=50 {
+            one.record(i as f64 * 1e-3);
+            left.record(i as f64 * 1e-3);
+        }
+        for i in 51..=100 {
+            one.record(i as f64 * 1e-3);
+            right.record(i as f64 * 1e-3);
+        }
+        left.merge(&right);
+        assert_eq!(left.count(), one.count());
+        assert_eq!(left.max(), one.max());
+        assert!((left.mean() - one.mean()).abs() < 1e-12);
+        for q in [0.1, 0.5, 0.9, 0.99, 1.0] {
+            assert_eq!(left.quantile(q), one.quantile(q), "q = {q}");
+        }
+    }
+
+    #[test]
+    fn metrics_merge_sums_counters_and_histograms() {
+        let mut a = Metrics::default();
+        a.requests_in = 3;
+        a.requests_done = 2;
+        a.rejected = 1;
+        a.preemptions = 4;
+        a.ttft.record(1e-3);
+        let mut b = Metrics::default();
+        b.requests_in = 5;
+        b.requests_done = 5;
+        b.cancelled = 2;
+        b.timed_out = 1;
+        b.resumes = 4;
+        b.decode_steps = 10;
+        b.batch_occupancy_sum = 30;
+        b.ttft.record(2e-3);
+        a.merge(&b);
+        assert_eq!(a.requests_in, 8);
+        assert_eq!(a.requests_done, 7);
+        assert_eq!(a.rejected, 1);
+        assert_eq!(a.cancelled, 2);
+        assert_eq!(a.timed_out, 1);
+        assert_eq!(a.preemptions, 4);
+        assert_eq!(a.resumes, 4);
+        assert_eq!(a.ttft.count(), 2);
+        assert!((a.mean_occupancy() - 3.0).abs() < 1e-12);
     }
 
     #[test]

@@ -1,18 +1,27 @@
-//! L3 serving coordinator: continuous batching over an
-//! [`InferenceBackend`](crate::runtime::InferenceBackend).
+//! L3 serving coordinator: a multi-replica continuous-batching fabric
+//! over [`InferenceBackend`](crate::runtime::InferenceBackend)s.
 //!
-//! Shape: requests enter an admission queue; the scheduler claims a KV
-//! slot per sequence, runs batch-1 prefill to fill the slot, then steps
-//! ALL active slots together through the batched decode entry point
-//! (inactive rows are padded and ignored) — the prefill/decode
-//! interleave of vLLM-style continuous batching, scaled to this
-//! bundle's fixed artifact batch sizes.
+//! Three layers, mirroring a cli/client/core/executor crate split:
+//!
+//! * **[`router`]** — the front door. Admission control, priority
+//!   tiers, per-tenant round-robin fairness, queued-stage
+//!   cancellation/timeouts. Never touches a backend.
+//! * **[`replica`]** — the engine room. Each replica owns one
+//!   backend's continuous batching: admission-queue → batch-1 prefill
+//!   into a private [`kv::KvPool`] slot → batched decode stepping
+//!   (the prefill/decode interleave of vLLM-style continuous
+//!   batching), plus in-flight timeouts, cancellation, preemption
+//!   hand-back, and token streaming.
+//! * **[`server`]** — the drivers. Single-replica serve loops and the
+//!   multi-replica [`Fabric`](server::Fabric) that advances one
+//!   simulated timeline across N independently-clocked replicas.
+//!   [`batcher::Scheduler`] remains as the one-replica facade.
 //!
 //! Two abstractions make the layer testable at scale without any PJRT
 //! artifacts:
 //!
-//! * the **`InferenceBackend` trait** (`runtime::backend`) — the
-//!   scheduler and serve loops are generic over it, so the PJRT
+//! * the **`InferenceBackend` trait** (`runtime::backend`) — replicas
+//!   and serve loops are generic over it, so the PJRT
 //!   [`Engine`](crate::runtime::Engine) and the deterministic
 //!   [`SimBackend`](crate::runtime::SimBackend) are interchangeable;
 //! * the **`Clock` trait** (`util::clock`) — all timestamps (enqueue,
@@ -21,20 +30,32 @@
 //!   modeled step latency, making TTFT/latency metrics exact.
 //!
 //! [`workload`] generates deterministic scenario mixes (steady, burst,
-//! long-prompt tail, mixed lengths, early-EOS chat) that
-//! `rust/tests/serving_integration.rs` replays through the real
-//! scheduler by the thousands.
+//! long-prompt tail, mixed lengths, early-EOS chat) with tenant and
+//! priority annotations; `rust/tests/serving_integration.rs` replays
+//! them through the single-replica scheduler by the thousands and
+//! `rust/tests/fabric_integration.rs` through the fabric by the
+//! million.
 
 pub mod batcher;
 pub mod kv;
 pub mod metrics;
+pub mod replica;
 pub mod request;
+pub mod router;
 pub mod server;
 pub mod workload;
 
 pub use batcher::Scheduler;
 pub use kv::KvPool;
 pub use metrics::Metrics;
-pub use request::{Request, Response, TimedRequest};
-pub use server::{serve_trace, serve_until_drained, ServeConfig};
+pub use replica::{Assignment, Replica};
+pub use request::{
+    FinishReason, Priority, Request, Response, TimedRequest,
+    TokenEvent, NO_REPLICA,
+};
+pub use router::{Router, RouterConfig};
+pub use server::{
+    serve_trace, serve_until_drained, Fabric, FabricConfig,
+    ServeConfig,
+};
 pub use workload::{Scenario, WorkloadSpec};

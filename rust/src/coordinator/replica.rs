@@ -1,0 +1,557 @@
+//! One worker replica: a continuous-batching engine room around a
+//! private KV pool, driven by the front-door router (`super::router`)
+//! or directly by the single-replica [`super::Scheduler`] facade.
+//!
+//! The replica owns admission (batch-1 prefill into a free KV slot),
+//! the batched decode step, sampling, per-replica metrics, timeouts of
+//! queued and in-flight requests, cancellation, and preemption
+//! (evicting an in-flight request so its tokens-so-far travel back to
+//! the router and the decode resumes later, bit-identically, possibly
+//! on another replica).
+//!
+//! Resume correctness: a preempted request re-prefills the plane
+//! `[bos, prompt, tokens-so-far]` and samples the logit row at
+//! position `prompt_len + tokens_so_far` — exactly the row the decode
+//! step would have seeded from `(last token, position)` — so greedy
+//! streams are invariant under preemption and replica migration. The
+//! row index stays in range because a preempted request was still
+//! alive, i.e. its next write position was `< max_seq`.
+
+use std::collections::VecDeque;
+use std::rc::Rc;
+
+use crate::model::sampling::{BatchSampler, SamplingParams};
+use crate::runtime::backend::InferenceBackend;
+use crate::runtime::{DecodeState, HostTensor, QuantMode};
+use crate::util::clock::Clock;
+use crate::util::error::{anyhow, bail, Result};
+use crate::util::rng::SplitMix64;
+
+use super::kv::{BatchedKv, KvPool};
+use super::metrics::Metrics;
+use super::request::{
+    FinishReason, InFlight, Priority, Request, Response, TokenEvent,
+};
+
+/// Default seed of the sampling RNG (reproducible serving runs).
+pub const DEFAULT_SAMPLER_SEED: u64 = 0xC0FFEE;
+
+/// A unit of work travelling router -> replica (and back, on
+/// preemption): the request plus everything needed to resume it
+/// without losing tokens or latency accounting.
+#[derive(Clone, Debug)]
+pub struct Assignment {
+    pub req: Request,
+    /// Clock second the request first entered the fabric.
+    pub enqueued: f64,
+    /// Tokens generated in earlier episodes (empty when fresh).
+    pub prior: Vec<i32>,
+    /// Clock second of the first sampled token, if any episode
+    /// produced one (preserved across preemptions so TTFT measures
+    /// the *first* episode).
+    pub first_token: Option<f64>,
+    /// Times this request has been preempted so far.
+    pub preemptions: u32,
+}
+
+impl Assignment {
+    /// A fresh, never-scheduled assignment.
+    pub fn fresh(req: Request, enqueued: f64) -> Self {
+        Self {
+            req,
+            enqueued,
+            prior: Vec::new(),
+            first_token: None,
+            preemptions: 0,
+        }
+    }
+
+    /// Total tokens generated across all episodes so far.
+    pub fn generated_total(&self) -> usize {
+        self.prior.len()
+    }
+}
+
+/// A worker replica: one backend's worth of continuous batching.
+pub struct Replica {
+    id: usize,
+    model: String,
+    quant: QuantMode,
+    c_vec: Option<Vec<f32>>,
+    queue: VecDeque<Assignment>,
+    active: Vec<Option<InFlight>>, // indexed by slot
+    pool: KvPool,
+    kv: BatchedKv,
+    metrics: Metrics,
+    rng: SplitMix64,
+    sampler: BatchSampler,
+    /// (plane row, params) pairs for the current sampling call.
+    sample_rows: Vec<(usize, SamplingParams)>,
+    /// Token output of the current sampling call.
+    sample_out: Vec<i32>,
+    stream: Vec<TokenEvent>,
+    collect_stream: bool,
+    seq: usize,
+    eos: i32,
+    decode_batch: usize,
+    clock: Rc<dyn Clock>,
+}
+
+impl Replica {
+    pub fn new<B: InferenceBackend + ?Sized>(
+        id: usize, backend: &B, model: &str, quant: QuantMode,
+        c_vec: Option<Vec<f32>>, decode_batch: usize,
+        clock: Rc<dyn Clock>,
+    ) -> Result<Self> {
+        let c = backend.model_config(model)?;
+        Ok(Self {
+            id,
+            model: model.to_string(),
+            quant,
+            c_vec,
+            queue: VecDeque::new(),
+            active: (0..decode_batch).map(|_| None).collect(),
+            pool: KvPool::new(decode_batch),
+            kv: BatchedKv::new(c.n_layers, decode_batch, c.n_heads,
+                               c.max_seq, c.head_dim),
+            metrics: Metrics::default(),
+            rng: SplitMix64::new(DEFAULT_SAMPLER_SEED),
+            sampler: BatchSampler::default(),
+            sample_rows: Vec::new(),
+            sample_out: Vec::new(),
+            stream: Vec::new(),
+            collect_stream: false,
+            seq: c.max_seq,
+            eos: backend.eos_token(),
+            decode_batch,
+            clock,
+        })
+    }
+
+    pub fn id(&self) -> usize {
+        self.id
+    }
+
+    /// Reseed the sampling RNG (call before the first assign to get a
+    /// different — still reproducible — stochastic-sampling stream).
+    pub fn reseed_sampler(&mut self, seed: u64) {
+        self.rng = SplitMix64::new(seed);
+    }
+
+    /// Toggle per-token [`TokenEvent`] collection (off by default;
+    /// costs one Vec push per sampled token when on).
+    pub fn set_collect_stream(&mut self, on: bool) {
+        self.collect_stream = on;
+    }
+
+    /// Drain the collected token events.
+    pub fn take_stream(&mut self) -> Vec<TokenEvent> {
+        std::mem::take(&mut self.stream)
+    }
+
+    /// Hand this replica a unit of work. Fresh assignments count into
+    /// `requests_in`; resumes of preempted work count into `resumes`.
+    pub fn assign(&mut self, a: Assignment) {
+        if a.preemptions == 0 {
+            self.metrics.requests_in += 1;
+        } else {
+            self.metrics.resumes += 1;
+        }
+        self.queue.push_back(a);
+    }
+
+    pub fn has_work(&self) -> bool {
+        !self.queue.is_empty()
+            || self.active.iter().any(Option::is_some)
+    }
+
+    pub fn active_count(&self) -> usize {
+        self.active.iter().filter(|s| s.is_some()).count()
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Free slots not already spoken for by this replica's own queue
+    /// — what the router may still dispatch here this tick.
+    pub fn capacity_left(&self) -> usize {
+        self.pool.available().saturating_sub(self.queue.len())
+    }
+
+    /// Slot-pool view for accounting assertions.
+    pub fn pool(&self) -> &KvPool {
+        &self.pool
+    }
+
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    /// Cancel a request queued or in flight on this replica. Returns
+    /// `true` (with a `Cancelled` response pushed to `done`) if the
+    /// request was found here.
+    pub fn cancel(
+        &mut self, id: u64, done: &mut Vec<Response>,
+    ) -> Result<bool> {
+        let now = self.clock.now();
+        if let Some(i) = self.queue.iter().position(|a| a.req.id == id)
+        {
+            let a = self.queue.remove(i).ok_or_else(|| {
+                anyhow!("queued assignment {id} vanished mid-cancel")
+            })?;
+            self.metrics.cancelled += 1;
+            done.push(self.queue_exit(a, FinishReason::Cancelled, now));
+            return Ok(true);
+        }
+        for s in 0..self.active.len() {
+            let hit = self.active[s]
+                .as_ref()
+                .map(|inf| inf.req.id == id)
+                .unwrap_or(false);
+            if hit {
+                let mut inf = self.active[s].take().ok_or_else(|| {
+                    anyhow!("active slot {s} emptied mid-cancel")
+                })?;
+                done.push(
+                    self.finish(&mut inf, FinishReason::Cancelled)?,
+                );
+                self.pool.release(s)?;
+                return Ok(true);
+            }
+        }
+        Ok(false)
+    }
+
+    /// Best preemption victim strictly less urgent than `than`:
+    /// `(victim priority, tokens generated, slot)`, preferring the
+    /// least urgent tier, then the longest-running decode, then the
+    /// lowest slot (for determinism).
+    pub fn preempt_candidate(
+        &self, than: Priority,
+    ) -> Option<(Priority, usize, usize)> {
+        let mut best: Option<(Priority, usize, usize)> = None;
+        for (s, slot) in self.active.iter().enumerate() {
+            let Some(inf) = slot.as_ref() else { continue };
+            if inf.req.priority <= than {
+                continue;
+            }
+            let total = inf.prior.len() + inf.generated.len();
+            let cand = (inf.req.priority, total, s);
+            let better = match &best {
+                None => true,
+                Some(b) => {
+                    (cand.0.index(), cand.1) > (b.0.index(), b.1)
+                }
+            };
+            if better {
+                best = Some(cand);
+            }
+        }
+        best
+    }
+
+    /// Evict the request in `slot`, releasing its KV slot and
+    /// returning an [`Assignment`] that resumes it without token
+    /// loss. The caller (the router) decides where it resumes.
+    pub fn preempt_slot(&mut self, slot: usize) -> Result<Assignment> {
+        let mut inf = self.active.get_mut(slot).and_then(Option::take)
+            .ok_or_else(|| {
+                anyhow!("preempt of empty or out-of-range slot {slot}")
+            })?;
+        self.pool.release(slot)?;
+        self.metrics.preemptions += 1;
+        let mut prior = std::mem::take(&mut inf.prior);
+        prior.append(&mut inf.generated);
+        Ok(Assignment {
+            req: inf.req,
+            enqueued: inf.enqueued,
+            prior,
+            first_token: inf.first_token,
+            preemptions: inf.preemptions + 1,
+        })
+    }
+
+    /// One scheduling tick: expire deadlines, admit (prefill) while
+    /// slots are free, then one batched decode step. Completed
+    /// responses are appended to `done`.
+    pub fn tick<B: InferenceBackend + ?Sized>(
+        &mut self, backend: &mut B, done: &mut Vec<Response>,
+    ) -> Result<()> {
+        self.expire_queued(done)?;
+
+        // ---- admission: prefill queued work into free slots (FIFO)
+        while self.pool.available() > 0 && !self.queue.is_empty() {
+            let Some(a) = self.queue.pop_front() else { break };
+            self.admit(backend, a, done)?;
+        }
+
+        self.expire_active(done)?;
+        self.decode_step(backend, done)
+    }
+
+    /// Expire queued assignments whose deadline has passed.
+    fn expire_queued(&mut self, done: &mut Vec<Response>) -> Result<()> {
+        let now = self.clock.now();
+        let mut i = 0;
+        while i < self.queue.len() {
+            let expired = self.queue[i]
+                .req
+                .timeout
+                .map(|dt| now >= self.queue[i].enqueued + dt)
+                .unwrap_or(false);
+            if expired {
+                let a = self.queue.remove(i).ok_or_else(|| {
+                    anyhow!("queued assignment vanished mid-expiry")
+                })?;
+                self.metrics.timed_out += 1;
+                done.push(self.queue_exit(a, FinishReason::TimedOut,
+                                          now));
+            } else {
+                i += 1;
+            }
+        }
+        Ok(())
+    }
+
+    /// Expire in-flight requests whose deadline has passed; they keep
+    /// the tokens generated so far.
+    fn expire_active(&mut self, done: &mut Vec<Response>) -> Result<()> {
+        let now = self.clock.now();
+        for s in 0..self.active.len() {
+            let expired = self.active[s]
+                .as_ref()
+                .and_then(|inf| inf.req.timeout.map(|dt| {
+                    now >= inf.enqueued + dt
+                }))
+                .unwrap_or(false);
+            if expired {
+                let mut inf = self.active[s].take().ok_or_else(|| {
+                    anyhow!("active slot {s} emptied mid-expiry")
+                })?;
+                done.push(
+                    self.finish(&mut inf, FinishReason::TimedOut)?,
+                );
+                self.pool.release(s)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Prefill one assignment into a free slot and sample its next
+    /// token. For resumes the prompt plane is extended with the
+    /// tokens generated so far, reproducing the interrupted decode
+    /// exactly (see module docs).
+    fn admit<B: InferenceBackend + ?Sized>(
+        &mut self, backend: &mut B, a: Assignment,
+        done: &mut Vec<Response>,
+    ) -> Result<()> {
+        let slot = self.pool.alloc().ok_or_else(|| {
+            anyhow!("slot pool reported a free slot but alloc failed")
+        })?;
+        let prompt_len = a.req.prompt.len().min(self.seq - 1);
+        let row_pos = prompt_len + a.prior.len();
+        if row_pos >= self.seq {
+            bail!("resume position {row_pos} out of range for \
+                   max_seq {}", self.seq);
+        }
+        let mut padded = Vec::with_capacity(self.seq);
+        padded.push(1); // <bos>
+        padded.extend_from_slice(&a.req.prompt[..prompt_len]);
+        padded.extend_from_slice(&a.prior);
+        padded.resize(self.seq, 0); // <pad>
+        let tokens = HostTensor::i32(padded, &[1, self.seq]);
+        let (logits, state) = backend.prefill(
+            &self.model, self.quant, &tokens,
+            self.c_vec.as_deref())?;
+        self.metrics.prefills += 1;
+        self.kv.fill_slot(slot, &state.kc, &state.vc)?;
+
+        // sample the next token from the logit row following the last
+        // known token (prompt end, or last resumed token) through the
+        // shared batched sampler
+        let vocab = logits.shape[2];
+        self.sample_rows.clear();
+        self.sample_rows.push((row_pos, a.req.params));
+        self.sampler.sample_rows(logits.as_f32()?, vocab,
+                                 &self.sample_rows, &mut self.rng,
+                                 &mut self.sample_out);
+        let tok = self.sample_out.first().copied().ok_or_else(
+            || anyhow!("sampler returned no token for the prefill \
+                        row"))?;
+        let now = self.clock.now();
+        if self.collect_stream {
+            self.stream.push(TokenEvent {
+                id: a.req.id,
+                token: tok,
+                t: now,
+                replica: self.id,
+            });
+        }
+        let mut inf = InFlight {
+            req: a.req,
+            enqueued: a.enqueued,
+            first_token: Some(a.first_token.unwrap_or(now)),
+            prior: a.prior,
+            generated: vec![tok],
+            slot,
+            pos: row_pos + 1, // next write position
+            preemptions: a.preemptions,
+        };
+        let total = inf.prior.len() + inf.generated.len();
+        if tok == self.eos || total >= inf.req.max_new_tokens
+            || inf.pos >= self.seq
+        {
+            done.push(self.finish(&mut inf, FinishReason::Done)?);
+            self.pool.release(slot)?;
+        } else {
+            self.active[slot] = Some(inf);
+        }
+        Ok(())
+    }
+
+    /// One batched decode step over all active slots.
+    fn decode_step<B: InferenceBackend + ?Sized>(
+        &mut self, backend: &mut B, done: &mut Vec<Response>,
+    ) -> Result<()> {
+        let active_slots: Vec<usize> = self
+            .active
+            .iter()
+            .enumerate()
+            .filter_map(|(i, s)| s.as_ref().map(|_| i))
+            .collect();
+        if active_slots.is_empty() {
+            return Ok(());
+        }
+        let mut token = vec![0i32; self.decode_batch];
+        let mut pos = vec![0i32; self.decode_batch];
+        for &s in &active_slots {
+            let inf = self.active[s].as_ref().ok_or_else(
+                || anyhow!("active slot {s} emptied mid-tick"))?;
+            token[s] = inf.generated.last().copied().ok_or_else(
+                || anyhow!("slot {s} active with no generated \
+                            token"))?;
+            pos[s] = inf.pos as i32;
+        }
+        // move (not clone) the batched KV through the backend call;
+        // the buffers are unconditionally replaced by the returned
+        // state below, so cloning would be pure memcpy overhead
+        let placeholder = || HostTensor::f32(Vec::new(), &[0]);
+        let mut state = DecodeState {
+            kc: std::mem::replace(&mut self.kv.kc, placeholder()),
+            vc: std::mem::replace(&mut self.kv.vc, placeholder()),
+        };
+        let logits = backend.decode(&self.model, self.quant, &token,
+                                    &pos, &mut state,
+                                    self.c_vec.as_deref())?;
+        self.kv.kc = state.kc;
+        self.kv.vc = state.vc;
+        self.metrics.decode_steps += 1;
+        self.metrics.decode_tokens += active_slots.len() as u64;
+        self.metrics.batch_occupancy_sum += active_slots.len() as u64;
+
+        let vocab = logits.shape[1];
+        let lg = logits.as_f32()?;
+        // one batched sampling call over every active slot's row:
+        // all EXAQ rows go through a single bit-packed plane kernel
+        self.sample_rows.clear();
+        for &s in &active_slots {
+            let inf = self.active[s].as_ref().ok_or_else(
+                || anyhow!("active slot {s} emptied mid-tick"))?;
+            self.sample_rows.push((s, inf.req.params));
+        }
+        self.sampler.sample_rows(lg, vocab, &self.sample_rows,
+                                 &mut self.rng,
+                                 &mut self.sample_out);
+        let now = self.clock.now();
+        for (i, &s) in active_slots.iter().enumerate() {
+            let tok = self.sample_out.get(i).copied().ok_or_else(
+                || anyhow!("sampler produced {} tokens for {} \
+                            active rows", self.sample_out.len(),
+                           active_slots.len()))?;
+            let mut finished = false;
+            {
+                let inf = self.active[s].as_mut().ok_or_else(
+                    || anyhow!("active slot {s} emptied \
+                                mid-tick"))?;
+                inf.generated.push(tok);
+                inf.pos += 1;
+                let total = inf.prior.len() + inf.generated.len();
+                if tok == self.eos
+                    || total >= inf.req.max_new_tokens
+                    || inf.pos >= self.seq
+                {
+                    finished = true;
+                }
+                if self.collect_stream {
+                    self.stream.push(TokenEvent {
+                        id: inf.req.id,
+                        token: tok,
+                        t: now,
+                        replica: self.id,
+                    });
+                }
+            }
+            if finished {
+                let mut inf = self.active[s].take().ok_or_else(
+                    || anyhow!("finished slot {s} already empty"))?;
+                done.push(self.finish(&mut inf, FinishReason::Done)?);
+                self.pool.release(s)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Response for work leaving from the replica queue (timed out or
+    /// cancelled before ever claiming a slot here).
+    fn queue_exit(
+        &self, a: Assignment, finish: FinishReason, now: f64,
+    ) -> Response {
+        Response {
+            id: a.req.id,
+            prompt_len: a.req.prompt.len(),
+            tokens: a.prior,
+            ttft: a.first_token.map(|t| t - a.enqueued).unwrap_or(0.0),
+            total_latency: now - a.enqueued,
+            tenant: a.req.tenant,
+            priority: a.req.priority,
+            replica: self.id,
+            finish,
+            preemptions: a.preemptions,
+        }
+    }
+
+    fn finish(
+        &mut self, inf: &mut InFlight, finish: FinishReason,
+    ) -> Result<Response> {
+        let now = self.clock.now();
+        let ttft = inf
+            .first_token
+            .map(|t| t - inf.enqueued)
+            .unwrap_or(0.0);
+        let total = now - inf.enqueued;
+        match finish {
+            FinishReason::Done => {
+                self.metrics.ttft.record(ttft);
+                self.metrics.total_latency.record(total);
+                self.metrics.requests_done += 1;
+            }
+            FinishReason::Cancelled => self.metrics.cancelled += 1,
+            FinishReason::TimedOut => self.metrics.timed_out += 1,
+        }
+        let mut tokens = std::mem::take(&mut inf.prior);
+        tokens.append(&mut inf.generated);
+        Ok(Response {
+            id: inf.req.id,
+            prompt_len: inf.req.prompt.len(),
+            tokens,
+            ttft,
+            total_latency: total,
+            tenant: inf.req.tenant,
+            priority: inf.req.priority,
+            replica: self.id,
+            finish,
+            preemptions: inf.preemptions,
+        })
+    }
+}

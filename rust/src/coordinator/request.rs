@@ -7,6 +7,54 @@
 
 use crate::model::SamplingParams;
 
+/// Scheduling tier of a request. Lower value = stricter latency
+/// target; the router always drains a stricter tier before touching
+/// the next one, and preemption only ever evicts a *less* strict
+/// victim to make room for a stricter arrival.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Priority {
+    /// Human-in-the-loop traffic (chat): lowest TTFT target.
+    Interactive = 0,
+    /// Default tier for API traffic.
+    Standard = 1,
+    /// Throughput-oriented offline work (long-prompt tails).
+    Batch = 2,
+}
+
+impl Priority {
+    /// All tiers, strictest first — the router's drain order.
+    pub const ALL: [Priority; 3] =
+        [Priority::Interactive, Priority::Standard, Priority::Batch];
+
+    /// Dense tier index (0 = strictest).
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Priority::Interactive => "interactive",
+            Priority::Standard => "standard",
+            Priority::Batch => "batch",
+        }
+    }
+}
+
+/// Why a response left the fabric.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FinishReason {
+    /// Ran to EOS / token budget / sequence bound.
+    Done,
+    /// Explicitly cancelled by the client.
+    Cancelled,
+    /// Exceeded its deadline (queued or in flight).
+    TimedOut,
+}
+
+/// `Response::replica` value for requests that never reached a
+/// replica (cancelled or timed out while still queued at the router).
+pub const NO_REPLICA: usize = usize::MAX;
+
 /// An inference request (tokenized prompt).
 #[derive(Clone, Debug)]
 pub struct Request {
@@ -14,6 +62,46 @@ pub struct Request {
     pub prompt: Vec<i32>,
     pub max_new_tokens: usize,
     pub params: SamplingParams,
+    /// Fairness bucket: the router round-robins between tenants
+    /// inside each priority tier.
+    pub tenant: u32,
+    pub priority: Priority,
+    /// Deadline in seconds after enqueue; `None` = no deadline.
+    pub timeout: Option<f64>,
+}
+
+impl Request {
+    /// A standard-tier, tenant-0 request with no deadline — the shape
+    /// every pre-fabric call site used.
+    pub fn new(
+        id: u64, prompt: Vec<i32>, max_new_tokens: usize,
+        params: SamplingParams,
+    ) -> Self {
+        Self {
+            id,
+            prompt,
+            max_new_tokens,
+            params,
+            tenant: 0,
+            priority: Priority::Standard,
+            timeout: None,
+        }
+    }
+
+    pub fn with_tenant(mut self, tenant: u32) -> Self {
+        self.tenant = tenant;
+        self
+    }
+
+    pub fn with_priority(mut self, priority: Priority) -> Self {
+        self.priority = priority;
+        self
+    }
+
+    pub fn with_timeout(mut self, timeout: f64) -> Self {
+        self.timeout = Some(timeout);
+        self
+    }
 }
 
 /// A request with a scheduled arrival time, as produced by the
@@ -35,6 +123,24 @@ pub struct Response {
     pub ttft: f64,
     /// queue-in -> completion (seconds).
     pub total_latency: f64,
+    pub tenant: u32,
+    pub priority: Priority,
+    /// Replica that served the final episode ([`NO_REPLICA`] if the
+    /// request never left the router queue).
+    pub replica: usize,
+    pub finish: FinishReason,
+    /// Times this request was evicted and later resumed.
+    pub preemptions: u32,
+}
+
+/// One streamed token, tagged with the virtual second it was sampled.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TokenEvent {
+    pub id: u64,
+    pub token: i32,
+    /// Clock second the token was sampled.
+    pub t: f64,
+    pub replica: usize,
 }
 
 /// Internal lifecycle record.
@@ -45,8 +151,12 @@ pub struct InFlight {
     pub enqueued: f64,
     /// Clock second the first token was sampled.
     pub first_token: Option<f64>,
+    /// Tokens generated in earlier episodes (before a preemption).
+    pub prior: Vec<i32>,
     pub generated: Vec<i32>,
     pub slot: usize,
     /// next decode position (= tokens written into the KV so far).
     pub pos: usize,
+    /// Times this request has been preempted so far.
+    pub preemptions: u32,
 }

@@ -1,0 +1,415 @@
+//! The front door of the serving fabric: admission control, priority
+//! tiers, and per-tenant fairness over a fleet of replicas.
+//!
+//! The router holds all not-yet-dispatched work in three priority
+//! tiers ([`Priority::ALL`]), each a set of per-tenant FIFO queues
+//! drained round-robin. Dispatch order is therefore a pure function
+//! of (arrival order, request fields) — no wall-clock, no randomness,
+//! no map-iteration nondeterminism (`BTreeMap` only) — which is what
+//! lets the million-request stress suite assert bit-identical reruns.
+//!
+//! The router never talks to a backend: the fabric driver
+//! (`super::server::Fabric`) pulls [`Assignment`]s out of
+//! [`Router::next`] and pushes them into replicas, and hands
+//! preempted work back through [`Router::requeue`].
+
+use std::collections::{BTreeMap, VecDeque};
+
+use super::metrics::Metrics;
+use super::replica::Assignment;
+use super::request::{
+    FinishReason, Priority, Request, Response, NO_REPLICA,
+};
+
+/// Router policy knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct RouterConfig {
+    /// Reject new submits once this many requests are queued at the
+    /// router (0 = unbounded).
+    pub max_queue: usize,
+    /// Allow evicting less-urgent in-flight work when interactive
+    /// requests are starved of capacity.
+    pub preemption: bool,
+    /// Reserved for stochastic policies; current policies are all
+    /// deterministic and ignore it.
+    pub seed: u64,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        Self { max_queue: 0, preemption: true, seed: 0 }
+    }
+}
+
+/// Queue entry: the assignment plus its global arrival number, which
+/// makes FIFO-within-tenant explicit and cheap to assert in tests.
+#[derive(Debug)]
+struct Queued {
+    asg: Assignment,
+    arrival: u64,
+}
+
+/// One priority tier: per-tenant FIFO queues drained round-robin.
+/// The cursor remembers the last-served tenant; the next dispatch
+/// starts strictly after it in sorted-tenant order (wrapping), so no
+/// tenant can starve another inside its tier.
+#[derive(Debug, Default)]
+struct TierQueue {
+    queues: BTreeMap<u32, VecDeque<Queued>>,
+    last: Option<u32>,
+    len: usize,
+}
+
+impl TierQueue {
+    fn push_back(&mut self, q: Queued) {
+        self.queues.entry(q.asg.req.tenant).or_default().push_back(q);
+        self.len += 1;
+    }
+
+    fn push_front(&mut self, q: Queued) {
+        self.queues.entry(q.asg.req.tenant).or_default().push_front(q);
+        self.len += 1;
+    }
+
+    /// Pop from the tenant strictly after the fairness cursor
+    /// (wrapping round the sorted tenant set).
+    fn pop_round_robin(&mut self) -> Option<Queued> {
+        let tenant = {
+            let after = self.last.map(|t| {
+                self.queues
+                    .range((
+                        std::ops::Bound::Excluded(t),
+                        std::ops::Bound::Unbounded,
+                    ))
+                    .next()
+                    .map(|(k, _)| *k)
+            });
+            match after {
+                Some(Some(t)) => t,
+                // cursor past the end (or unset): wrap to the first
+                _ => *self.queues.keys().next()?,
+            }
+        };
+        let q = self.queues.get_mut(&tenant)?.pop_front()?;
+        if self.queues.get(&tenant).is_some_and(VecDeque::is_empty) {
+            self.queues.remove(&tenant);
+        }
+        self.last = Some(tenant);
+        self.len -= 1;
+        Some(q)
+    }
+
+    fn remove_id(&mut self, id: u64) -> Option<Queued> {
+        let mut hit: Option<(u32, usize)> = None;
+        for (t, dq) in self.queues.iter() {
+            if let Some(i) =
+                dq.iter().position(|q| q.asg.req.id == id)
+            {
+                hit = Some((*t, i));
+                break;
+            }
+        }
+        let (t, i) = hit?;
+        let q = self.queues.get_mut(&t)?.remove(i)?;
+        if self.queues.get(&t).is_some_and(VecDeque::is_empty) {
+            self.queues.remove(&t);
+        }
+        self.len -= 1;
+        Some(q)
+    }
+}
+
+/// The front-door router.
+pub struct Router {
+    cfg: RouterConfig,
+    tiers: Vec<TierQueue>,
+    arrivals: u64,
+    /// Queued entries carrying a deadline. Keeps
+    /// [`Router::sweep_timeouts`] O(1) per step when no queued work
+    /// has one — the common case in the million-request storms, where
+    /// a full-queue walk per step would go quadratic in the backlog.
+    timed: usize,
+    /// Queued-stage counters only (`rejected`/`timed_out`/
+    /// `cancelled`); replicas own `requests_in` and the latency
+    /// histograms, so a fleet-wide merge never double-counts.
+    pub metrics: Metrics,
+}
+
+impl Router {
+    pub fn new(cfg: RouterConfig) -> Self {
+        Self {
+            cfg,
+            tiers: (0..Priority::ALL.len())
+                .map(|_| TierQueue::default())
+                .collect(),
+            arrivals: 0,
+            timed: 0,
+            metrics: Metrics::default(),
+        }
+    }
+
+    /// Admission control: accept the request into its tier (true) or
+    /// reject it because the router queue is full (false).
+    pub fn submit(&mut self, req: Request, now: f64) -> bool {
+        if self.cfg.max_queue > 0
+            && self.queued_len() >= self.cfg.max_queue
+        {
+            self.metrics.rejected += 1;
+            return false;
+        }
+        let tier = req.priority.index();
+        if req.timeout.is_some() {
+            self.timed += 1;
+        }
+        let asg = Assignment::fresh(req, now);
+        let arrival = self.arrivals;
+        self.arrivals += 1;
+        self.tiers[tier].push_back(Queued { asg, arrival });
+        true
+    }
+
+    /// Requeue preempted work at the head of its tenant's queue (it
+    /// already waited once; no admission control on the way back in).
+    pub fn requeue(&mut self, asg: Assignment) {
+        let tier = asg.req.priority.index();
+        if asg.req.timeout.is_some() {
+            self.timed += 1;
+        }
+        let arrival = self.arrivals;
+        self.arrivals += 1;
+        self.tiers[tier].push_front(Queued { asg, arrival });
+    }
+
+    /// Next assignment to dispatch: strictest tier first, round-robin
+    /// across tenants inside the tier.
+    pub fn next(&mut self) -> Option<Assignment> {
+        for tier in self.tiers.iter_mut() {
+            if let Some(q) = tier.pop_round_robin() {
+                if q.asg.req.timeout.is_some() {
+                    self.timed = self.timed.saturating_sub(1);
+                }
+                return Some(q.asg);
+            }
+        }
+        None
+    }
+
+    /// Cancel a queued request. In-flight work is the replicas'
+    /// business; the fabric tries the router first, then each
+    /// replica.
+    pub fn cancel(&mut self, id: u64, now: f64) -> Option<Response> {
+        for tier in self.tiers.iter_mut() {
+            if let Some(q) = tier.remove_id(id) {
+                if q.asg.req.timeout.is_some() {
+                    self.timed = self.timed.saturating_sub(1);
+                }
+                self.metrics.cancelled += 1;
+                return Some(exit_response(
+                    q.asg,
+                    FinishReason::Cancelled,
+                    now,
+                ));
+            }
+        }
+        None
+    }
+
+    /// Expire queued requests whose deadline passed while waiting at
+    /// the front door.
+    pub fn sweep_timeouts(
+        &mut self, now: f64, out: &mut Vec<Response>,
+    ) {
+        if self.timed == 0 {
+            return;
+        }
+        for tier in self.tiers.iter_mut() {
+            let tenants: Vec<u32> =
+                tier.queues.keys().copied().collect();
+            for t in tenants {
+                let Some(dq) = tier.queues.get_mut(&t) else {
+                    continue;
+                };
+                let mut i = 0;
+                while i < dq.len() {
+                    let expired = dq[i]
+                        .asg
+                        .req
+                        .timeout
+                        .map(|dt| now >= dq[i].asg.enqueued + dt)
+                        .unwrap_or(false);
+                    if expired {
+                        if let Some(q) = dq.remove(i) {
+                            tier.len -= 1;
+                            self.timed =
+                                self.timed.saturating_sub(1);
+                            out.push(exit_response(
+                                q.asg,
+                                FinishReason::TimedOut,
+                                now,
+                            ));
+                            self.metrics.timed_out += 1;
+                        } else {
+                            i += 1;
+                        }
+                    } else {
+                        i += 1;
+                    }
+                }
+                if tier.queues.get(&t).is_some_and(VecDeque::is_empty)
+                {
+                    tier.queues.remove(&t);
+                }
+            }
+        }
+    }
+
+    /// Requests queued at the given priority.
+    pub fn queued_at(&self, p: Priority) -> usize {
+        self.tiers[p.index()].len
+    }
+
+    /// Total requests queued at the router.
+    pub fn queued_len(&self) -> usize {
+        self.tiers.iter().map(|t| t.len).sum()
+    }
+
+    /// Global arrival counter (monotone over submits + requeues).
+    pub fn arrivals(&self) -> u64 {
+        self.arrivals
+    }
+}
+
+/// Response for work that never reached (or never resumed on) a
+/// replica: tokens are whatever earlier episodes produced.
+fn exit_response(
+    asg: Assignment, finish: FinishReason, now: f64,
+) -> Response {
+    Response {
+        id: asg.req.id,
+        prompt_len: asg.req.prompt.len(),
+        tokens: asg.prior,
+        ttft: asg
+            .first_token
+            .map(|t| t - asg.enqueued)
+            .unwrap_or(0.0),
+        total_latency: now - asg.enqueued,
+        tenant: asg.req.tenant,
+        priority: asg.req.priority,
+        replica: NO_REPLICA,
+        finish,
+        preemptions: asg.preemptions,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::SamplingParams;
+
+    fn req(id: u64, tenant: u32, p: Priority) -> Request {
+        Request::new(id, vec![4, 5], 4, SamplingParams::greedy())
+            .with_tenant(tenant)
+            .with_priority(p)
+    }
+
+    #[test]
+    fn tiers_drain_strictest_first() {
+        let mut r = Router::new(RouterConfig::default());
+        assert!(r.submit(req(0, 0, Priority::Batch), 0.0));
+        assert!(r.submit(req(1, 0, Priority::Standard), 0.0));
+        assert!(r.submit(req(2, 0, Priority::Interactive), 0.0));
+        let order: Vec<u64> = std::iter::from_fn(|| r.next())
+            .map(|a| a.req.id)
+            .collect();
+        assert_eq!(order, vec![2, 1, 0]);
+    }
+
+    #[test]
+    fn round_robin_across_tenants_within_tier() {
+        let mut r = Router::new(RouterConfig::default());
+        // tenant 0 floods first, tenant 1 and 2 arrive after
+        for id in 0..4 {
+            assert!(r.submit(req(id, 0, Priority::Standard), 0.0));
+        }
+        assert!(r.submit(req(10, 1, Priority::Standard), 0.0));
+        assert!(r.submit(req(20, 2, Priority::Standard), 0.0));
+        let order: Vec<u64> = std::iter::from_fn(|| r.next())
+            .map(|a| a.req.id)
+            .collect();
+        // fair interleave, not 0,1,2,3,10,20
+        assert_eq!(order, vec![0, 10, 20, 1, 2, 3]);
+    }
+
+    #[test]
+    fn admission_control_rejects_past_max_queue() {
+        let mut r = Router::new(RouterConfig {
+            max_queue: 2,
+            ..RouterConfig::default()
+        });
+        assert!(r.submit(req(0, 0, Priority::Standard), 0.0));
+        assert!(r.submit(req(1, 0, Priority::Standard), 0.0));
+        assert!(!r.submit(req(2, 0, Priority::Standard), 0.0));
+        assert_eq!(r.metrics.rejected, 1);
+        assert_eq!(r.queued_len(), 2);
+    }
+
+    #[test]
+    fn cancel_and_timeout_leave_queue_consistent() {
+        let mut r = Router::new(RouterConfig::default());
+        assert!(r.submit(req(0, 0, Priority::Standard), 0.0));
+        assert!(r.submit(
+            req(1, 1, Priority::Standard).with_timeout(0.5),
+            0.0,
+        ));
+        let c = r.cancel(0, 0.1).expect("queued cancel hits");
+        assert_eq!(c.finish, FinishReason::Cancelled);
+        assert_eq!(c.replica, NO_REPLICA);
+        assert!(r.cancel(99, 0.1).is_none());
+        let mut out = Vec::new();
+        r.sweep_timeouts(1.0, &mut out);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].id, 1);
+        assert_eq!(out[0].finish, FinishReason::TimedOut);
+        assert_eq!(r.queued_len(), 0);
+        assert_eq!(r.metrics.cancelled, 1);
+        assert_eq!(r.metrics.timed_out, 1);
+        assert!(r.next().is_none());
+    }
+
+    #[test]
+    fn timeout_bookkeeping_survives_pop_and_requeue() {
+        // the sweep fast-path is gated on a counter of queued
+        // deadline-carrying entries; popping must decrement it and
+        // requeueing preempted work must restore it, or deadlines
+        // silently stop firing
+        let mut r = Router::new(RouterConfig::default());
+        assert!(r.submit(
+            req(0, 0, Priority::Standard).with_timeout(0.1),
+            0.0,
+        ));
+        let a = r.next().expect("queued assignment pops");
+        r.requeue(a); // still carries its deadline
+        let mut out = Vec::new();
+        r.sweep_timeouts(1.0, &mut out);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].finish, FinishReason::TimedOut);
+        assert_eq!(r.queued_len(), 0);
+        assert_eq!(r.metrics.timed_out, 1);
+    }
+
+    #[test]
+    fn requeue_goes_to_the_front_of_its_tenant() {
+        let mut r = Router::new(RouterConfig::default());
+        assert!(r.submit(req(0, 0, Priority::Standard), 0.0));
+        assert!(r.submit(req(1, 0, Priority::Standard), 0.0));
+        let a = r.next().expect("one queued");
+        assert_eq!(a.req.id, 0);
+        let mut back = a;
+        back.preemptions = 1;
+        r.requeue(back);
+        let order: Vec<u64> = std::iter::from_fn(|| r.next())
+            .map(|x| x.req.id)
+            .collect();
+        assert_eq!(order, vec![0, 1]);
+    }
+}

@@ -2,19 +2,33 @@
 //! responses + throughput (the serving examples, benches and the
 //! stress harness drive these).
 //!
-//! Both loops are generic over [`InferenceBackend`] and measure time
-//! on the shared [`Clock`], so the same code serves a PJRT engine on
-//! wall time and the SimBackend on virtual time.
+//! Two layers live here:
+//!
+//! * the single-replica loops ([`serve_until_drained`],
+//!   [`serve_trace`]) — generic over [`InferenceBackend`], measuring
+//!   time on one shared [`Clock`];
+//! * the multi-replica [`Fabric`]: a [`Router`] front door over N
+//!   [`Replica`] workers, each with its own backend and its own
+//!   [`VirtualClock`]. The fabric advances a global virtual `now` to
+//!   the earliest replica completion or the next trace arrival, so a
+//!   fleet of independently-clocked workers serves one coherent
+//!   timeline — deterministically, because every scheduling decision
+//!   is a pure function of (arrival order, request fields, seed).
 
 use std::rc::Rc;
 
 use crate::runtime::backend::InferenceBackend;
 use crate::runtime::QuantMode;
-use crate::util::clock::Clock;
-use crate::util::error::Result;
+use crate::util::clock::{Clock, VirtualClock};
+use crate::util::error::{bail, Result};
 
 use super::batcher::Scheduler;
-use super::request::{Request, Response, TimedRequest};
+use super::metrics::Metrics;
+use super::replica::Replica;
+use super::request::{
+    Priority, Request, Response, TimedRequest, TokenEvent,
+};
+use super::router::{Router, RouterConfig};
 
 /// Configuration of a serve run.
 #[derive(Clone, Debug)]
@@ -83,4 +97,335 @@ pub fn serve_trace<B: InferenceBackend + ?Sized>(
         out.extend(sched.tick(backend)?);
     }
     Ok((out, clock.now() - t0, sched))
+}
+
+/// Configuration of a multi-replica fabric.
+#[derive(Clone, Debug)]
+pub struct FabricConfig {
+    pub serve: ServeConfig,
+    pub router: RouterConfig,
+    /// Collect per-token [`TokenEvent`]s (off by default: one Vec
+    /// push per token).
+    pub collect_stream: bool,
+}
+
+/// Router + N worker replicas on one simulated timeline.
+pub struct Fabric<B: InferenceBackend> {
+    cfg: FabricConfig,
+    router: Router,
+    replicas: Vec<Replica>,
+    backends: Vec<B>,
+    clocks: Vec<Rc<VirtualClock>>,
+    now: f64,
+    stream: Vec<TokenEvent>,
+}
+
+impl<B: InferenceBackend> Fabric<B> {
+    /// Build `n_replicas` workers; `mk(i, clock)` constructs replica
+    /// `i`'s backend on its private virtual clock.
+    pub fn new<F>(
+        n_replicas: usize, cfg: FabricConfig, mut mk: F,
+    ) -> Result<Self>
+    where
+        F: FnMut(usize, Rc<dyn Clock>) -> Result<B>,
+    {
+        if n_replicas == 0 {
+            bail!("fabric needs at least one replica");
+        }
+        let router = Router::new(cfg.router);
+        let mut replicas = Vec::with_capacity(n_replicas);
+        let mut backends = Vec::with_capacity(n_replicas);
+        let mut clocks = Vec::with_capacity(n_replicas);
+        for i in 0..n_replicas {
+            let clock = Rc::new(VirtualClock::new());
+            let backend =
+                mk(i, clock.clone() as Rc<dyn Clock>)?;
+            let mut replica = Replica::new(
+                i, &backend, &cfg.serve.model, cfg.serve.quant,
+                cfg.serve.c_vec.clone(), cfg.serve.decode_batch,
+                clock.clone() as Rc<dyn Clock>,
+            )?;
+            replica.set_collect_stream(cfg.collect_stream);
+            replicas.push(replica);
+            backends.push(backend);
+            clocks.push(clock);
+        }
+        Ok(Self {
+            cfg,
+            router,
+            replicas,
+            backends,
+            clocks,
+            now: 0.0,
+            stream: Vec::new(),
+        })
+    }
+
+    /// Current fabric-wide virtual second.
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    pub fn n_replicas(&self) -> usize {
+        self.replicas.len()
+    }
+
+    pub fn replica(&self, i: usize) -> &Replica {
+        &self.replicas[i]
+    }
+
+    pub fn router(&self) -> &Router {
+        &self.router
+    }
+
+    /// Per-replica sampler reseed (distinct streams per worker so
+    /// stochastic sampling doesn't correlate across the fleet).
+    pub fn reseed_samplers(&mut self, seed: u64) {
+        for (i, rep) in self.replicas.iter_mut().enumerate() {
+            rep.reseed_sampler(seed.wrapping_add(
+                (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+            ));
+        }
+    }
+
+    /// Queued + in-flight work anywhere in the fabric.
+    pub fn has_work(&self) -> bool {
+        self.router.queued_len() > 0
+            || self.replicas.iter().any(Replica::has_work)
+    }
+
+    /// Submit at the current fabric time. Returns `false` when the
+    /// router's admission control rejected the request.
+    pub fn submit(&mut self, req: Request) -> bool {
+        let now = self.now;
+        self.router.submit(req, now)
+    }
+
+    /// Cancel a request wherever it currently lives (router queue, or
+    /// queued/in-flight on a replica). The terminal `Cancelled`
+    /// response is pushed to `out`; returns whether it was found.
+    pub fn cancel(
+        &mut self, id: u64, out: &mut Vec<Response>,
+    ) -> Result<bool> {
+        if let Some(r) = self.router.cancel(id, self.now) {
+            out.push(r);
+            return Ok(true);
+        }
+        for rep in self.replicas.iter_mut() {
+            if rep.cancel(id, out)? {
+                return Ok(true);
+            }
+        }
+        Ok(false)
+    }
+
+    /// Drain collected token events (empty unless
+    /// `cfg.collect_stream`).
+    pub fn take_stream(&mut self) -> Vec<TokenEvent> {
+        std::mem::take(&mut self.stream)
+    }
+
+    /// Sum of free-slot capacity the router could still dispatch
+    /// into, across the whole fleet.
+    fn total_capacity(&self) -> usize {
+        self.replicas.iter().map(Replica::capacity_left).sum()
+    }
+
+    /// Preemption pass: when interactive work is starved of capacity,
+    /// evict just enough less-urgent in-flight requests (least urgent
+    /// tier first, then longest decode, then lowest replica/slot) and
+    /// hand their resumable state back to the router.
+    fn preempt_for_interactive(&mut self) -> Result<()> {
+        let starved = self.router.queued_at(Priority::Interactive);
+        let mut need =
+            starved.saturating_sub(self.total_capacity());
+        while need > 0 {
+            let mut best: Option<(usize, usize, usize)> = None;
+            let mut best_key = (0usize, 0usize);
+            for (r, rep) in self.replicas.iter().enumerate() {
+                let Some((p, total, slot)) =
+                    rep.preempt_candidate(Priority::Interactive)
+                else {
+                    continue;
+                };
+                let key = (p.index(), total);
+                if best.is_none() || key > best_key {
+                    best = Some((r, slot, total));
+                    best_key = key;
+                }
+            }
+            let Some((r, slot, _)) = best else { break };
+            let asg = self.replicas[r].preempt_slot(slot)?;
+            self.router.requeue(asg);
+            need -= 1;
+        }
+        Ok(())
+    }
+
+    /// One fabric step at virtual second `now`: expire router-stage
+    /// deadlines, preempt if interactive work is starved, dispatch
+    /// queued work to ready replicas (most free capacity first), tick
+    /// every ready replica, then advance `now` to the earliest busy
+    /// replica's clock or `horizon`, whichever is sooner. Returns
+    /// whether the step made progress (work or time).
+    pub fn step(
+        &mut self, horizon: Option<f64>, out: &mut Vec<Response>,
+    ) -> Result<bool> {
+        let now = self.now;
+        self.router.sweep_timeouts(now, out);
+        if self.cfg.router.preemption {
+            self.preempt_for_interactive()?;
+        }
+
+        // dispatch: fill the emptiest ready replica first (greedy
+        // least-loaded; ties broken by replica index, so placement is
+        // a pure function of queue state)
+        let mut dispatched = 0usize;
+        loop {
+            let mut best: Option<(usize, usize)> = None; // (cap, r)
+            for (r, rep) in self.replicas.iter().enumerate() {
+                if self.clocks[r].now() > now {
+                    continue; // still busy until its clock is reached
+                }
+                let cap = rep.capacity_left();
+                if cap == 0 {
+                    continue;
+                }
+                let better = match best {
+                    None => true,
+                    Some((bcap, _)) => cap > bcap,
+                };
+                if better {
+                    best = Some((cap, r));
+                }
+            }
+            let Some((_, r)) = best else { break };
+            let Some(asg) = self.router.next() else { break };
+            self.replicas[r].assign(asg);
+            dispatched += 1;
+        }
+
+        // tick every ready replica that has work, on its own clock
+        // synced up to the fabric's now
+        let mut ticked = false;
+        for r in 0..self.replicas.len() {
+            if self.clocks[r].now() > now
+                || !self.replicas[r].has_work()
+            {
+                continue;
+            }
+            let behind = now - self.clocks[r].now();
+            self.clocks[r].advance(behind); // no-op when behind <= 0
+            self.replicas[r].tick(&mut self.backends[r], out)?;
+            if self.cfg.collect_stream {
+                self.stream
+                    .extend(self.replicas[r].take_stream());
+            }
+            ticked = true;
+        }
+
+        // advance the fabric timeline to the next event: the
+        // earliest busy replica's completion — or, when work is still
+        // queued at the router, the earliest moment an idle replica
+        // with free capacity becomes ready (its clock may have run
+        // ahead of `now` while finishing its previous batch)
+        let mut next_t = f64::INFINITY;
+        for (r, rep) in self.replicas.iter().enumerate() {
+            let relevant = rep.has_work()
+                || (self.router.queued_len() > 0
+                    && rep.capacity_left() > 0);
+            if relevant {
+                let t = self.clocks[r].now();
+                if t > now && t < next_t {
+                    next_t = t;
+                }
+            }
+        }
+        if let Some(h) = horizon {
+            if h > now && h < next_t {
+                next_t = h;
+            }
+        }
+        if next_t.is_finite() {
+            self.now = next_t;
+        }
+        Ok(dispatched > 0 || ticked || next_t.is_finite())
+    }
+
+    /// Replay a timed arrival trace to completion, streaming each
+    /// terminal [`Response`] into `on_done`. Returns elapsed virtual
+    /// seconds.
+    pub fn run_trace_with<F: FnMut(Response)>(
+        &mut self, mut trace: Vec<TimedRequest>, mut on_done: F,
+    ) -> Result<f64> {
+        trace.sort_by(|a, b| {
+            a.at.total_cmp(&b.at).then(a.req.id.cmp(&b.req.id))
+        });
+        let t0 = self.now;
+        let mut next = 0usize;
+        let mut out = Vec::new();
+        loop {
+            while next < trace.len()
+                && t0 + trace[next].at <= self.now
+            {
+                // enqueue at the *arrival* time: the fabric may have
+                // jumped past several arrivals and the queue wait is
+                // part of the measured latency
+                self.router.submit(trace[next].req.clone(),
+                                   t0 + trace[next].at);
+                next += 1;
+            }
+            if next >= trace.len() && !self.has_work() {
+                break;
+            }
+            let horizon = if next < trace.len() {
+                Some(t0 + trace[next].at)
+            } else {
+                None
+            };
+            out.clear();
+            let progressed = self.step(horizon, &mut out)?;
+            for r in out.drain(..) {
+                on_done(r);
+            }
+            if !progressed {
+                match horizon {
+                    Some(h) if h > self.now => self.now = h,
+                    // nothing can progress and nothing will arrive:
+                    // bail instead of spinning forever
+                    _ => bail!("fabric stalled with work pending"),
+                }
+            }
+        }
+        Ok(self.now - t0)
+    }
+
+    /// Replay a timed arrival trace to completion; returns
+    /// (responses in completion order, elapsed virtual seconds).
+    pub fn run_trace(
+        &mut self, trace: Vec<TimedRequest>,
+    ) -> Result<(Vec<Response>, f64)> {
+        let mut out = Vec::new();
+        let elapsed =
+            self.run_trace_with(trace, |r| out.push(r))?;
+        Ok((out, elapsed))
+    }
+
+    /// Router-stage counters (rejected / cancelled / timed out while
+    /// queued at the front door).
+    pub fn router_metrics(&self) -> &Metrics {
+        &self.router.metrics
+    }
+
+    /// Fleet-wide merged metrics: router-stage counters plus every
+    /// replica's counters and latency histograms. The counter sets
+    /// are disjoint (replicas own `requests_in`/histograms, the
+    /// router owns `rejected`), so the merge never double-counts.
+    pub fn fleet_metrics(&self) -> Metrics {
+        let mut m = self.router.metrics.clone();
+        for rep in &self.replicas {
+            m.merge(rep.metrics());
+        }
+        m
+    }
 }

@@ -11,7 +11,7 @@
 use crate::model::SamplingParams;
 use crate::util::rng::SplitMix64;
 
-use super::request::{Request, TimedRequest};
+use super::request::{Priority, Request, TimedRequest};
 
 /// Arrival + size pattern of a synthetic workload.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -44,6 +44,9 @@ pub struct WorkloadSpec {
     pub vocab: usize,
     /// Model context length (bounds prompt lengths).
     pub max_seq: usize,
+    /// Fairness buckets: each request draws its tenant uniformly from
+    /// `[0, tenants)`. 1 = the pre-fabric single-tenant behaviour.
+    pub tenants: u32,
 }
 
 impl WorkloadSpec {
@@ -51,7 +54,14 @@ impl WorkloadSpec {
                vocab: usize, max_seq: usize) -> Self {
         assert!(vocab > 8, "vocabulary too small for prompt sampling");
         assert!(max_seq >= 8, "context too short for prompt sampling");
-        Self { scenario, n_requests, seed, vocab, max_seq }
+        Self { scenario, n_requests, seed, vocab, max_seq, tenants: 1 }
+    }
+
+    /// Spread requests across `tenants` fairness buckets.
+    pub fn with_tenants(mut self, tenants: u32) -> Self {
+        assert!(tenants >= 1, "need at least one tenant");
+        self.tenants = tenants;
+        self
     }
 }
 
@@ -62,6 +72,10 @@ fn prompt(rng: &mut SplitMix64, len: usize, vocab: usize) -> Vec<i32> {
 /// Generate the deterministic timed trace for `spec`.
 pub fn generate(spec: &WorkloadSpec) -> Vec<TimedRequest> {
     let mut rng = SplitMix64::new(spec.seed);
+    // fabric annotations (tenant, mixed-tier priority) come from a
+    // derived stream so the size/arrival stream above is byte-stable
+    // against pre-fabric traces of the same seed
+    let mut frng = SplitMix64::new(spec.seed ^ 0x7E77_A117);
     let mid = (spec.max_seq / 4).max(2);
     let mut out = Vec::with_capacity(spec.n_requests);
     for id in 0..spec.n_requests as u64 {
@@ -104,14 +118,28 @@ pub fn generate(spec: &WorkloadSpec) -> Vec<TimedRequest> {
                 SamplingParams::greedy(),
             ),
         };
+        let tenant = frng.below(spec.tenants.max(1) as usize) as u32;
+        // scheduling tier per scenario: chat turns are interactive,
+        // long-prompt tails are offline batch work, the mixed
+        // scenario spreads across all three tiers
+        let priority = match spec.scenario {
+            Scenario::ChatEarlyEos { .. } => Priority::Interactive,
+            Scenario::LongPromptTail { .. } => Priority::Batch,
+            Scenario::MixedLengths { .. } => {
+                match frng.below(3) {
+                    0 => Priority::Interactive,
+                    1 => Priority::Standard,
+                    _ => Priority::Batch,
+                }
+            }
+            _ => Priority::Standard,
+        };
         out.push(TimedRequest {
             at,
-            req: Request {
-                id,
-                prompt: prompt(&mut rng, plen, spec.vocab),
-                max_new_tokens: max_new.max(1),
-                params,
-            },
+            req: Request::new(id, prompt(&mut rng, plen, spec.vocab),
+                              max_new.max(1), params)
+                .with_tenant(tenant)
+                .with_priority(priority),
         });
     }
     out
@@ -172,6 +200,50 @@ mod tests {
         assert!(t.iter().any(|r| r.req.prompt.len() >= 62),
                 "expected at least one near/over-context prompt");
         assert!(t.iter().any(|r| r.req.prompt.len() < 20));
+    }
+
+    #[test]
+    fn tenants_and_priorities_annotate_deterministically() {
+        // default: single tenant, scenario-typed priorities
+        let t = generate(&spec(Scenario::ChatEarlyEos { rate: 10.0 }));
+        assert!(t.iter().all(|r| r.req.tenant == 0));
+        assert!(t.iter().all(|r| {
+            r.req.priority == Priority::Interactive
+        }));
+        let t = generate(&spec(Scenario::LongPromptTail {
+            rate: 10.0,
+        }));
+        assert!(t.iter().all(|r| r.req.priority == Priority::Batch));
+
+        // multi-tenant: every bucket shows up, assignment is stable
+        let s = spec(Scenario::MixedLengths { rate: 10.0 })
+            .with_tenants(4);
+        let a = generate(&s);
+        let b = generate(&s);
+        for t in 0..4u32 {
+            assert!(a.iter().any(|r| r.req.tenant == t),
+                    "tenant {t} never drawn");
+        }
+        for p in Priority::ALL {
+            assert!(a.iter().any(|r| r.req.priority == p),
+                    "{} never drawn", p.name());
+        }
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.req.tenant, y.req.tenant);
+            assert_eq!(x.req.priority, y.req.priority);
+        }
+
+        // the size/arrival stream is byte-stable against the
+        // single-tenant trace of the same seed (annotations draw
+        // from a derived stream)
+        let single = generate(&spec(Scenario::MixedLengths {
+            rate: 10.0,
+        }));
+        for (x, y) in a.iter().zip(&single) {
+            assert_eq!(x.at, y.at);
+            assert_eq!(x.req.prompt, y.req.prompt);
+            assert_eq!(x.req.max_new_tokens, y.req.max_new_tokens);
+        }
     }
 
     #[test]

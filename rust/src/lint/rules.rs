@@ -98,6 +98,8 @@ const ITER_SCOPE: &[&str] = &[
 /// Exact files forming the decode-tick / kernel hot path for [`PANIC`].
 const HOT_PATHS: &[&str] = &[
     "rust/src/coordinator/batcher.rs",
+    "rust/src/coordinator/replica.rs",
+    "rust/src/coordinator/router.rs",
     "rust/src/runtime/sim.rs",
     "rust/src/runtime/engine.rs",
     "rust/src/model/sampling.rs",

@@ -29,8 +29,9 @@ use exaq_repro::util::error::{anyhow, bail, Result};
 
 use exaq_repro::calib;
 use exaq_repro::coordinator::{serve_trace, serve_until_drained,
-                              workload, Request, Scenario, ServeConfig,
-                              WorkloadSpec};
+                              workload, Fabric, FabricConfig, Request,
+                              RouterConfig, Scenario, ServeConfig,
+                              TimedRequest, WorkloadSpec};
 use exaq_repro::cost::{GemmPrecision, MachineModel, TransformerShape};
 use exaq_repro::eval::{eval_task, family_world_seed, mean_std, World,
                        ALL_TASKS};
@@ -420,12 +421,8 @@ fn cmd_generate(args: &Args) -> Result<()> {
         c_vec,
         decode_batch: 8,
     };
-    let req = Request {
-        id: 0,
-        prompt: tok.encode(&prompt)?,
-        max_new_tokens: max_new,
-        params: SamplingParams::greedy(),
-    };
+    let req = Request::new(0, tok.encode(&prompt)?, max_new,
+                           SamplingParams::greedy());
     let (mut resp, wall, _) =
         serve_until_drained(&mut engine, &cfg, vec![req],
                             Rc::new(WallClock::new()))?;
@@ -453,13 +450,13 @@ fn cmd_serve_demo(args: &Args) -> Result<()> {
         .map(|id| {
             let inst = exaq_repro::eval::Task::Completion
                 .generate(&world, &mut rng);
-            Request {
+            Request::new(
                 id,
-                prompt: inst.prompt.iter()
+                inst.prompt.iter()
                     .map(|w| tok.id(w).unwrap()).collect(),
-                max_new_tokens: 16,
-                params: SamplingParams::greedy(),
-            }
+                16,
+                SamplingParams::greedy(),
+            )
         })
         .collect();
     let cfg = ServeConfig { model, quant, c_vec, decode_batch: 8 };
@@ -470,19 +467,23 @@ fn cmd_serve_demo(args: &Args) -> Result<()> {
     println!("served {} requests, {toks} tokens in {wall:.2}s \
               ({:.1} tok/s)", resps.len(), toks as f64 / wall);
     println!("p50 ttft {:.3}s  p50 latency {:.3}s  mean occupancy {:.2}",
-             sched.metrics.ttft.quantile(0.5),
-             sched.metrics.total_latency.quantile(0.5),
-             sched.metrics.mean_occupancy());
+             sched.metrics().ttft.quantile(0.5),
+             sched.metrics().total_latency.quantile(0.5),
+             sched.metrics().mean_occupancy());
     Ok(())
 }
 
 /// Deterministic serving stress run: scenario workload -> SimBackend
 /// -> real Scheduler on a virtual clock. Needs no artifacts; the same
-/// seed always prints the same numbers.
+/// seed always prints the same numbers. With `--replicas N` (N > 1)
+/// the trace runs through the router + N-replica fabric instead of
+/// the single scheduler, printing per-replica occupancy/TTFT columns.
 fn cmd_stress(args: &Args) -> Result<()> {
     let n = args.get_usize("requests", 1000);
     let seed = args.get_usize("seed", 7) as u64;
     let decode_batch = args.get_usize("decode-batch", 8);
+    let replicas = args.get_usize("replicas", 1);
+    let tenants = args.get_usize("tenants", 1).max(1) as u32;
     let rate = args.get_f64("rate", 200.0);
     let scenario = match args.get("scenario", "steady").as_str() {
         "steady" => Scenario::Steady { rate },
@@ -508,8 +509,8 @@ fn cmd_stress(args: &Args) -> Result<()> {
         ..SimConfig::default()
     };
     let spec = WorkloadSpec::new(scenario, n, seed, sim_cfg.vocab,
-                                 sim_cfg.max_seq);
-    let mut sim = SimBackend::new(sim_cfg, clock.clone());
+                                 sim_cfg.max_seq)
+        .with_tenants(tenants);
     let cfg = ServeConfig {
         model: "sim".into(),
         quant: QuantMode::None,
@@ -517,6 +518,11 @@ fn cmd_stress(args: &Args) -> Result<()> {
         decode_batch,
     };
     let trace = workload::generate(&spec);
+    if replicas > 1 {
+        return stress_fabric(args, n, seed, decode_batch, replicas,
+                             &sim_cfg, &cfg, trace);
+    }
+    let mut sim = SimBackend::new(sim_cfg, clock.clone());
     let host0 = Stopwatch::start();
     let (resps, sim_secs, sched) =
         serve_trace(&mut sim, &cfg, trace, clock)?;
@@ -527,7 +533,7 @@ fn cmd_stress(args: &Args) -> Result<()> {
               resps.len());
     }
     let toks: usize = resps.iter().map(|r| r.tokens.len()).sum();
-    let m = &sched.metrics;
+    let m = sched.metrics();
     let mut t = Table::new(
         &format!("Serving stress — scenario {}, {n} requests, \
                   decode batch {decode_batch}, seed {seed}",
@@ -550,6 +556,85 @@ fn cmd_stress(args: &Args) -> Result<()> {
     t.row(&["max latency (s)".into(),
             fnum(m.total_latency.max(), 5)]);
     println!("{}", t.to_markdown());
+    Ok(())
+}
+
+/// Multi-replica leg of `repro stress`: the same trace through the
+/// router + N-replica fabric, with an aggregate table plus
+/// per-replica occupancy/TTFT columns.
+#[allow(clippy::too_many_arguments)]
+fn stress_fabric(
+    args: &Args, n: usize, seed: u64, decode_batch: usize,
+    replicas: usize, sim_cfg: &SimConfig, serve: &ServeConfig,
+    trace: Vec<TimedRequest>,
+) -> Result<()> {
+    let fab_cfg = FabricConfig {
+        serve: serve.clone(),
+        router: RouterConfig {
+            max_queue: args.get_usize("max-queue", 0),
+            preemption: args.get("preemption", "on") != "off",
+            seed,
+        },
+        collect_stream: false,
+    };
+    let mk_cfg = sim_cfg.clone();
+    let mut fab = Fabric::new(replicas, fab_cfg, |_, clock| {
+        Ok(SimBackend::new(mk_cfg.clone(), clock))
+    })?;
+    let host0 = Stopwatch::start();
+    let (resps, sim_secs) = fab.run_trace(trace)?;
+    let host_secs = host0.seconds();
+    let fleet = fab.fleet_metrics();
+    if resps.len() + fleet.rejected as usize != n {
+        bail!("fabric run lost requests: {} responses + {} rejected \
+               of {n}", resps.len(), fleet.rejected);
+    }
+    let toks: usize = resps.iter().map(|r| r.tokens.len()).sum();
+    let mut t = Table::new(
+        &format!("Serving fabric — scenario {}, {n} requests, \
+                  {replicas} replicas, decode batch {decode_batch}, \
+                  seed {seed}",
+                 args.get("scenario", "steady")),
+        &["metric", "value"]);
+    t.row(&["simulated seconds".into(), fnum(sim_secs, 4)]);
+    t.row(&["simulated tok/s".into(),
+            fnum(toks as f64 / sim_secs.max(1e-12), 1)]);
+    t.row(&["host seconds".into(), fnum(host_secs, 3)]);
+    t.row(&["prefills".into(), fleet.prefills.to_string()]);
+    t.row(&["decode steps".into(), fleet.decode_steps.to_string()]);
+    t.row(&["mean batch occupancy".into(),
+            fnum(fleet.mean_occupancy(), 2)]);
+    t.row(&["preemptions".into(), fleet.preemptions.to_string()]);
+    t.row(&["resumes".into(), fleet.resumes.to_string()]);
+    t.row(&["rejected".into(), fleet.rejected.to_string()]);
+    t.row(&["timed out".into(), fleet.timed_out.to_string()]);
+    t.row(&["p50 ttft (s)".into(),
+            fnum(fleet.ttft.quantile(0.5), 5)]);
+    t.row(&["p99 ttft (s)".into(),
+            fnum(fleet.ttft.quantile(0.99), 5)]);
+    t.row(&["p50 latency (s)".into(),
+            fnum(fleet.total_latency.quantile(0.5), 5)]);
+    t.row(&["p99 latency (s)".into(),
+            fnum(fleet.total_latency.quantile(0.99), 5)]);
+    t.row(&["max latency (s)".into(),
+            fnum(fleet.total_latency.max(), 5)]);
+    println!("{}", t.to_markdown());
+
+    let mut pr = Table::new(
+        "Per-replica",
+        &["replica", "requests done", "prefills", "decode steps",
+          "occupancy", "p50 ttft (s)", "p99 ttft (s)"]);
+    for i in 0..fab.n_replicas() {
+        let m = fab.replica(i).metrics();
+        pr.row(&[i.to_string(),
+                 m.requests_done.to_string(),
+                 m.prefills.to_string(),
+                 m.decode_steps.to_string(),
+                 fnum(m.mean_occupancy(), 2),
+                 fnum(m.ttft.quantile(0.5), 5),
+                 fnum(m.ttft.quantile(0.99), 5)]);
+    }
+    println!("{}", pr.to_markdown());
     Ok(())
 }
 

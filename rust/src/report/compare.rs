@@ -24,7 +24,7 @@ pub const DEFAULT_THRESHOLD: f64 = 0.10;
 /// this order; absent fields are skipped so schemas can differ).
 pub const KEY_FIELDS: &[&str] = &[
     "kind", "scenario", "rows", "len", "bits", "group", "kernel",
-    "mode", "d_head",
+    "mode", "d_head", "replicas", "replica",
 ];
 
 /// Lower-is-better timing metrics eligible for the gate. Derived

@@ -104,6 +104,22 @@ impl Default for SimConfig {
 }
 
 impl SimConfig {
+    /// Smallest model that still exercises every serving path
+    /// (truncation, multi-token decode, attention planes): the
+    /// million-request fabric suite uses this so a full storm fits in
+    /// seconds of host time.
+    pub fn tiny() -> Self {
+        Self {
+            n_layers: 1,
+            n_heads: 1,
+            head_dim: 4,
+            d_ff: 8,
+            max_seq: 16,
+            vocab: 16,
+            ..Self::default()
+        }
+    }
+
     fn d_model(&self) -> usize {
         self.n_heads * self.head_dim
     }

@@ -1,0 +1,764 @@
+//! Fabric stress suite: the router + N-replica serving fabric driven
+//! by the deterministic `SimBackend` on per-replica virtual clocks.
+//!
+//! The headline test (`million_request_storm_*`, `#[ignore]`d for
+//! plain `cargo test`, run by CI's fabric-stress job via
+//! `--include-ignored`) pushes one million simulated requests across
+//! four replicas and asserts the run is bit-identical when repeated:
+//! same response digest, same latency percentiles, same per-replica
+//! and per-tenant counts. The always-on tests cover the same
+//! invariants at smoke size plus the behavioural edges: preemption
+//! without token loss, cancellation and deadline reconciliation,
+//! admission control, tenant fairness, token streaming, and greedy
+//! stream invariance across replica counts and host thread counts.
+//!
+//! `EXAQ_FABRIC_REQUESTS` overrides the storm size.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::rc::Rc;
+
+use exaq_repro::coordinator::{
+    workload, Assignment, Fabric, FabricConfig, FinishReason, Metrics,
+    Priority, Replica, Request, Response, RouterConfig, Scenario,
+    ServeConfig, TimedRequest, WorkloadSpec, NO_REPLICA,
+};
+use exaq_repro::model::SamplingParams;
+use exaq_repro::runtime::{QuantMode, SimBackend, SimConfig};
+use exaq_repro::util::clock::{Clock, VirtualClock};
+use exaq_repro::util::error::Result;
+
+const TENANTS: u32 = 4;
+
+fn mk_fabric(
+    replicas: usize, sim_cfg: &SimConfig, decode_batch: usize,
+    router: RouterConfig, collect_stream: bool,
+) -> Result<Fabric<SimBackend>> {
+    let cfg = FabricConfig {
+        serve: ServeConfig {
+            model: "sim".into(),
+            quant: QuantMode::None,
+            c_vec: None,
+            decode_batch,
+        },
+        router,
+        collect_stream,
+    };
+    let mk = sim_cfg.clone();
+    Fabric::new(replicas, cfg, move |_, clock| {
+        Ok(SimBackend::new(mk.clone(), clock))
+    })
+}
+
+/// Drain a fabric that has already been fed via `submit`.
+fn drain(fab: &mut Fabric<SimBackend>, out: &mut Vec<Response>) {
+    for _ in 0..100_000 {
+        if !fab.has_work() {
+            return;
+        }
+        fab.step(None, out).expect("fabric step");
+    }
+    panic!("fabric failed to drain");
+}
+
+// ---- deterministic response digest ------------------------------
+
+fn fnv(h: &mut u64, x: u64) {
+    let mut v = x;
+    for _ in 0..8 {
+        *h ^= v & 0xFF;
+        *h = h.wrapping_mul(0x0000_0100_0000_01B3);
+        v >>= 8;
+    }
+}
+
+fn finish_code(f: FinishReason) -> u64 {
+    match f {
+        FinishReason::Done => 0,
+        FinishReason::Cancelled => 1,
+        FinishReason::TimedOut => 2,
+    }
+}
+
+/// FNV-1a over every observable field of one response. The storm
+/// folds these with a commutative sum, so the digest pins the full
+/// response set without buffering a million responses for sorting.
+fn response_hash(r: &Response) -> u64 {
+    let mut h = 0xCBF2_9CE4_8422_2325u64;
+    fnv(&mut h, r.id);
+    fnv(&mut h, r.prompt_len as u64);
+    fnv(&mut h, r.tokens.len() as u64);
+    for &t in &r.tokens {
+        fnv(&mut h, t as u64);
+    }
+    fnv(&mut h, r.ttft.to_bits());
+    fnv(&mut h, r.total_latency.to_bits());
+    fnv(&mut h, u64::from(r.tenant));
+    fnv(&mut h, r.priority.index() as u64);
+    fnv(&mut h, r.replica as u64);
+    fnv(&mut h, finish_code(r.finish));
+    fnv(&mut h, u64::from(r.preemptions));
+    h
+}
+
+// ---- the storm --------------------------------------------------
+
+/// Everything a storm run observes, floats pinned by bit pattern so
+/// two runs can be compared with `assert_eq!` — any nondeterminism in
+/// scheduling, sampling, preemption, or the clocks shows up here.
+#[derive(Debug, PartialEq, Eq)]
+struct StormStats {
+    n: usize,
+    digest: u64,
+    tokens_total: u64,
+    elapsed_bits: u64,
+    p50_ttft_bits: u64,
+    p99_ttft_bits: u64,
+    p50_latency_bits: u64,
+    p99_latency_bits: u64,
+    occupancy_bits: u64,
+    preemptions: u64,
+    resumes: u64,
+    per_replica_prefills: Vec<u64>,
+    per_replica_done: Vec<u64>,
+    per_replica_occupancy_bits: Vec<u64>,
+    per_tenant_done: Vec<u64>,
+}
+
+/// Run a mixed-scenario storm of `n` requests through a fresh fabric
+/// and fold every response into [`StormStats`], asserting the
+/// conservation invariants along the way.
+fn run_storm(
+    n: usize, replicas: usize, threads: usize, seed0: u64,
+) -> StormStats {
+    let sim_cfg = SimConfig { threads, ..SimConfig::tiny() };
+    let mut fab = mk_fabric(replicas, &sim_cfg, 8,
+                            RouterConfig::default(), false)
+        .expect("fabric builds");
+
+    // phase mix: every workload generator, the stochastic all-tier
+    // mixed scenario taking the largest share. Arrival rates are far
+    // above fleet capacity so every replica stays saturated.
+    let mut counts =
+        [n * 2 / 5, n / 4, n / 8, n / 8, 0usize];
+    counts[4] = n - counts[..4].iter().sum::<usize>();
+    let scenarios = [
+        Scenario::MixedLengths { rate: 10_000.0 },
+        Scenario::Steady { rate: 10_000.0 },
+        Scenario::Burst { n_bursts: 64, gap: 0.02 },
+        Scenario::ChatEarlyEos { rate: 10_000.0 },
+        Scenario::LongPromptTail { rate: 10_000.0 },
+    ];
+
+    let mut max_new = vec![0u8; n];
+    let mut tenant_of = vec![0u8; n];
+    let mut seen = vec![false; n];
+    let mut per_tenant_done = vec![0u64; TENANTS as usize];
+    let mut digest = 0u64;
+    let mut tokens_total = 0u64;
+    let mut elapsed = 0.0f64;
+    let mut base = 0u64;
+
+    for (phase, (scenario, &count)) in
+        scenarios.iter().zip(&counts).enumerate()
+    {
+        if count == 0 {
+            continue;
+        }
+        let spec = WorkloadSpec::new(
+            *scenario, count, seed0 + phase as u64, sim_cfg.vocab,
+            sim_cfg.max_seq,
+        )
+        .with_tenants(TENANTS);
+        let mut trace = workload::generate(&spec);
+        for tr in trace.iter_mut() {
+            tr.req.id += base;
+            let i = tr.req.id as usize;
+            max_new[i] = tr.req.max_new_tokens.min(255) as u8;
+            tenant_of[i] = tr.req.tenant as u8;
+        }
+        base += count as u64;
+
+        elapsed += fab
+            .run_trace_with(trace, |r| {
+                let i = r.id as usize;
+                assert!(!seen[i], "request {i} completed twice");
+                seen[i] = true;
+                assert_eq!(r.finish, FinishReason::Done,
+                           "request {i} did not run to completion");
+                assert!(!r.tokens.is_empty(),
+                        "request {i} got no tokens");
+                assert!(r.tokens.len() <= max_new[i] as usize,
+                        "request {i} overshot its budget");
+                assert_eq!(u64::from(r.tenant),
+                           u64::from(tenant_of[i]));
+                assert!(r.replica < replicas,
+                        "request {i} on phantom replica {}",
+                        r.replica);
+                assert!(r.ttft > 0.0);
+                assert!(r.total_latency >= r.ttft);
+                per_tenant_done[r.tenant as usize] += 1;
+                tokens_total += r.tokens.len() as u64;
+                digest = digest.wrapping_add(response_hash(&r));
+            })
+            .expect("storm phase runs");
+    }
+
+    assert!(seen.iter().all(|&s| s), "requests went missing");
+    let fleet = fab.fleet_metrics();
+    assert_eq!(fleet.requests_in, n as u64);
+    assert_eq!(fleet.requests_done, n as u64);
+    assert_eq!(fleet.rejected, 0);
+    assert_eq!(fleet.cancelled, 0);
+    assert_eq!(fleet.timed_out, 0);
+    assert_eq!(fleet.ttft.count(), n as u64);
+    assert_eq!(fleet.total_latency.count(), n as u64);
+    // token conservation: one token per prefill (fresh or resume),
+    // everything else from batched decode steps; a lost preemption
+    // or double-counted resume breaks one of these exactly
+    assert_eq!(fleet.prefills, n as u64 + fleet.resumes);
+    assert_eq!(tokens_total, fleet.decode_tokens + fleet.prefills);
+    assert_eq!(fleet.preemptions, fleet.resumes,
+               "evicted work must always resume");
+
+    let mut per_replica_prefills = Vec::new();
+    let mut per_replica_done = Vec::new();
+    let mut per_replica_occupancy_bits = Vec::new();
+    for i in 0..replicas {
+        let rep = fab.replica(i);
+        assert_eq!(rep.pool().in_use(), 0,
+                   "replica {i} leaked KV slots");
+        assert_eq!(rep.active_count(), 0);
+        assert_eq!(rep.queue_len(), 0);
+        assert!(rep.metrics().prefills > 0, "replica {i} never used");
+        per_replica_prefills.push(rep.metrics().prefills);
+        per_replica_done.push(rep.metrics().requests_done);
+        per_replica_occupancy_bits
+            .push(rep.metrics().mean_occupancy().to_bits());
+    }
+    let max_done = per_replica_done.iter().copied().max().unwrap_or(0);
+    let min_done = per_replica_done.iter().copied().min().unwrap_or(0);
+    assert!(max_done <= 4 * min_done + 64,
+            "fleet imbalance: {per_replica_done:?}");
+
+    let mean = n as f64 / f64::from(TENANTS);
+    for (t, &c) in per_tenant_done.iter().enumerate() {
+        assert!((c as f64 - mean).abs() <= 0.1 * mean + 64.0,
+                "tenant {t} served {c}, expected ~{mean:.0} +/- 10%");
+    }
+
+    let p50_ttft = fleet.ttft.quantile(0.5);
+    let p99_ttft = fleet.ttft.quantile(0.99);
+    let p50_lat = fleet.total_latency.quantile(0.5);
+    let p99_lat = fleet.total_latency.quantile(0.99);
+    assert!(p50_ttft > 0.0 && p50_ttft <= p99_ttft);
+    assert!(p50_lat > 0.0 && p50_lat <= p99_lat);
+    assert!(p99_lat >= p99_ttft,
+            "latency cannot be below ttft pointwise");
+    assert!(fleet.mean_occupancy() > 0.0);
+    assert!(elapsed > 0.0);
+
+    StormStats {
+        n,
+        digest,
+        tokens_total,
+        elapsed_bits: elapsed.to_bits(),
+        p50_ttft_bits: p50_ttft.to_bits(),
+        p99_ttft_bits: p99_ttft.to_bits(),
+        p50_latency_bits: p50_lat.to_bits(),
+        p99_latency_bits: p99_lat.to_bits(),
+        occupancy_bits: fleet.mean_occupancy().to_bits(),
+        preemptions: fleet.preemptions,
+        resumes: fleet.resumes,
+        per_replica_prefills,
+        per_replica_done,
+        per_replica_occupancy_bits,
+        per_tenant_done,
+    }
+}
+
+fn storm_n() -> usize {
+    std::env::var("EXAQ_FABRIC_REQUESTS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or(1_000_000)
+}
+
+/// The headline run: a million mixed requests across four replicas,
+/// twice, compared field by field down to float bit patterns.
+#[test]
+#[ignore = "million-request storm; CI runs it via --include-ignored"]
+fn million_request_storm_is_deterministic_across_runs() {
+    let n = storm_n();
+    let a = run_storm(n, 4, 0, 1);
+    let b = run_storm(n, 4, 0, 1);
+    assert_eq!(a, b, "the storm is not reproducible");
+}
+
+/// Always-on miniature of the storm: same invariants, smoke size.
+#[test]
+fn fabric_smoke_storm_is_deterministic() {
+    let a = run_storm(12_000, 4, 0, 1);
+    let b = run_storm(12_000, 4, 0, 1);
+    assert_eq!(a, b, "the smoke storm is not reproducible");
+}
+
+#[test]
+fn storms_reproduce_per_seed_and_diverge_across_seeds() {
+    let a1 = run_storm(2_000, 2, 0, 1);
+    let a2 = run_storm(2_000, 2, 0, 1);
+    let b = run_storm(2_000, 2, 0, 77);
+    assert_eq!(a1, a2);
+    assert_ne!(a1.digest, b.digest,
+               "different seeds produced identical storms");
+}
+
+/// `SimConfig::threads` moves host time only; every virtual-time
+/// observable — tokens, latencies, placement — must be bit-equal.
+#[test]
+fn virtual_time_is_invariant_to_host_worker_threads() {
+    let a = run_storm(3_000, 4, 1, 1);
+    let b = run_storm(3_000, 4, 7, 1);
+    assert_eq!(a, b, "worker threads leaked into virtual time");
+}
+
+// ---- replica-count invariance -----------------------------------
+
+fn greedy_burst(replicas: usize) -> (BTreeMap<u64, Vec<i32>>, f64) {
+    let sim_cfg = SimConfig::default();
+    let n = 600;
+    let spec = WorkloadSpec::new(
+        Scenario::Burst { n_bursts: 4, gap: 0.05 }, n, 11,
+        sim_cfg.vocab, sim_cfg.max_seq,
+    )
+    .with_tenants(3);
+    let trace = workload::generate(&spec);
+    let mut fab = mk_fabric(replicas, &sim_cfg, 8,
+                            RouterConfig::default(), false)
+        .expect("fabric builds");
+    let (resps, elapsed) =
+        fab.run_trace(trace).expect("burst runs");
+    assert_eq!(resps.len(), n);
+    (resps.into_iter().map(|r| (r.id, r.tokens)).collect(), elapsed)
+}
+
+/// Greedy sampling draws no randomness, so a request's token stream
+/// may not depend on which replica served it or how the batch was
+/// packed — while more replicas must still shorten simulated time.
+#[test]
+fn greedy_streams_are_invariant_across_replica_counts() {
+    let (one, t1) = greedy_burst(1);
+    let (four, t4) = greedy_burst(4);
+    assert_eq!(one, four,
+               "token streams depend on the replica count");
+    assert!(t4 < t1,
+            "4 replicas not faster than 1 ({t4} vs {t1})");
+}
+
+// ---- preemption -------------------------------------------------
+
+fn preemption_trace() -> Vec<TimedRequest> {
+    let mut trace = Vec::new();
+    // a wall of long batch decodes saturating both slots from t=0
+    for id in 0..8u64 {
+        trace.push(TimedRequest {
+            at: 0.0,
+            req: Request::new(id, vec![4 + id as i32, 5, 6], 10,
+                              SamplingParams::greedy())
+                .with_priority(Priority::Batch),
+        });
+    }
+    // interactive work lands just after the wall is in flight
+    for id in 100..104u64 {
+        trace.push(TimedRequest {
+            at: 0.001,
+            req: Request::new(id, vec![7, 8], 4,
+                              SamplingParams::greedy())
+                .with_priority(Priority::Interactive),
+        });
+    }
+    trace
+}
+
+fn run_preemption(
+    preemption: bool,
+) -> (BTreeMap<u64, Response>, Metrics) {
+    let sim_cfg = SimConfig::default();
+    let mut fab = mk_fabric(
+        1, &sim_cfg, 2,
+        RouterConfig { preemption, ..RouterConfig::default() },
+        false,
+    )
+    .expect("fabric builds");
+    let (resps, _) =
+        fab.run_trace(preemption_trace()).expect("trace runs");
+    assert_eq!(resps.len(), 12);
+    assert_eq!(fab.replica(0).pool().in_use(), 0);
+    let fleet = fab.fleet_metrics();
+    (resps.into_iter().map(|r| (r.id, r)).collect(), fleet)
+}
+
+#[test]
+fn preemption_frees_interactive_capacity_without_losing_tokens() {
+    let (on, m_on) = run_preemption(true);
+    let (off, m_off) = run_preemption(false);
+
+    assert!(m_on.preemptions >= 1, "nothing was preempted");
+    assert_eq!(m_on.resumes, m_on.preemptions,
+               "evicted work must always resume");
+    assert_eq!(m_off.preemptions, 0);
+    assert_eq!(m_off.resumes, 0);
+    assert!(on.values().any(|r| r.preemptions > 0),
+            "no response records its eviction");
+
+    // resume correctness: greedy streams are bit-identical whether
+    // or not the request was evicted and re-prefilled mid-decode
+    for (id, r) in &on {
+        let o = &off[id];
+        assert_eq!(r.finish, FinishReason::Done);
+        assert_eq!(o.finish, FinishReason::Done);
+        assert_eq!(r.tokens, o.tokens,
+                   "request {id} lost or changed tokens under \
+                    preemption");
+    }
+
+    // and the point of it all: interactive TTFT improves
+    let mean_ttft = |m: &BTreeMap<u64, Response>| {
+        let xs: Vec<f64> = m
+            .values()
+            .filter(|r| r.priority == Priority::Interactive)
+            .map(|r| r.ttft)
+            .collect();
+        assert_eq!(xs.len(), 4);
+        xs.iter().sum::<f64>() / xs.len() as f64
+    };
+    assert!(mean_ttft(&on) < mean_ttft(&off),
+            "preemption did not improve interactive TTFT");
+}
+
+// ---- cancellation -----------------------------------------------
+
+#[test]
+fn cancellation_reconciles_router_replica_and_kv_state() {
+    let sim_cfg = SimConfig::default();
+    let mut fab = mk_fabric(1, &sim_cfg, 2,
+                            RouterConfig::default(), false)
+        .expect("fabric builds");
+    let mut out = Vec::new();
+    for id in 0..12u64 {
+        assert!(fab.submit(Request::new(
+            id, vec![4 + id as i32, 5, 6], 12,
+            SamplingParams::greedy(),
+        )));
+    }
+
+    // cancel while still queued at the router: no replica, no tokens
+    assert!(fab.cancel(3, &mut out).expect("cancel runs"));
+    assert_eq!(out.len(), 1);
+    assert_eq!(out[0].id, 3);
+    assert_eq!(out[0].finish, FinishReason::Cancelled);
+    assert_eq!(out[0].replica, NO_REPLICA);
+    assert!(out[0].tokens.is_empty());
+    // unknown ids are reported, not silently swallowed
+    assert!(!fab.cancel(999, &mut out).expect("cancel runs"));
+
+    // run until something is in flight, then cancel it mid-decode
+    for _ in 0..16 {
+        fab.step(None, &mut out).expect("fabric step");
+        if fab.replica(0).active_count() > 0 {
+            break;
+        }
+    }
+    assert!(fab.replica(0).active_count() > 0,
+            "no in-flight work to cancel");
+    // dispatch is FIFO, so the smallest unfinished (uncancelled) id
+    // is in flight right now
+    let done: BTreeSet<u64> = out.iter().map(|r| r.id).collect();
+    let victim = (0..12u64)
+        .find(|id| *id != 3 && !done.contains(id))
+        .expect("someone is still running");
+    let before = out.len();
+    assert!(fab.cancel(victim, &mut out).expect("cancel runs"));
+    let c = &out[before];
+    assert_eq!(c.id, victim);
+    assert_eq!(c.finish, FinishReason::Cancelled);
+    assert_eq!(c.replica, 0);
+    assert!(!c.tokens.is_empty(),
+            "mid-decode cancel must keep the tokens so far");
+
+    drain(&mut fab, &mut out);
+
+    // exactly one terminal response per request; KV fully returned
+    assert_eq!(out.len(), 12);
+    let ids: BTreeSet<u64> = out.iter().map(|r| r.id).collect();
+    assert_eq!(ids.len(), 12);
+    let cancelled = out
+        .iter()
+        .filter(|r| r.finish == FinishReason::Cancelled)
+        .count();
+    assert_eq!(cancelled, 2);
+    assert_eq!(fab.router_metrics().cancelled, 1);
+    assert_eq!(fab.replica(0).metrics().cancelled, 1);
+    let fleet = fab.fleet_metrics();
+    assert_eq!(fleet.cancelled, 2);
+    assert_eq!(fleet.requests_done, 10);
+    // only clean completions feed the latency histograms
+    assert_eq!(fleet.ttft.count(), 10);
+    assert_eq!(fab.replica(0).pool().in_use(), 0);
+    assert_eq!(fab.replica(0).active_count(), 0);
+    assert_eq!(fab.router().queued_len(), 0);
+}
+
+/// Direct replica-level coverage: cancelling work that is assigned
+/// but not yet admitted, and the fresh-vs-resume accounting split.
+#[test]
+fn replica_queue_cancel_and_resume_bookkeeping() {
+    let sim_cfg = SimConfig::default();
+    let clock: Rc<dyn Clock> = Rc::new(VirtualClock::new());
+    let sim = SimBackend::new(sim_cfg, clock.clone());
+    let mut rep = Replica::new(0, &sim, "sim", QuantMode::None, None,
+                               2, clock)
+        .expect("replica builds");
+    rep.assign(Assignment::fresh(
+        Request::new(7, vec![4, 5], 4, SamplingParams::greedy()),
+        0.0,
+    ));
+    assert_eq!(rep.queue_len(), 1);
+    assert_eq!(rep.metrics().requests_in, 1);
+
+    let mut out = Vec::new();
+    assert!(rep.cancel(7, &mut out).expect("cancel runs"));
+    assert!(!rep.cancel(7, &mut out).expect("cancel runs"));
+    assert_eq!(out.len(), 1);
+    assert_eq!(out[0].finish, FinishReason::Cancelled);
+    assert_eq!(out[0].replica, 0);
+    assert!(out[0].tokens.is_empty());
+    assert!(!rep.has_work());
+    assert_eq!(rep.metrics().cancelled, 1);
+    assert_eq!(rep.pool().in_use(), 0);
+
+    // a resumed assignment counts as a resume, not a fresh request
+    let mut asg = Assignment::fresh(
+        Request::new(8, vec![4, 5], 4, SamplingParams::greedy()),
+        0.0,
+    );
+    asg.preemptions = 1;
+    rep.assign(asg);
+    assert_eq!(rep.metrics().requests_in, 1);
+    assert_eq!(rep.metrics().resumes, 1);
+}
+
+// ---- deadlines --------------------------------------------------
+
+#[test]
+fn deadlines_expire_queued_and_in_flight_work() {
+    // queued at the router: capacity 1 is taken by id 0, so id 1
+    // expires at the front door without ever reaching a replica
+    let sim_cfg = SimConfig::default();
+    let mut fab = mk_fabric(1, &sim_cfg, 1,
+                            RouterConfig::default(), false)
+        .expect("fabric builds");
+    let trace = vec![
+        TimedRequest {
+            at: 0.0,
+            req: Request::new(0, vec![4, 5], 6,
+                              SamplingParams::greedy()),
+        },
+        TimedRequest {
+            at: 0.0,
+            req: Request::new(1, vec![6, 7], 6,
+                              SamplingParams::greedy())
+                .with_timeout(1e-9),
+        },
+    ];
+    let (resps, _) = fab.run_trace(trace).expect("trace runs");
+    assert_eq!(resps.len(), 2);
+    let r1 = resps.iter().find(|r| r.id == 1).expect("id 1 exits");
+    assert_eq!(r1.finish, FinishReason::TimedOut);
+    assert_eq!(r1.replica, NO_REPLICA);
+    assert!(r1.tokens.is_empty());
+    assert_eq!(r1.ttft, 0.0, "never produced a token");
+    assert!(r1.total_latency > 0.0);
+    assert_eq!(fab.router_metrics().timed_out, 1);
+    assert_eq!(fab.replica(0).metrics().timed_out, 0);
+
+    // in flight: a deadline shorter than any simulated step expires
+    // every admitted request right after its prefill, keeping the
+    // tokens sampled so far and returning the KV slot
+    let mut fab = mk_fabric(1, &sim_cfg, 8,
+                            RouterConfig::default(), false)
+        .expect("fabric builds");
+    let trace: Vec<TimedRequest> = (0..8u64)
+        .map(|id| TimedRequest {
+            at: 0.0,
+            req: Request::new(id, vec![4 + id as i32, 5], 8,
+                              SamplingParams::greedy())
+                .with_timeout(1e-9),
+        })
+        .collect();
+    let (resps, _) = fab.run_trace(trace).expect("trace runs");
+    assert_eq!(resps.len(), 8);
+    let timed: Vec<&Response> = resps
+        .iter()
+        .filter(|r| r.finish == FinishReason::TimedOut)
+        .collect();
+    // an organic early EOS may finish a request at its prefill, but
+    // the deadline must catch (at least) the overwhelming rest
+    assert!(timed.len() >= 4,
+            "only {}/8 hit the in-flight deadline", timed.len());
+    for r in &timed {
+        assert_eq!(r.replica, 0);
+        assert!(!r.tokens.is_empty(),
+                "timed-out request {} lost its partial tokens",
+                r.id);
+        assert!(r.ttft > 0.0);
+    }
+    let fleet = fab.fleet_metrics();
+    assert_eq!(fleet.timed_out, timed.len() as u64);
+    assert_eq!(
+        fleet.requests_done + fleet.timed_out,
+        8,
+        "every request exits exactly once"
+    );
+    assert_eq!(fleet.ttft.count(), fleet.requests_done);
+    assert_eq!(fab.replica(0).pool().in_use(), 0);
+}
+
+// ---- admission control ------------------------------------------
+
+#[test]
+fn admission_control_rejects_when_the_router_is_full() {
+    let sim_cfg = SimConfig::default();
+    let mut fab = mk_fabric(
+        1, &sim_cfg, 2,
+        RouterConfig { max_queue: 2, ..RouterConfig::default() },
+        false,
+    )
+    .expect("fabric builds");
+    let mut accepted = 0;
+    for id in 0..5u64 {
+        if fab.submit(Request::new(id, vec![4, 5], 3,
+                                   SamplingParams::greedy()))
+        {
+            accepted += 1;
+        }
+    }
+    assert_eq!(accepted, 2);
+    assert_eq!(fab.router_metrics().rejected, 3);
+
+    let mut out = Vec::new();
+    drain(&mut fab, &mut out);
+    assert_eq!(out.len(), 2);
+    let fleet = fab.fleet_metrics();
+    assert_eq!(out.len() as u64 + fleet.rejected, 5,
+               "accounting must cover every submit");
+    assert_eq!(fleet.requests_done, 2);
+}
+
+// ---- token streaming --------------------------------------------
+
+#[test]
+fn token_stream_events_match_final_responses() {
+    let sim_cfg = SimConfig::default();
+    let spec = WorkloadSpec::new(
+        Scenario::Steady { rate: 200.0 }, 40, 5, sim_cfg.vocab,
+        sim_cfg.max_seq,
+    );
+    let trace = workload::generate(&spec);
+    let arrivals: BTreeMap<u64, f64> =
+        trace.iter().map(|t| (t.req.id, t.at)).collect();
+    let mut fab = mk_fabric(1, &sim_cfg, 8,
+                            RouterConfig::default(), true)
+        .expect("fabric builds");
+    let (resps, _) = fab.run_trace(trace).expect("trace runs");
+    assert_eq!(resps.len(), 40);
+
+    let events = fab.take_stream();
+    let total: usize = resps.iter().map(|r| r.tokens.len()).sum();
+    assert_eq!(events.len(), total,
+               "one stream event per sampled token");
+    let mut per_id: BTreeMap<u64, Vec<(f64, i32, usize)>> =
+        BTreeMap::new();
+    for ev in &events {
+        per_id.entry(ev.id).or_default()
+            .push((ev.t, ev.token, ev.replica));
+    }
+    for r in &resps {
+        let evs = per_id.get(&r.id).expect("request streamed");
+        let toks: Vec<i32> = evs.iter().map(|e| e.1).collect();
+        assert_eq!(toks, r.tokens,
+                   "stream diverged from final tokens on {}", r.id);
+        assert!(evs.iter().all(|e| e.2 == r.replica));
+        // the first event's clock second IS the ttft measurement
+        let at = arrivals[&r.id];
+        assert_eq!(evs[0].0 - at, r.ttft,
+                   "first-token event disagrees with ttft on {}",
+                   r.id);
+        let mut prev = 0.0;
+        for &(t, _, _) in evs {
+            assert!(t >= prev, "stream went back in time on {}",
+                    r.id);
+            prev = t;
+        }
+    }
+}
+
+// ---- fairness and placement -------------------------------------
+
+#[test]
+fn tenant_round_robin_is_fair_within_a_tier() {
+    // tenant 0 floods the router before tenants 1..3 show up; the
+    // very first decode batch must still contain all four tenants
+    let sim_cfg = SimConfig::default();
+    let mut fab = mk_fabric(1, &sim_cfg, 4,
+                            RouterConfig::default(), false)
+        .expect("fabric builds");
+    for id in 0..8u64 {
+        assert!(fab.submit(Request::new(
+            id, vec![4, 5], 4, SamplingParams::greedy(),
+        )));
+    }
+    for (id, tenant) in [(100u64, 1u32), (101, 2), (102, 3)] {
+        assert!(fab.submit(
+            Request::new(id, vec![4, 5], 4,
+                         SamplingParams::greedy())
+                .with_tenant(tenant),
+        ));
+    }
+    let mut out = Vec::new();
+    drain(&mut fab, &mut out);
+    assert_eq!(out.len(), 11);
+    let mut first: Vec<u32> =
+        out[..4].iter().map(|r| r.tenant).collect();
+    first.sort_unstable();
+    assert_eq!(first, vec![0, 1, 2, 3],
+               "tenant 0's flood starved the others");
+}
+
+fn replica_map(n: usize) -> BTreeMap<u64, usize> {
+    let sim_cfg = SimConfig::tiny();
+    let spec = WorkloadSpec::new(
+        Scenario::MixedLengths { rate: 10_000.0 }, n, 13,
+        sim_cfg.vocab, sim_cfg.max_seq,
+    )
+    .with_tenants(TENANTS);
+    let trace = workload::generate(&spec);
+    let mut fab = mk_fabric(4, &sim_cfg, 8,
+                            RouterConfig::default(), false)
+        .expect("fabric builds");
+    let (resps, _) = fab.run_trace(trace).expect("trace runs");
+    assert_eq!(resps.len(), n);
+    resps.into_iter().map(|r| (r.id, r.replica)).collect()
+}
+
+/// Placement is a pure function of (seed, arrival order): rebuilding
+/// the fabric and replaying the identical trace lands every request
+/// on the identical replica.
+#[test]
+fn replica_assignment_is_a_pure_function_of_the_trace() {
+    let a = replica_map(1_500);
+    let b = replica_map(1_500);
+    assert_eq!(a, b, "replica placement is not reproducible");
+    let used: BTreeSet<usize> = a.values().copied().collect();
+    assert!(used.len() >= 2, "the fleet never spread out: {used:?}");
+}

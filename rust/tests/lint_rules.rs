@@ -147,6 +147,32 @@ fn attention_plane_is_inside_the_kernel_scopes() {
 }
 
 #[test]
+fn fabric_router_and_replica_are_hot_path_scoped() {
+    // the serving fabric's router + replica layers sit on the decode
+    // tick: panics are banned there exactly like in the batcher...
+    let v = single("rust/src/coordinator/router.rs",
+                   "fn f(x: Option<u32>) -> u32 {\n\
+                    \x20   x.unwrap()\n}\n");
+    assert_eq!(v.rule, "no-panic-hot-path");
+    assert_eq!((v.line, v.col), (2, 7));
+    let v = single("rust/src/coordinator/replica.rs",
+                   "fn f(x: Option<u32>) -> u32 {\n\
+                    \x20   x.expect(\"boom\")\n}\n");
+    assert_eq!(v.rule, "no-panic-hot-path");
+    assert_eq!(v.line, 2);
+    // ...and the coordinator/ prefix scope already bans unordered
+    // maps in any new fabric file (replica assignment must iterate
+    // deterministically)
+    let v = single("rust/src/coordinator/router.rs",
+                   "use std::collections::HashMap;\n");
+    assert_eq!(v.rule, "deterministic-iteration");
+    assert_eq!((v.line, v.col), (1, 23));
+    let v = single("rust/src/coordinator/replica.rs",
+                   "type S = std::collections::HashSet<u64>;\n");
+    assert_eq!(v.rule, "deterministic-iteration");
+}
+
+#[test]
 fn thread_discipline_spares_the_sanctioned_homes() {
     // util::pool is the one place allowed to spawn scoped threads
     clean("rust/src/util/pool.rs",

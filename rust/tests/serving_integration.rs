@@ -58,7 +58,7 @@ fn steady_thousand_requests_complete_with_clean_accounting() {
     }
     assert!(wall > 0.0, "virtual time must have advanced");
 
-    let m = &sched.metrics;
+    let m = sched.metrics();
     assert_eq!(m.requests_in, n as u64);
     assert_eq!(m.requests_done, n as u64);
     assert_eq!(m.prefills, n as u64, "batch-1 prefill per request");
@@ -120,7 +120,7 @@ fn burst_admission_is_fifo_and_saturates_the_batch() {
     }
 
     // with 128 pending and 8 slots, decode must run near-full
-    let occ = sched.metrics.mean_occupancy();
+    let occ = sched.metrics().mean_occupancy();
     assert!(occ > 5.0, "mean occupancy {occ} too low under burst");
     assert!(occ <= 8.0);
 }
@@ -130,7 +130,7 @@ fn virtual_clock_latency_percentiles_are_coherent() {
     let (_, _, sched) =
         run(Scenario::Burst { n_bursts: 4, gap: 0.05 }, 256, 41, 0.0,
             8);
-    for h in [&sched.metrics.ttft, &sched.metrics.total_latency] {
+    for h in [&sched.metrics().ttft, &sched.metrics().total_latency] {
         let mut prev = 0.0;
         for q in [0.1, 0.5, 0.9, 0.99, 1.0] {
             let v = h.quantile(q);
@@ -143,8 +143,8 @@ fn virtual_clock_latency_percentiles_are_coherent() {
     }
     // queueing must be visible: the p99 TTFT of a 64-deep burst is far
     // above the unqueued prefill latency (~6 ms simulated)
-    assert!(sched.metrics.ttft.quantile(0.99)
-            > sched.metrics.ttft.quantile(0.1));
+    assert!(sched.metrics().ttft.quantile(0.99)
+            > sched.metrics().ttft.quantile(0.1));
 }
 
 #[test]
@@ -204,10 +204,10 @@ fn sparse_arrivals_idle_the_scheduler_between_requests() {
     assert!(wall >= (n - 1) as f64 / rate,
             "wall {wall} shorter than the arrival span");
     // no queueing: every request is prefilled right after it arrives
-    let p99 = sched.metrics.ttft.quantile(0.99);
+    let p99 = sched.metrics().ttft.quantile(0.99);
     assert!(p99 < 0.05, "unqueued p99 ttft {p99} too high");
     // and the decode batch stays mostly empty
-    let occ = sched.metrics.mean_occupancy();
+    let occ = sched.metrics().mean_occupancy();
     assert!(occ < 2.0, "sparse arrivals should not batch up ({occ})");
 }
 
@@ -220,16 +220,16 @@ fn slot_accounting_holds_on_every_tick() {
         &sim, "sim", QuantMode::None, None, 8, clock.clone())
         .unwrap();
     for id in 0..50u64 {
-        sched.submit(Request {
+        sched.submit(Request::new(
             id,
-            prompt: vec![4 + (id % 13) as i32; 3 + (id % 5) as usize],
-            max_new_tokens: 2 + (id % 7) as usize,
-            params: if id % 2 == 0 {
+            vec![4 + (id % 13) as i32; 3 + (id % 5) as usize],
+            2 + (id % 7) as usize,
+            if id % 2 == 0 {
                 SamplingParams::greedy()
             } else {
                 SamplingParams::exaq(0.9, 2, -4.0)
             },
-        });
+        ));
     }
     let mut done = 0usize;
     let mut ticks = 0usize;
@@ -244,5 +244,5 @@ fn slot_accounting_holds_on_every_tick() {
                    "tick {ticks}: slots leaked");
     }
     assert_eq!(done, 50);
-    assert_eq!(sched.metrics.requests_done, 50);
+    assert_eq!(sched.metrics().requests_done, 50);
 }
