@@ -8,6 +8,17 @@
 //! fused beats two-step wall time at M = 2, and the packed plane is
 //! strictly smaller than the dense one at every M.
 //!
+//! The streaming columns time `StreamingAttention` on the same
+//! inputs: `streaming_us` drives `attend_scores` (identical work to
+//! the fused path, so the delta isolates the O(1)-score-memory
+//! restructuring), `streaming_qkv_us` drives the full one-pass Q/K/V
+//! front (QK^T fused into the tile loop — no score plane is ever
+//! materialized by the caller either). Scores are derived from Q·K
+//! via `simd::qk_strip` so all three front ends are bit-identical —
+//! asserted before timing. `streaming_score_bytes` is the constant
+//! peak score scratch (`footprint::streaming_strip_bytes`),
+//! independent of `len` by construction.
+//!
 //! Hand-rolled harness (the image has no criterion): warmup + N timed
 //! repetitions, best-of-5 reporting. `EXAQ_BENCH_REPS` overrides the
 //! rep count (CI smoke runs with 1). Emits `BENCH_attention.json`
@@ -17,11 +28,14 @@
 
 use exaq_repro::cost::{CycleTable, MachineModel};
 use exaq_repro::exaq::batched;
-use exaq_repro::exaq::plane::{dense_plane_bytes, packed_plane_bytes,
-                              plane_cache_stats,
+use exaq_repro::exaq::footprint::{dense_plane_bytes,
+                                  packed_plane_bytes,
+                                  streaming_strip_bytes};
+use exaq_repro::exaq::plane::{plane_cache_stats,
                               reset_plane_cache_stats,
                               with_cached_plane};
 use exaq_repro::exaq::simd;
+use exaq_repro::exaq::stream::StreamingAttention;
 use exaq_repro::report::{f as fnum, jnum, jstr, BenchJson, Table};
 use exaq_repro::util::clock::Stopwatch;
 use exaq_repro::util::pool;
@@ -59,9 +73,10 @@ fn main() {
 
     let mut t = Table::new(
         "Attention plane — fused packed PV vs two-step \
-         softmax + dense PV (wall-clock, Rust)",
+         softmax + dense PV vs streaming one-pass (wall-clock, Rust)",
         &["rows x len x d", "bits", "fused (us)", "two-step (us)",
-          "speedup", "packed (B)", "dense (B)", "model speedup"]);
+          "streaming (us)", "qkv 1-pass (us)", "speedup",
+          "packed (B)", "dense (B)", "strip (B)", "model speedup"]);
     let mut out = BenchJson::new("attention");
     out.meta("reps", jnum(reps as f64));
     out.meta("clip", jnum(c as f64));
@@ -71,17 +86,31 @@ fn main() {
     for (rows, len, d) in
         [(64usize, 1024usize, 64usize), (256, 256, 64), (32, 2048, 128)]
     {
-        let scores: Vec<f32> = (0..rows * len)
-            .map(|_| rng.normal() as f32 * 2.0)
+        // scores come from a real QK^T so the streaming Q/K/V front
+        // and the score-plane fronts see identical bit patterns
+        let q: Vec<f32> = (0..rows * d)
+            .map(|_| rng.normal() as f32)
             .collect();
+        let k: Vec<f32> = (0..len * d)
+            .map(|_| rng.normal() as f32)
+            .collect();
+        let scale = 1.0 / (d as f32).sqrt();
+        let mut scores = vec![0.0f32; rows * len];
+        for (r, row) in scores.chunks_exact_mut(len).enumerate() {
+            simd::qk_strip(simd::default_level(),
+                           &q[r * d..(r + 1) * d], &k, d, scale, row);
+        }
         let values: Vec<f32> = (0..len * d)
             .map(|_| rng.normal() as f32)
             .collect();
         for bits in [2u32, 3, 4] {
             let mut fused_out = vec![0.0f32; rows * d];
             let mut two_out = vec![0.0f32; rows * d];
-            // bit-exactness first: timing two paths that disagree
-            // would compare different arithmetic
+            let mut stream_out = vec![0.0f32; rows * d];
+            let mut qkv_out = vec![0.0f32; rows * d];
+            let mut stream = StreamingAttention::new(bits, c);
+            // bit-exactness first: timing paths that disagree would
+            // compare different arithmetic
             with_cached_plane(bits, c, |p| {
                 p.attend(&scores, rows, len, &[], &values, d,
                          &mut fused_out);
@@ -90,6 +119,14 @@ fn main() {
             });
             assert_eq!(fused_out, two_out,
                        "fused/two-step mismatch at bits={bits}");
+            stream.attend_scores(&scores, rows, len, &[], &values, d,
+                                 &mut stream_out);
+            assert_eq!(fused_out, stream_out,
+                       "fused/streaming mismatch at bits={bits}");
+            stream.attend(&q, rows, len, &[], &k, &values, d, scale,
+                          &mut qkv_out);
+            assert_eq!(fused_out, qkv_out,
+                       "fused/one-pass-QKV mismatch at bits={bits}");
 
             let fused = bench(
                 || {
@@ -109,6 +146,20 @@ fn main() {
                 },
                 reps,
             );
+            let streaming = bench(
+                || {
+                    stream.attend_scores(&scores, rows, len, &[],
+                                         &values, d, &mut stream_out);
+                },
+                reps,
+            );
+            let qkv = bench(
+                || {
+                    stream.attend(&q, rows, len, &[], &k, &values, d,
+                                  scale, &mut qkv_out);
+                },
+                reps,
+            );
 
             let (group, plane_bytes, threads, level) =
                 with_cached_plane(bits, c, |p| {
@@ -119,9 +170,17 @@ fn main() {
             assert_eq!(plane_bytes, packed,
                        "live plane footprint disagrees with the \
                         layout helper at bits={bits}");
+            assert_eq!(stream.plane_bytes(), packed,
+                       "streaming packed footprint drifted from the \
+                        fused plane at bits={bits}");
             let dense = dense_plane_bytes(rows, len);
             assert!(packed < dense,
                     "packed plane must be smaller than dense");
+            // the headline claim: peak f32 score storage on the
+            // streaming path is one strip, independent of len
+            let strip = streaming_strip_bytes();
+            assert!(strip < dense,
+                    "streaming strip must beat the dense plane");
             let cycles = CycleTable::default();
             let machine = MachineModel::default();
             let workers = pool::default_threads();
@@ -137,9 +196,12 @@ fn main() {
                 bits.to_string(),
                 fnum(fused * 1e6, 1),
                 fnum(two_step * 1e6, 1),
+                fnum(streaming * 1e6, 1),
+                fnum(qkv * 1e6, 1),
                 format!("{:.2}x", two_step / fused.max(1e-12)),
                 packed.to_string(),
                 dense.to_string(),
+                strip.to_string(),
                 format!("{model_speedup:.2}x"),
             ]);
             out.result(&[
@@ -150,15 +212,28 @@ fn main() {
                 ("group", jnum(group as f64)),
                 ("fused_us", jnum(fused * 1e6)),
                 ("two_step_us", jnum(two_step * 1e6)),
+                ("streaming_us", jnum(streaming * 1e6)),
+                ("streaming_qkv_us", jnum(qkv * 1e6)),
                 // guarded: a coarse timer at EXAQ_BENCH_REPS=1 could
                 // report 0, and inf would not serialise as valid JSON
                 ("fused_speedup", jnum(two_step / fused.max(1e-12))),
+                ("streaming_speedup",
+                 jnum(two_step / streaming.max(1e-12))),
+                ("streaming_vs_fused",
+                 jnum(fused / streaming.max(1e-12))),
                 ("plane_bytes", jnum(packed as f64)),
                 ("dense_plane_bytes", jnum(dense as f64)),
+                ("streaming_score_bytes", jnum(strip as f64)),
                 ("fused_cycles", jnum(cycles.attention_plane_fused(
                     rows, len, d, bits, workers))),
                 ("two_step_cycles",
                  jnum(cycles.attention_plane_two_step(
+                     rows, len, d, bits, workers))),
+                ("streaming_cycles",
+                 jnum(cycles.attention_plane_streaming(
+                     rows, len, d, bits, workers))),
+                ("streaming_machine_cycles",
+                 jnum(machine.attention_streaming_cycles(
                      rows, len, d, bits, workers))),
                 ("simd", jstr(level.name())),
                 ("threads", jnum(threads as f64)),
@@ -176,7 +251,10 @@ fn main() {
     out.meta("engine_cache_misses", jnum(emisses as f64));
     println!("{}", t.to_markdown());
     println!("fused keeps the score plane packed end to end; two-step \
-              writes and re-reads the f32 probability plane.");
+              writes and re-reads the f32 probability plane; \
+              streaming never materializes it — peak score scratch \
+              is one {} B strip at every len.",
+             streaming_strip_bytes());
     let _ = exaq_repro::report::write_csv(
         "reports/attention_plane.csv", &t);
     match out.write() {

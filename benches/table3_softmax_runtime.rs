@@ -17,6 +17,7 @@
 use exaq_repro::cost::CycleTable;
 use exaq_repro::exaq::batched;
 use exaq_repro::exaq::batched::BatchSoftmax;
+use exaq_repro::exaq::footprint;
 use exaq_repro::exaq::simd;
 use exaq_repro::exaq::softmax::{softmax_algo1, softmax_algo2,
                                 Algo2Scratch};
@@ -170,9 +171,18 @@ fn main() {
                  jnum(baseline / batched.max(1e-12))),
                 ("simd", jstr(engine.simd_level().name())),
                 ("threads", jnum(engine.threads() as f64)),
-                // true packed-key footprint of the live plane (byte
-                // keys at M = 2, u16 keys at M = 3/4)
-                ("plane_bytes", jnum(engine.plane_bytes() as f64)),
+                // packed-key footprint quoted from the shared layout
+                // helper (byte keys at M = 2, u16 keys at M = 3/4);
+                // asserted equal to the live plane so the accounting
+                // in exaq::footprint can never drift from the engine
+                ("plane_bytes", jnum({
+                    let fp = footprint::packed_plane_bytes(
+                        rows, len, bits);
+                    assert_eq!(fp, engine.plane_bytes(),
+                               "footprint helper drifted from the \
+                                live plane at bits={bits}");
+                    fp as f64
+                })),
                 ("kernel", jstr("softmax_rows")),
             ]);
         }

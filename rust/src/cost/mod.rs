@@ -9,8 +9,39 @@
 //! ~39% of BF16 inference, Algo. 2 ≈ 36.9% faster softmax) and those are
 //! structural.
 
-/// Per-operation cycle costs. Defaults follow the paper's footnotes:
-/// exp = 8 (mid of 5–12), LUT = 1, quantize = 3, add = 1, div = 4.
+/// The one table of machine constants every charge path reads.
+///
+/// [`CycleTable::default`] and [`MachineModel::default`] are both
+/// built from these names — and the runtime's `SimBackend` latency
+/// charge-back constructs its model through `MachineModel::default`,
+/// so the cost CLI, the benches, and the simulated clock can never
+/// quote different machines (ROADMAP: "one shared constants table").
+/// Tests pin both paths to this module.
+pub mod constants {
+    /// Direct exponent, cycles (paper §4.1: 5–12; 8 is the middle).
+    pub const EXP_CYCLES: f64 = 8.0;
+    /// One LUT access / load-class op, cycles (paper §4.1).
+    pub const LUT_CYCLES: f64 = 1.0;
+    /// One quantize, cycles (paper §4.1).
+    pub const QUANT_CYCLES: f64 = 3.0;
+    /// One vector add / MAC-class op, cycles.
+    pub const ADD_CYCLES: f64 = 1.0;
+    /// One divide, cycles.
+    pub const DIV_CYCLES: f64 = 4.0;
+    /// MAC/cycle for BF16 matmuls — fitted so LLaMA-2-7B/BF16/Algo-1
+    /// reproduces the paper's Fig. 1 shares (~39% softmax, ~24% GEMM).
+    pub const MXU_BF16_MACS: f64 = 27_000.0;
+    /// MAC/cycle for FP8 matmuls (modern accelerators: 2x BF16).
+    pub const MXU_FP8_MACS: f64 = 54_000.0;
+    /// Vector lanes per cycle for the softmax cycle program.
+    pub const VPU_LANES: f64 = 64.0;
+    /// HBM bytes per cycle for memory-bound element-wise ops.
+    pub const HBM_BYTES_PER_CYCLE: f64 = 57.0;
+}
+
+/// Per-operation cycle costs. Defaults come from the shared
+/// [`constants`] table: exp = 8 (mid of 5–12), LUT = 1, quantize = 3,
+/// add = 1, div = 4.
 #[derive(Clone, Copy, Debug)]
 pub struct CycleTable {
     pub exp: f64,
@@ -22,7 +53,13 @@ pub struct CycleTable {
 
 impl Default for CycleTable {
     fn default() -> Self {
-        Self { exp: 8.0, lut: 1.0, quant: 3.0, add: 1.0, div: 4.0 }
+        Self {
+            exp: constants::EXP_CYCLES,
+            lut: constants::LUT_CYCLES,
+            quant: constants::QUANT_CYCLES,
+            add: constants::ADD_CYCLES,
+            div: constants::DIV_CYCLES,
+        }
     }
 }
 
@@ -128,6 +165,33 @@ impl CycleTable {
         rows.div_ceil(threads.max(1)) as f64 * per_row
     }
 
+    /// The streaming one-pass kernel
+    /// ([`crate::exaq::StreamingAttention`]): the fused row program
+    /// plus one extra load-class pass over the `n` scores, because
+    /// Algorithm 2 max-shifts against the *final* row max and the
+    /// kernel therefore produces every score strip twice (max pass +
+    /// encode pass) instead of holding a dense plane.
+    pub fn attention_plane_streaming(&self, rows: usize, len: usize,
+                                     d_head: usize, bits: u32,
+                                     threads: usize) -> f64 {
+        self.attention_plane_streaming_grouped(
+            rows, len, d_head, crate::exaq::lut::lut_group(bits),
+            threads)
+    }
+
+    /// [`Self::attention_plane_streaming`] from an explicit kernel
+    /// group (`StreamingAttention::group()`).
+    pub fn attention_plane_streaming_grouped(&self, rows: usize,
+                                             len: usize,
+                                             d_head: usize,
+                                             group: usize,
+                                             threads: usize) -> f64 {
+        let n = len as f64;
+        self.attention_plane_fused_grouped(rows, len, d_head, group,
+                                           threads)
+            + rows.div_ceil(threads.max(1)) as f64 * n * self.lut
+    }
+
     /// Fractional runtime saving of Algo. 2 over Algo. 1 (Table 3's
     /// 36.9% figure is (3.274 − 2.066) / 3.274).
     pub fn softmax_saving(&self, n: usize, bits: u32) -> f64 {
@@ -183,10 +247,10 @@ pub struct MachineModel {
 impl Default for MachineModel {
     fn default() -> Self {
         Self {
-            mxu_bf16_macs: 27_000.0,
-            mxu_fp8_macs: 54_000.0,
-            vpu_lanes: 64.0,
-            hbm_bytes_per_cycle: 57.0,
+            mxu_bf16_macs: constants::MXU_BF16_MACS,
+            mxu_fp8_macs: constants::MXU_FP8_MACS,
+            vpu_lanes: constants::VPU_LANES,
+            hbm_bytes_per_cycle: constants::HBM_BYTES_PER_CYCLE,
             cycles: CycleTable::default(),
         }
     }
@@ -359,11 +423,110 @@ impl MachineModel {
             / self.hbm_bytes_per_cycle;
         compute + traffic
     }
+
+    /// Device cycles of the streaming one-pass kernel
+    /// ([`crate::exaq::StreamingAttention`]) over the same geometry:
+    /// the [`CycleTable::attention_plane_streaming`] row program over
+    /// `vpu_lanes`, and — the whole point — the f32 score traffic is
+    /// the **real strip size**
+    /// ([`crate::exaq::footprint::streaming_strip_bytes`], a constant
+    /// independent of `len`), not a `[rows × len]` dense plane. The
+    /// packed key plane and the blocked value stream are charged
+    /// exactly as in the fused path.
+    pub fn attention_streaming_cycles(&self, rows: usize, len: usize,
+                                      d_head: usize, bits: u32,
+                                      threads: usize) -> f64 {
+        self.attention_streaming_grouped(
+            rows, len, d_head, bits,
+            crate::exaq::lut::lut_group(bits), threads)
+    }
+
+    /// [`Self::attention_streaming_cycles`] from an explicit kernel
+    /// group (`StreamingAttention::group()`), so callers holding a
+    /// live kernel can never drift from its packing.
+    pub fn attention_streaming_grouped(&self, rows: usize, len: usize,
+                                       d_head: usize, bits: u32,
+                                       group: usize,
+                                       threads: usize) -> f64 {
+        use crate::exaq::footprint::{packed_plane_bytes,
+                                     streaming_strip_bytes};
+        use crate::exaq::plane::TILE_ROWS;
+        let compute = self
+            .cycles
+            .attention_plane_streaming_grouped(rows, len, d_head,
+                                               group, threads)
+            / self.vpu_lanes;
+        let scores = streaming_strip_bytes();
+        let packed = 2 * packed_plane_bytes(rows, len, bits);
+        let v_bytes = 4 * len * d_head * rows.div_ceil(TILE_ROWS);
+        let traffic = (scores + packed + v_bytes) as f64
+            / self.hbm_bytes_per_cycle;
+        compute + traffic
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn defaults_read_the_shared_constants_table() {
+        // both charge paths — the cycle program and the machine
+        // throughput model — must quote the one constants table, so
+        // the cost CLI and the sim charge-back can never diverge
+        let t = CycleTable::default();
+        assert_eq!(t.exp, constants::EXP_CYCLES);
+        assert_eq!(t.lut, constants::LUT_CYCLES);
+        assert_eq!(t.quant, constants::QUANT_CYCLES);
+        assert_eq!(t.add, constants::ADD_CYCLES);
+        assert_eq!(t.div, constants::DIV_CYCLES);
+        let m = MachineModel::default();
+        assert_eq!(m.mxu_bf16_macs, constants::MXU_BF16_MACS);
+        assert_eq!(m.mxu_fp8_macs, constants::MXU_FP8_MACS);
+        assert_eq!(m.vpu_lanes, constants::VPU_LANES);
+        assert_eq!(m.hbm_bytes_per_cycle,
+                   constants::HBM_BYTES_PER_CYCLE);
+        assert_eq!(m.cycles.quant, constants::QUANT_CYCLES);
+    }
+
+    #[test]
+    fn streaming_cycles_quote_the_constant_strip() {
+        use crate::exaq::footprint::{packed_plane_bytes,
+                                     streaming_strip_bytes};
+        use crate::exaq::plane::TILE_ROWS;
+        let m = MachineModel::default();
+        let (rows, d, bits, threads) = (64usize, 64usize, 2u32, 1);
+        // isolate the f32-score traffic term: it must be the fixed
+        // strip, independent of context length
+        let strip_term = |len: usize| {
+            m.attention_streaming_cycles(rows, len, d, bits, threads)
+                - m.cycles
+                    .attention_plane_streaming(rows, len, d, bits,
+                                               threads)
+                    / m.vpu_lanes
+                - (2 * packed_plane_bytes(rows, len, bits)
+                   + 4 * len * d * rows.div_ceil(TILE_ROWS))
+                    as f64
+                    / m.hbm_bytes_per_cycle
+        };
+        let want =
+            streaming_strip_bytes() as f64 / m.hbm_bytes_per_cycle;
+        for len in [256usize, 2048, 65_536] {
+            assert!((strip_term(len) - want).abs() < 1e-6,
+                    "len {len}: {} vs {want}", strip_term(len));
+        }
+        // never holding the dense plane beats re-reading it: the
+        // extra fill pass costs less than the plane's HBM round trip
+        for len in [512usize, 4096] {
+            let fused = m.attention_plane_cycles(rows, len, d, bits,
+                                                 threads, true);
+            let streaming = m.attention_streaming_cycles(rows, len, d,
+                                                         bits,
+                                                         threads);
+            assert!(streaming < fused,
+                    "len {len}: streaming {streaming} >= fused {fused}");
+        }
+    }
 
     #[test]
     fn default_cycles_reproduce_table3_magnitude() {

@@ -1,0 +1,66 @@
+//! Shared memory-footprint accounting for the attention-score paths.
+//!
+//! One home for the byte math that the cost model, the benches, and
+//! the tests all quote, so the three never drift: the packed key
+//! plane ([`packed_plane_bytes`]), the dense f32 probability plane
+//! the two-step path materializes ([`dense_plane_bytes`]), and the
+//! streaming path's peak score scratch ([`streaming_strip_bytes`]),
+//! which is a constant — independent of `rows` and `len` — because
+//! [`StreamingAttention`](super::stream::StreamingAttention) never
+//! writes the dense plane at all.
+//!
+//! The tiling constants themselves stay owned by `exaq::plane`
+//! (CONTRIBUTING.md: don't duplicate them); this module only derives
+//! bytes from them. `plane` re-exports the two plane helpers so the
+//! historical `exaq::plane::{packed,dense}_plane_bytes` paths keep
+//! working.
+
+use super::lut::lut_group;
+use super::plane::{TILE_LANES, TILE_ROWS};
+
+/// Bytes of packed-key storage for a `[rows × len]` plane at `bits`:
+/// one byte per 4 codes at M = 2, one u16 per 2 codes at M = 3/4
+/// (mirrors the `PackedCodes` layout the engine builds).
+pub fn packed_plane_bytes(rows: usize, len: usize, bits: u32) -> usize {
+    let group = lut_group(bits);
+    let width = if bits <= 2 { 1 } else { 2 };
+    rows * len.div_ceil(group) * width
+}
+
+/// Bytes of the f32 probability plane the two-step path materializes.
+pub fn dense_plane_bytes(rows: usize, len: usize) -> usize {
+    rows * len * std::mem::size_of::<f32>()
+}
+
+/// Peak f32 score storage on the streaming path: one
+/// `TILE_ROWS × TILE_LANES` strip budget, independent of `rows` and
+/// `len`. The kernel actually keeps a single `TILE_LANES`-wide row
+/// strip per worker (`TILE_ROWS`× under this budget); the block
+/// figure is the contract the bench asserts against.
+pub fn streaming_strip_bytes() -> usize {
+    TILE_ROWS * TILE_LANES * std::mem::size_of::<f32>()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plane_byte_math_is_pinned() {
+        // 4 codes/byte at M = 2, 2 codes per u16 at M = 3/4
+        assert_eq!(packed_plane_bytes(4, 64, 2), 4 * 16);
+        assert_eq!(packed_plane_bytes(4, 64, 3), 4 * 32 * 2);
+        assert_eq!(packed_plane_bytes(1, 5, 2), 2);
+        assert_eq!(dense_plane_bytes(4, 64), 4 * 64 * 4);
+    }
+
+    #[test]
+    fn streaming_strip_is_constant_and_beats_every_dense_plane() {
+        assert_eq!(streaming_strip_bytes(), TILE_ROWS * TILE_LANES * 4);
+        // the whole point: the strip does not grow with context
+        for len in [TILE_LANES, 1024, 65_536] {
+            assert!(streaming_strip_bytes()
+                    <= dense_plane_bytes(TILE_ROWS, len));
+        }
+    }
+}

@@ -172,6 +172,73 @@ impl LutSum {
     }
 }
 
+/// Streaming form of [`LutSum::sum_keys`]: feed a row's key stream in
+/// arbitrarily sized slices (the streaming attention kernel feeds one
+/// KV tile at a time) and obtain the **bit-identical** result of a
+/// single `sum_keys` call over the concatenation.
+///
+/// The trick is that the fixed tree only depends on each key's
+/// position in the whole stream, not on feed boundaries: complete
+/// 4-chunks go to the same `a0..a3` accumulators in the same order, so
+/// the stream buffers at most 3 looked-up values until a chunk
+/// completes, and `finish` folds the final partial chunk as the
+/// sequential `tail` — exactly `sum_keys`' remainder handling.
+#[derive(Clone, Debug, Default)]
+pub struct KeySumStream {
+    a: [f32; 4],
+    buf: [f32; 4],
+    pending: usize,
+}
+
+impl KeySumStream {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Absorb the next `keys` of the stream (any length, including 0).
+    #[inline]
+    pub fn feed<K: PackedKey>(&mut self, lut: &LutSum, keys: &[K]) {
+        let t = &lut.table[..];
+        let mut keys = keys;
+        if self.pending > 0 {
+            let take = (4 - self.pending).min(keys.len());
+            for &k in &keys[..take] {
+                self.buf[self.pending] = t[k.index()];
+                self.pending += 1;
+            }
+            keys = &keys[take..];
+            if self.pending == 4 {
+                self.a[0] += self.buf[0];
+                self.a[1] += self.buf[1];
+                self.a[2] += self.buf[2];
+                self.a[3] += self.buf[3];
+                self.pending = 0;
+            }
+        }
+        let mut chunks = keys.chunks_exact(4);
+        for ch in chunks.by_ref() {
+            self.a[0] += t[ch[0].index()];
+            self.a[1] += t[ch[1].index()];
+            self.a[2] += t[ch[2].index()];
+            self.a[3] += t[ch[3].index()];
+        }
+        for &k in chunks.remainder() {
+            self.buf[self.pending] = t[k.index()];
+            self.pending += 1;
+        }
+    }
+
+    /// Combine: `((a0+a1)+(a2+a3)) + tail`, as in `sum_keys`.
+    #[inline]
+    pub fn finish(self) -> f32 {
+        let mut tail = 0.0f32;
+        for &v in &self.buf[..self.pending] {
+            tail += v;
+        }
+        ((self.a[0] + self.a[1]) + (self.a[2] + self.a[3])) + tail
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -239,6 +306,56 @@ mod tests {
                     .sum();
                 assert!((got8 as f64 - want).abs() < 1e-4 * want.max(1.0),
                         "bits={bits} len={len}: {got8} vs {want}");
+            }
+        }
+    }
+
+    #[test]
+    fn key_sum_stream_is_bit_identical_for_any_feed_split() {
+        // The streaming attention kernel feeds tile-sized key slices;
+        // whatever the slice sizes, the fold must equal one sum_keys
+        // call over the whole row, bit for bit, at both key widths.
+        for bits in [2u32, 3, 4] {
+            let q = Quantizer::new(bits, -5.0);
+            let ls = LutSum::build(&q);
+            let nkeys = ls.table.len();
+            for len in [0usize, 1, 3, 4, 5, 7, 8, 13, 41, 96] {
+                let keys8: Vec<u8> =
+                    (0..len).map(|i| ((i * 37 + 11) % nkeys) as u8).collect();
+                let keys16: Vec<u16> =
+                    keys8.iter().map(|&k| k as u16).collect();
+                let want = ls.sum_keys(&keys8).to_bits();
+                // hostile feed patterns: one-shot, singletons, tiles of
+                // 3/4/5/32, and a lopsided head+tail split
+                let mut plans: Vec<Vec<usize>> = vec![vec![len]];
+                for chunk in [1usize, 2, 3, 4, 5, 32] {
+                    let mut plan = Vec::new();
+                    let mut left = len;
+                    while left > 0 {
+                        let take = chunk.min(left);
+                        plan.push(take);
+                        left -= take;
+                    }
+                    plans.push(plan);
+                }
+                if len > 1 {
+                    plans.push(vec![len - 1, 1]);
+                }
+                for plan in plans {
+                    let mut s8 = KeySumStream::new();
+                    let mut s16 = KeySumStream::new();
+                    let mut at = 0usize;
+                    for take in &plan {
+                        s8.feed(&ls, &keys8[at..at + take]);
+                        s16.feed(&ls, &keys16[at..at + take]);
+                        at += take;
+                    }
+                    assert_eq!(at, len);
+                    assert_eq!(s8.finish().to_bits(), want,
+                               "bits={bits} len={len} plan={plan:?}");
+                    assert_eq!(s16.finish().to_bits(), want,
+                               "bits={bits} len={len} plan={plan:?}");
+                }
             }
         }
     }

@@ -26,12 +26,21 @@
 //!   [`AttentionPlane`] keeps scores in `PackedCodes` form from QK^T
 //!   through the weighted-value pass, fusing the premultiplied decode
 //!   into the accumulation tile (bit-identical to softmax + dense PV).
+//! * [`stream`] — the streaming one-pass form of the plane:
+//!   [`StreamingAttention`] fuses QK^T into the packed plane, quantizing
+//!   each `TILE_LANES` score strip straight into keys so the dense f32
+//!   score plane is never materialized (peak score scratch is one strip,
+//!   independent of context length) — bit-identical to
+//!   [`AttentionPlane::attend`].
+//! * [`footprint`] — shared byte math for the score paths (packed plane,
+//!   dense plane, streaming strip), quoted by cost/benches/tests alike.
 //! * [`clip`]   — calibration-statistics -> per-layer clip thresholds
 //!   (EXAQ via Table 1; NAIVE via min/max midpoint).
 
 pub mod batched;
 pub mod clip;
 pub mod fit;
+pub mod footprint;
 pub mod gauss;
 pub mod lut;
 pub mod mc;
@@ -41,9 +50,11 @@ pub mod quant;
 pub mod simd;
 pub mod softmax;
 pub mod solver;
+pub mod stream;
 
 pub use batched::BatchSoftmax;
 pub use plane::AttentionPlane;
+pub use stream::StreamingAttention;
 pub use clip::{clip_exaq, clip_naive, Table1};
 pub use lut::{LutExp, LutSum};
 pub use quant::Quantizer;

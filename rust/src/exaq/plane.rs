@@ -35,9 +35,11 @@
 //! any worker starts, so worker count is a throughput knob only.
 //!
 //! This module owns the tiling constants ([`TILE_ROWS`],
-//! [`TILE_LANES`]) and the fused-path footprint helpers
-//! ([`packed_plane_bytes`], [`dense_plane_bytes`]); the cost model's
-//! `attention_plane_*` variants quote them. Packed codes may be
+//! [`TILE_LANES`]); the byte math derived from them lives in
+//! `exaq::footprint` and is re-exported here
+//! ([`packed_plane_bytes`], [`dense_plane_bytes`]) so the cost
+//! model's `attention_plane_*` variants keep quoting one source.
+//! Packed codes may be
 //! decoded to f32 in exactly two places: the batched kernel's output
 //! pass (`exaq/batched.rs`) and the fused PV accumulate here —
 //! anything else reintroduces the round trip this module exists to
@@ -52,7 +54,9 @@ use super::simd;
 use crate::util::pool;
 
 /// Premultiplied-table capacity per row (2^8 codes at the max M).
-const NORM_LANES: usize = 256;
+/// Shared with the streaming kernel (`exaq::stream`), whose PV pass
+/// reuses this module's block structure.
+pub(crate) const NORM_LANES: usize = 256;
 
 /// Key lanes per value tile: one tile of V is `TILE_LANES × d_head`
 /// f32s (32 KiB at d_head = 64), sized to stay L1-resident while a
@@ -65,19 +69,7 @@ pub const TILE_LANES: usize = 128;
 /// `rows / TILE_ROWS` times instead of `rows` times.
 pub const TILE_ROWS: usize = 8;
 
-/// Bytes of packed-key storage for a `[rows × len]` plane at `bits`:
-/// one byte per 4 codes at M = 2, one u16 per 2 codes at M = 3/4
-/// (mirrors the `PackedCodes` layout the engine builds).
-pub fn packed_plane_bytes(rows: usize, len: usize, bits: u32) -> usize {
-    let group = super::lut::lut_group(bits);
-    let width = if bits <= 2 { 1 } else { 2 };
-    rows * len.div_ceil(group) * width
-}
-
-/// Bytes of the f32 probability plane the two-step path materializes.
-pub fn dense_plane_bytes(rows: usize, len: usize) -> usize {
-    rows * len * std::mem::size_of::<f32>()
-}
+pub use super::footprint::{dense_plane_bytes, packed_plane_bytes};
 
 /// The fused attention-score pipeline: a [`BatchSoftmax`] engine for
 /// tables and policy, plus the packed plane and per-row `inv` scratch
@@ -275,7 +267,8 @@ fn check_geom(scores: &[f32], rows: usize, len: usize,
             "valid_lens arity {} != rows {rows}", valid_lens.len());
 }
 
-fn row_valid(valid_lens: &[usize], r: usize, len: usize) -> usize {
+pub(crate) fn row_valid(valid_lens: &[usize], r: usize,
+                        len: usize) -> usize {
     if valid_lens.is_empty() { len } else { valid_lens[r].min(len) }
 }
 
@@ -479,9 +472,9 @@ fn encode_generic<K: PackedKey>(quant: &Quantizer, lut_exp: &LutExp,
 /// M = 2 PV over one tile span `[t0, end)` of one row: full byte keys
 /// through [`simd::pv_accum4`], the row-end partial group decoded
 /// lane-by-lane (same `key & 3; key >>= 2` walk as `row_g4`'s tail).
-fn pv_g4(level: simd::Level, keys: &[u8], norm: &[f32],
-         values: &[f32], d: usize, span: (usize, usize),
-         orow: &mut [f32]) {
+pub(crate) fn pv_g4(level: simd::Level, keys: &[u8], norm: &[f32],
+                    values: &[f32], d: usize, span: (usize, usize),
+                    orow: &mut [f32]) {
     let (t0, end) = span;
     let k0 = t0 / 4;
     let nfull = (end - t0) / 4;
@@ -501,9 +494,9 @@ fn pv_g4(level: simd::Level, keys: &[u8], norm: &[f32],
 /// M = 3/4 PV over one tile span: u16 pair keys through
 /// [`simd::pv_accum2`]; an odd row end leaves exactly one low-code
 /// lane.
-fn pv_g2(level: simd::Level, bits: u32, keys: &[u16], norm: &[f32],
-         values: &[f32], d: usize, span: (usize, usize),
-         orow: &mut [f32]) {
+pub(crate) fn pv_g2(level: simd::Level, bits: u32, keys: &[u16],
+                    norm: &[f32], values: &[f32], d: usize,
+                    span: (usize, usize), orow: &mut [f32]) {
     let (t0, end) = span;
     let bits = bits as usize;
     let mask = (1usize << bits) - 1;
@@ -521,10 +514,10 @@ fn pv_g2(level: simd::Level, bits: u32, keys: &[u16], norm: &[f32],
 }
 
 /// Group-1 PV (M = 1, M >= 5): per-lane lookup + axpy.
-fn pv_generic<K: PackedKey>(level: simd::Level, lut_sum: &LutSum,
-                            keys: &[K], norm: &[f32], values: &[f32],
-                            d: usize, span: (usize, usize),
-                            orow: &mut [f32]) {
+pub(crate) fn pv_generic<K: PackedKey>(
+    level: simd::Level, lut_sum: &LutSum, keys: &[K], norm: &[f32],
+    values: &[f32], d: usize, span: (usize, usize),
+    orow: &mut [f32]) {
     let (t0, end) = span;
     let g = lut_sum.group;
     let bits = lut_sum.bits as usize;

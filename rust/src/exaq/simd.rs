@@ -29,6 +29,15 @@
 //!   reassociated. Each step is a separate IEEE multiply then add —
 //!   never an FMA (`vfmadd` / `vmla`), whose single rounding would
 //!   change the bits versus the scalar reference.
+//! * [`qk_strip`] — the QK^T front of
+//!   [`StreamingAttention`](super::stream::StreamingAttention). Each
+//!   output score is one dot product folded through a fixed
+//!   4-accumulator tree (`((a0+a1)+(a2+a3))+tail`, the same shape as
+//!   `LutSum::sum_keys`), separate multiply then add per step, scaled
+//!   once at the end. The SSE2 lane is the *identical* tree with the
+//!   four accumulators living in one vector register; AVX2 deliberately
+//!   delegates to it, because an 8-wide accumulator would be a
+//!   different tree and therefore different bits.
 //!
 //! The denominator reduction is deliberately **not** here: f32
 //! addition is order-sensitive, so summation stays in the fixed-tree
@@ -265,6 +274,35 @@ pub fn pv_accum2(level: Level, keys: &[u16], norm: &[f32],
     }
 }
 
+/// One QK^T strip: `out[i] = dot(q, k_tile[i*d..][..d]) * scale` for
+/// every key row resident in the tile. Requires `q.len() == d` and
+/// `k_tile.len() == out.len() * d`.
+///
+/// The dot product is a *reduction*, so unlike the lane-parallel
+/// passes above it fixes its own summation tree: 4 independent
+/// accumulators over ascending 4-chunks of `d`, a sequential scalar
+/// tail, combined as `((a0+a1)+(a2+a3))+tail`, then exactly one
+/// multiply by `scale`. The SSE2 lane keeps the four accumulators in
+/// one vector register (separate `mulps` + `addps`, never FMA) and is
+/// bit-identical to the scalar tree by construction; AVX2 delegates to
+/// SSE2 because 8 accumulators would be a different tree.
+pub fn qk_strip(level: Level, q: &[f32], k_tile: &[f32], d: usize,
+                scale: f32, out: &mut [f32]) {
+    debug_assert_eq!(q.len(), d);
+    debug_assert_eq!(k_tile.len(), out.len() * d);
+    match level {
+        #[cfg(target_arch = "x86_64")]
+        Level::Sse2 | Level::Avx2 => unsafe {
+            x86::qk_strip_sse2(q, k_tile, d, scale, out)
+        },
+        #[cfg(target_arch = "aarch64")]
+        Level::Neon => unsafe {
+            neon::qk_strip(q, k_tile, d, scale, out)
+        },
+        _ => scalar::qk_strip(q, k_tile, d, scale, out),
+    }
+}
+
 /// The reference lanes: bit-for-bit the loops of the pre-SIMD batched
 /// kernel. Every other level is tested against these.
 mod scalar {
@@ -342,6 +380,34 @@ mod scalar {
             let k = k as usize;
             pv_axpy(norm[k & mask], &vg[..d], out);
             pv_axpy(norm[(k >> bits) & mask], &vg[d..], out);
+        }
+    }
+
+    /// The reference dot-product tree: 4 accumulators over ascending
+    /// 4-chunks (separate multiply, then add), sequential scalar tail,
+    /// fixed combine `((a0+a1)+(a2+a3))+tail` — the `sum_keys` shape.
+    fn dot_tree(q: &[f32], k: &[f32]) -> f32 {
+        let (mut a0, mut a1, mut a2, mut a3) =
+            (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+        let mut qc = q.chunks_exact(4);
+        let mut kc = k.chunks_exact(4);
+        for (qs, ks) in qc.by_ref().zip(kc.by_ref()) {
+            a0 += qs[0] * ks[0];
+            a1 += qs[1] * ks[1];
+            a2 += qs[2] * ks[2];
+            a3 += qs[3] * ks[3];
+        }
+        let mut tail = 0.0f32;
+        for (&qx, &kx) in qc.remainder().iter().zip(kc.remainder()) {
+            tail += qx * kx;
+        }
+        ((a0 + a1) + (a2 + a3)) + tail
+    }
+
+    pub(super) fn qk_strip(q: &[f32], k_tile: &[f32], d: usize,
+                           scale: f32, out: &mut [f32]) {
+        for (o, krow) in out.iter_mut().zip(k_tile.chunks_exact(d)) {
+            *o = dot_tree(q, krow) * scale;
         }
     }
 }
@@ -634,6 +700,34 @@ mod x86 {
         }
     }
 
+    /// The scalar `dot_tree` with a0..a3 living in one vector
+    /// register: each 4-chunk is a separate `mulps` then `addps`
+    /// (never contracted to FMA), so lane `i` of `acc` holds exactly
+    /// the scalar accumulator `a_i`. The horizontal combine and the
+    /// tail run in scalar f32, in the reference order. AVX2 calls this
+    /// too: an 8-wide accumulator would be a different tree.
+    pub(super) unsafe fn qk_strip_sse2(q: &[f32], k_tile: &[f32],
+                                       d: usize, scale: f32,
+                                       out: &mut [f32]) {
+        let full = d / 4;
+        let mut tmp = [0f32; 4];
+        for (o, krow) in out.iter_mut().zip(k_tile.chunks_exact(d)) {
+            let mut acc4 = _mm_setzero_ps();
+            for ch in 0..full {
+                let qv = _mm_loadu_ps(q.as_ptr().add(ch * 4));
+                let kv = _mm_loadu_ps(krow.as_ptr().add(ch * 4));
+                acc4 = _mm_add_ps(acc4, _mm_mul_ps(qv, kv));
+            }
+            _mm_storeu_ps(tmp.as_mut_ptr(), acc4);
+            let mut tail = 0.0f32;
+            for j in full * 4..d {
+                tail += q[j] * krow[j];
+            }
+            *o = (((tmp[0] + tmp[1]) + (tmp[2] + tmp[3])) + tail)
+                * scale;
+        }
+    }
+
     /// M = 3 only: the 8-entry premultiplied table is exactly one
     /// 256-bit register.
     #[target_feature(enable = "avx2")]
@@ -780,6 +874,31 @@ mod neon {
             let k = k as usize;
             pv_axpy(norm[k & mask], &vg[..d], out);
             pv_axpy(norm[(k >> bits) & mask], &vg[d..], out);
+        }
+    }
+
+    /// The scalar `dot_tree` with a0..a3 in one vector register:
+    /// separate `vmulq` + `vaddq` per 4-chunk (`vmlaq` lowers to FMLA
+    /// and would change the bits), scalar combine and tail in the
+    /// reference order.
+    pub(super) unsafe fn qk_strip(q: &[f32], k_tile: &[f32], d: usize,
+                                  scale: f32, out: &mut [f32]) {
+        let full = d / 4;
+        let mut tmp = [0f32; 4];
+        for (o, krow) in out.iter_mut().zip(k_tile.chunks_exact(d)) {
+            let mut acc4 = vdupq_n_f32(0.0);
+            for ch in 0..full {
+                let qv = vld1q_f32(q.as_ptr().add(ch * 4));
+                let kv = vld1q_f32(krow.as_ptr().add(ch * 4));
+                acc4 = vaddq_f32(acc4, vmulq_f32(qv, kv));
+            }
+            vst1q_f32(tmp.as_mut_ptr(), acc4);
+            let mut tail = 0.0f32;
+            for j in full * 4..d {
+                tail += q[j] * krow[j];
+            }
+            *o = (((tmp[0] + tmp[1]) + (tmp[2] + tmp[3])) + tail)
+                * scale;
         }
     }
 }
@@ -944,6 +1063,30 @@ mod tests {
                     got.iter().map(|x| x.to_bits()).collect();
                 assert_eq!(gb, wb,
                            "pv_accum2 level {} d {d}", level.name());
+            }
+        }
+    }
+
+    #[test]
+    fn every_level_matches_scalar_qk_strip() {
+        let mut r = SplitMix64::new(77);
+        // d sweep covers the scalar-only tail, full vectors, and
+        // vector + tail combinations
+        for d in [1usize, 2, 3, 4, 5, 7, 8, 9, 12, 16, 17] {
+            let rows = 5usize;
+            let q = hostile_lanes(d, 200 + d as u64);
+            let k_tile = hostile_lanes(rows * d, 300 + d as u64);
+            let scale = (r.normal() as f32).abs() + 0.25;
+            let mut want = vec![0f32; rows];
+            scalar::qk_strip(&q, &k_tile, d, scale, &mut want);
+            for level in available_levels() {
+                let mut got = vec![0f32; rows];
+                qk_strip(level, &q, &k_tile, d, scale, &mut got);
+                let wb: Vec<u32> =
+                    want.iter().map(|x| x.to_bits()).collect();
+                let gb: Vec<u32> =
+                    got.iter().map(|x| x.to_bits()).collect();
+                assert_eq!(gb, wb, "level {} d {d}", level.name());
             }
         }
     }

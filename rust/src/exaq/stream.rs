@@ -1,0 +1,609 @@
+//! Streaming one-pass attention: QK^T fused into the packed plane —
+//! the dense f32 score plane is **never materialized**.
+//!
+//! [`AttentionPlane::attend`](super::plane::AttentionPlane::attend)
+//! already keeps scores packed from quantization to the weighted-value
+//! (PV) pass, but it *receives* a fully dense `[rows × len]` f32 score
+//! plane, so at long context the QK^T round trip dominates the very
+//! traffic the packed layout removes. Because Algorithm 2 replaces the
+//! running max-subtraction with the analytically clipped input, there
+//! is no flash-attention-style rescale: a tile-by-tile pass over KV is
+//! *exact*, not approximate. [`StreamingAttention`] exploits that:
+//!
+//! 1. **Max pass** — per `TILE_LANES`-wide KV tile, produce the QK^T
+//!    strip ([`simd::qk_strip`], fixed 4-accumulator tree, mul-then-
+//!    add, never FMA) into one strip buffer and fold
+//!    [`simd::row_max`] over it. Algorithm 2 still max-shifts against
+//!    the *final* row max, so the strip is produced twice per tile —
+//!    a deliberate 2× QK^T compute trade for O(1) score memory. `max`
+//!    is exact and NaN-losing at every level, so the tile-wise fold
+//!    equals the whole-row scan in value, and a ±0.0 sign difference
+//!    washes out in `code(x - m)`.
+//! 2. **Encode pass** — regenerate each strip and quantize it straight
+//!    into the row's packed keys via the shared `simd` encode lanes.
+//!    Tile seams are group-aligned (`TILE_LANES` is a multiple of
+//!    every LUT_sum group), the quantize is lane-local, and the
+//!    partial final group can only occur in the row's last tile — so
+//!    the key stream is bit-identical to the whole-row encode in
+//!    `plane.rs`. Keys are folded online through the fixed-tree
+//!    [`KeySumStream`], bit-identical to one
+//!    [`LutSum::sum_keys`](super::lut::LutSum::sum_keys) call.
+//! 3. **PV pass** — the premultiplied `lut_exp[code] * inv` decode
+//!    runs fused into the value accumulation, reusing `plane.rs`'s
+//!    block structure and `pv_g4` / `pv_g2` / `pv_generic` verbatim.
+//!
+//! Peak f32 score storage is one `TILE_LANES` strip per worker
+//! (`footprint::streaming_strip_bytes()` quotes the conservative
+//! `TILE_ROWS × TILE_LANES` budget) — independent of `len`, versus
+//! `dense_plane_bytes(rows, len)` for the two-step and fused paths.
+//!
+//! **Bit-exactness contract.** [`StreamingAttention::attend_scores`]
+//! is bit-identical to `AttentionPlane::attend` (and therefore to
+//! quantize → `softmax_rows` → dense PV) at every M, every available
+//! SIMD level, and every worker count; rows are chunked through
+//! `util::pool` with regions fixed before any worker starts.
+//! [`StreamingAttention::attend`] is the same kernel with the strips
+//! produced by `simd::qk_strip` instead of copied from a dense input,
+//! so it is bit-identical to feeding those strip scores through any
+//! of the dense-input paths. `rust/tests/streaming_attention.rs`
+//! sweeps both claims.
+
+use super::batched::{BatchSoftmax, PackedCodes};
+use super::lut::{KeySumStream, LutExp, LutSum, PackedKey};
+use super::plane::{self, row_valid, NORM_LANES, TILE_LANES, TILE_ROWS};
+use super::quant::Quantizer;
+use super::simd;
+use crate::util::pool;
+
+/// The one-pass streaming attention kernel: a [`BatchSoftmax`] engine
+/// for tables and policy, plus the packed key plane and per-row `inv`
+/// scratch — and deliberately **no** f32 score plane.
+pub struct StreamingAttention {
+    engine: BatchSoftmax,
+    /// The streaming path's own packed key plane.
+    packed: PackedCodes,
+    /// Per-row `1/Σexp` premultipliers.
+    inv: Vec<f32>,
+}
+
+impl StreamingAttention {
+    pub fn new(bits: u32, clip: f32) -> Self {
+        Self {
+            engine: BatchSoftmax::new(bits, clip),
+            packed: PackedCodes::default(),
+            inv: Vec::new(),
+        }
+    }
+
+    pub fn bits(&self) -> u32 {
+        self.engine.bits()
+    }
+
+    /// Codes per LUT_sum key (4 at M = 2, 2 at M = 3/4).
+    pub fn group(&self) -> usize {
+        self.engine.group()
+    }
+
+    /// Cache key check — same contract as [`BatchSoftmax::matches`].
+    pub fn matches(&self, bits: u32, clip: f32) -> bool {
+        self.engine.matches(bits, clip)
+    }
+
+    /// The wrapped engine (tables, scratch policy).
+    pub fn engine(&self) -> &BatchSoftmax {
+        &self.engine
+    }
+
+    /// Pin the worker count (0 = auto); output is bit-identical for
+    /// every value.
+    pub fn set_threads(&mut self, threads: usize) -> &mut Self {
+        self.engine.set_threads(threads);
+        self
+    }
+
+    pub fn threads(&self) -> usize {
+        self.engine.threads()
+    }
+
+    /// Pin the lane level; unavailable levels fall back to scalar.
+    pub fn set_simd_level(&mut self, level: simd::Level) -> &mut Self {
+        self.engine.set_simd_level(level);
+        self
+    }
+
+    pub fn simd_level(&self) -> simd::Level {
+        self.engine.simd_level()
+    }
+
+    /// Current packed-plane footprint in bytes (both key widths).
+    pub fn plane_bytes(&self) -> usize {
+        self.packed.plane_bytes()
+    }
+
+    /// One-pass attention from Q/K/V: per KV tile, compute the QK^T
+    /// strip (`q[r] · k[i] * scale`), quantize it into packed keys,
+    /// fold the denominator online, then run the premultiplied PV
+    /// decode — the `[rows × len]` f32 score plane never exists.
+    /// `q` is `[rows × d_head]`, `keys_mat` and `values` are
+    /// `[len × d_head]` row-major, `out` is `[rows × d_head]`.
+    /// A causal mask is expressed through `valid_lens` (row `r`
+    /// attends to lanes `< valid_lens[r]`); rows with `valid_len == 0`
+    /// come back all-zero.
+    #[allow(clippy::too_many_arguments)]
+    pub fn attend(&mut self, q: &[f32], rows: usize, len: usize,
+                  valid_lens: &[usize], keys_mat: &[f32],
+                  values: &[f32], d_head: usize, scale: f32,
+                  out: &mut [f32]) {
+        assert_eq!(q.len(), rows * d_head,
+                   "q is {} floats, expected rows*d_head = {}",
+                   q.len(), rows * d_head);
+        assert_eq!(keys_mat.len(), len * d_head,
+                   "keys are {} floats, expected len*d_head = {}",
+                   keys_mat.len(), len * d_head);
+        check_common(rows, len, valid_lens, values, d_head, out);
+        out.fill(0.0);
+        if rows == 0 || len == 0 || d_head == 0 {
+            return;
+        }
+        let level = self.engine.simd_level();
+        let fill = |r: usize, t0: usize, end: usize,
+                    strip: &mut [f32]| {
+            simd::qk_strip(level, &q[r * d_head..(r + 1) * d_head],
+                           &keys_mat[t0 * d_head..end * d_head],
+                           d_head, scale, strip);
+        };
+        self.run_with_fill(rows, len, valid_lens, values, d_head, out,
+                           fill);
+    }
+
+    /// The dense-input front: same streaming kernel, with each tile
+    /// strip copied out of a caller-materialized score plane instead
+    /// of computed from Q·K. Bit-identical to
+    /// [`AttentionPlane::attend`](super::plane::AttentionPlane::attend)
+    /// — this is the entry point `runtime::sim` and the equivalence
+    /// tests drive.
+    pub fn attend_scores(&mut self, scores: &[f32], rows: usize,
+                         len: usize, valid_lens: &[usize],
+                         values: &[f32], d_head: usize,
+                         out: &mut [f32]) {
+        assert_eq!(scores.len(), rows * len,
+                   "score plane is {} floats, expected rows*len = {}",
+                   scores.len(), rows * len);
+        check_common(rows, len, valid_lens, values, d_head, out);
+        out.fill(0.0);
+        if rows == 0 || len == 0 || d_head == 0 {
+            return;
+        }
+        let fill = |r: usize, t0: usize, end: usize,
+                    strip: &mut [f32]| {
+            strip.copy_from_slice(
+                &scores[r * len + t0..r * len + end]);
+        };
+        self.run_with_fill(rows, len, valid_lens, values, d_head, out,
+                           fill);
+    }
+
+    /// Dispatch by M, mirroring `AttentionPlane::attend`: byte keys +
+    /// group-4 lanes at M = 2, u16 keys + group-2 lanes at M = 3/4,
+    /// generic single-code keys otherwise.
+    fn run_with_fill<F>(&mut self, rows: usize, len: usize,
+                        valid_lens: &[usize], values: &[f32],
+                        d_head: usize, out: &mut [f32], fill: F)
+    where
+        F: Fn(usize, usize, usize, &mut [f32]) + Sync,
+    {
+        let workers = self.engine.plan_workers(rows, len);
+        let level = self.engine.simd_level();
+        let (quant, lut_exp, lut_sum) = self.engine.tables();
+        let group = lut_sum.group;
+        let nl = lut_exp.table.len();
+        let inv = &mut self.inv;
+        let packed = &mut self.packed;
+        let dims = (rows, len, d_head);
+        match quant.bits {
+            2 => drive_stream(
+                packed.bytes_mut(), inv, dims, valid_lens,
+                (group, nl), lut_exp, lut_sum, level, workers, out,
+                &fill,
+                |strip, m, keys, t0| encode_tile_g4(quant, level,
+                                                    strip, m, keys,
+                                                    t0),
+                |keys, norm, span, orow| plane::pv_g4(level, keys,
+                                                      norm, values,
+                                                      d_head, span,
+                                                      orow),
+            ),
+            3 | 4 => drive_stream(
+                packed.words_mut(), inv, dims, valid_lens,
+                (group, nl), lut_exp, lut_sum, level, workers, out,
+                &fill,
+                |strip, m, keys, t0| encode_tile_g2(quant, level,
+                                                    strip, m, keys,
+                                                    t0),
+                |keys, norm, span, orow| plane::pv_g2(level,
+                                                      quant.bits,
+                                                      keys, norm,
+                                                      values, d_head,
+                                                      span, orow),
+            ),
+            b if b <= 2 => drive_stream(
+                packed.bytes_mut(), inv, dims, valid_lens,
+                (group, nl), lut_exp, lut_sum, level, workers, out,
+                &fill,
+                |strip, m, keys, t0| encode_tile_generic(quant,
+                                                         lut_sum,
+                                                         strip, m,
+                                                         keys, t0),
+                |keys, norm, span, orow| plane::pv_generic(level,
+                                                           lut_sum,
+                                                           keys, norm,
+                                                           values,
+                                                           d_head,
+                                                           span,
+                                                           orow),
+            ),
+            _ => drive_stream(
+                packed.words_mut(), inv, dims, valid_lens,
+                (group, nl), lut_exp, lut_sum, level, workers, out,
+                &fill,
+                |strip, m, keys, t0| encode_tile_generic(quant,
+                                                         lut_sum,
+                                                         strip, m,
+                                                         keys, t0),
+                |keys, norm, span, orow| plane::pv_generic(level,
+                                                           lut_sum,
+                                                           keys, norm,
+                                                           values,
+                                                           d_head,
+                                                           span,
+                                                           orow),
+            ),
+        }
+    }
+}
+
+fn check_common(rows: usize, len: usize, valid_lens: &[usize],
+                values: &[f32], d_head: usize, out: &[f32]) {
+    assert_eq!(values.len(), len * d_head,
+               "values are {} floats, expected len*d_head = {}",
+               values.len(), len * d_head);
+    assert_eq!(out.len(), rows * d_head,
+               "out is {} floats, expected rows*d_head = {}",
+               out.len(), rows * d_head);
+    assert!(valid_lens.is_empty() || valid_lens.len() == rows,
+            "valid_lens arity {} != rows {rows}", valid_lens.len());
+}
+
+/// Split the packed plane, `inv`, and `out` into matching row ranges
+/// and run the three streaming passes over each — inline for one
+/// worker, through the scoped pool otherwise. Chunk regions are fixed
+/// before any worker starts (same carving as `plane::drive`), so
+/// output is bit-identical for every worker count.
+#[allow(clippy::too_many_arguments)]
+fn drive_stream<K, F, E, P>(packed: &mut Vec<K>, inv: &mut Vec<f32>,
+                            dims: (usize, usize, usize),
+                            valid_lens: &[usize],
+                            tables: (usize, usize), lut_exp: &LutExp,
+                            lut_sum: &LutSum, level: simd::Level,
+                            workers: usize, out: &mut [f32], fill: &F,
+                            enc: E, pv: P)
+where
+    K: PackedKey + Send,
+    F: Fn(usize, usize, usize, &mut [f32]) + Sync,
+    E: Fn(&[f32], f32, &mut [K], usize) + Sync,
+    P: Fn(&[K], &[f32], (usize, usize), &mut [f32]) + Sync,
+{
+    let (rows, len, d) = dims;
+    let (group, _) = tables;
+    let stride = len.div_ceil(group);
+    packed.resize(rows * stride, K::default());
+    inv.resize(rows, 0.0);
+    if workers <= 1 {
+        chunk_stream(0, packed, inv, out, (len, stride, d),
+                     valid_lens, tables, lut_exp, lut_sum, level,
+                     fill, &enc, &pv);
+        return;
+    }
+    // Over-split by 4x for dynamic balance (same policy as
+    // plane::drive and the batched kernel's drive_rows).
+    let chunk_rows = rows.div_ceil(workers * 4).max(1);
+    let mut chunks = Vec::new();
+    let mut krest: &mut [K] = packed;
+    let mut irest: &mut [f32] = inv;
+    let mut orest: &mut [f32] = out;
+    let mut r0 = 0usize;
+    while r0 < rows {
+        let take = chunk_rows.min(rows - r0);
+        let (k, ktail) =
+            std::mem::take(&mut krest).split_at_mut(take * stride);
+        let (iv, itail) =
+            std::mem::take(&mut irest).split_at_mut(take);
+        let (o, otail) =
+            std::mem::take(&mut orest).split_at_mut(take * d);
+        chunks.push((r0, k, iv, o));
+        krest = ktail;
+        irest = itail;
+        orest = otail;
+        r0 += take;
+    }
+    pool::run_chunks(chunks, workers, |(r0, k, iv, o)| {
+        chunk_stream(r0, k, iv, o, (len, stride, d), valid_lens,
+                     tables, lut_exp, lut_sum, level, fill, &enc,
+                     &pv);
+    });
+}
+
+/// One chunk of rows through the three streaming passes. The only f32
+/// score storage here is `strip`: one `TILE_LANES`-wide buffer reused
+/// for every tile of every row — the dense plane never exists.
+#[allow(clippy::too_many_arguments)]
+fn chunk_stream<K, F, E, P>(r0: usize, keys: &mut [K],
+                            inv: &mut [f32], out: &mut [f32],
+                            geom: (usize, usize, usize),
+                            valid_lens: &[usize],
+                            tables: (usize, usize), lut_exp: &LutExp,
+                            lut_sum: &LutSum, level: simd::Level,
+                            fill: &F, enc: &E, pv: &P)
+where
+    K: PackedKey,
+    F: Fn(usize, usize, usize, &mut [f32]),
+    E: Fn(&[f32], f32, &mut [K], usize),
+    P: Fn(&[K], &[f32], (usize, usize), &mut [f32]),
+{
+    let (len, stride, d) = geom;
+    let (group, nl) = tables;
+    let nrows = inv.len();
+    let mut strip = [0.0f32; TILE_LANES];
+    for (i, iv) in inv.iter_mut().enumerate() {
+        let r = r0 + i;
+        let n = row_valid(valid_lens, r, len);
+        if n == 0 {
+            *iv = 0.0;
+            continue;
+        }
+        // Max pass: Algorithm 2 max-shifts against the final row max,
+        // so every tile strip is produced once just to feed the fold.
+        let mut m = f32::NEG_INFINITY;
+        let mut t0 = 0usize;
+        while t0 < n {
+            let end = (t0 + TILE_LANES).min(n);
+            fill(r, t0, end, &mut strip[..end - t0]);
+            m = m.max(simd::row_max(level, &strip[..end - t0]));
+            t0 = end;
+        }
+        // Encode pass: regenerate each strip, quantize it into the
+        // row's packed keys, stream the keys through the fixed tree.
+        let mut ks = KeySumStream::new();
+        let mut t0 = 0usize;
+        while t0 < n {
+            let end = (t0 + TILE_LANES).min(n);
+            fill(r, t0, end, &mut strip[..end - t0]);
+            enc(&strip[..end - t0], m,
+                &mut keys[i * stride..(i + 1) * stride], t0);
+            ks.feed(lut_sum, &keys[i * stride + t0 / group
+                                   ..i * stride + end.div_ceil(group)]);
+            t0 = end;
+        }
+        let padded = n.next_multiple_of(group);
+        let mut sum = ks.finish();
+        sum -= (padded - n) as f32 * lut_exp.floor_value();
+        *iv = 1.0 / sum.max(1e-30);
+    }
+    // PV pass: identical block structure to plane::chunk_attend —
+    // premultiplied norm tables, TILE_ROWS rows sharing each resident
+    // value tile, decode fused into the accumulate.
+    let mut norm = [0.0f32; TILE_ROWS * NORM_LANES];
+    let mut b0 = 0usize;
+    while b0 < nrows {
+        let bn = TILE_ROWS.min(nrows - b0);
+        for bi in 0..bn {
+            let iv = inv[b0 + bi];
+            let dst = &mut norm[bi * NORM_LANES..bi * NORM_LANES + nl];
+            for (nd, &e) in dst.iter_mut().zip(lut_exp.table.iter()) {
+                *nd = e * iv;
+            }
+        }
+        let mut t0 = 0usize;
+        while t0 < len {
+            let t1 = (t0 + TILE_LANES).min(len);
+            for bi in 0..bn {
+                let i = b0 + bi;
+                let n = row_valid(valid_lens, r0 + i, len);
+                let end = t1.min(n);
+                if end <= t0 {
+                    continue;
+                }
+                pv(&keys[i * stride..(i + 1) * stride],
+                   &norm[bi * NORM_LANES..bi * NORM_LANES + nl],
+                   (t0, end), &mut out[i * d..(i + 1) * d]);
+            }
+            t0 = t1;
+        }
+        b0 += bn;
+    }
+}
+
+/// M = 2: quantize one strip tile straight into the row's byte keys.
+/// Bit-identical to the whole-row `encode_g4` front in `plane.rs`:
+/// the quantize is lane-local, `t0` is a multiple of `TILE_LANES` (so
+/// key boundaries align), and the partial final group can only occur
+/// in the row's last tile, where the `2*j` shifts match the whole-row
+/// tail.
+fn encode_tile_g4(quant: &Quantizer, level: simd::Level,
+                  strip: &[f32], m: f32, keys: &mut [u8],
+                  t0: usize) {
+    let k0 = t0 / 4;
+    let full = strip.len() / 4;
+    simd::quant_pack4(level, &strip[..full * 4], m, quant,
+                      &mut keys[k0..k0 + full]);
+    if full * 4 < strip.len() {
+        let mut key = 0usize;
+        for (j, &x) in strip[full * 4..].iter().enumerate() {
+            key |= (quant.code(x - m) as usize) << (2 * j);
+        }
+        keys[k0 + full] = key as u8;
+    }
+}
+
+/// M = 3/4: the tile-wise front of `encode_g2` (u16 pair keys; an odd
+/// row end leaves exactly one low-code lane).
+fn encode_tile_g2(quant: &Quantizer, level: simd::Level,
+                  strip: &[f32], m: f32, keys: &mut [u16],
+                  t0: usize) {
+    let bits = quant.bits as usize;
+    let k0 = t0 / 2;
+    let full = strip.len() / 2;
+    simd::quant_pack2(level, &strip[..full * 2], m, quant,
+                      &mut keys[k0..k0 + full], bits);
+    if full * 2 < strip.len() {
+        keys[k0 + full] =
+            quant.code(strip[strip.len() - 1] - m) as u16;
+    }
+}
+
+/// Any other grouping (M = 1 and M >= 5): the tile-wise front of
+/// `encode_generic`.
+fn encode_tile_generic<K: PackedKey>(quant: &Quantizer,
+                                     lut_sum: &LutSum, strip: &[f32],
+                                     m: f32, keys: &mut [K],
+                                     t0: usize) {
+    let g = lut_sum.group;
+    let bits = lut_sum.bits as usize;
+    let k0 = t0 / g;
+    let full = strip.len() / g;
+    for (k, lanes) in keys[k0..k0 + full]
+        .iter_mut()
+        .zip(strip[..full * g].chunks_exact(g))
+    {
+        let mut key = 0usize;
+        for (j, &x) in lanes.iter().enumerate() {
+            key |= (quant.code(x - m) as usize) << (bits * j);
+        }
+        *k = K::pack(key);
+    }
+    if full * g < strip.len() {
+        let mut key = 0usize;
+        for (j, &x) in strip[full * g..].iter().enumerate() {
+            key |= (quant.code(x - m) as usize) << (bits * j);
+        }
+        keys[k0 + full] = K::pack(key);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exaq::plane::AttentionPlane;
+    use crate::util::rng::SplitMix64;
+
+    fn random(n: usize, seed: u64, scale: f32) -> Vec<f32> {
+        let mut r = SplitMix64::new(seed);
+        (0..n).map(|_| (r.normal() as f32) * scale).collect()
+    }
+
+    fn assert_bits_equal(a: &[f32], b: &[f32], what: &str) {
+        assert_eq!(a.len(), b.len(), "{what}: length");
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(),
+                       "{what}: lane {i}: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn streaming_scores_match_the_fused_plane_at_every_m() {
+        let (rows, len, d) = (3usize, 21usize, 5usize);
+        let vlens = [len, 0, 7];
+        let scores = random(rows * len, 77, 2.0);
+        let values = random(len * d, 78, 1.0);
+        for bits in [1u32, 2, 3, 4, 5] {
+            let clip = -4.5;
+            let mut plane = AttentionPlane::new(bits, clip);
+            let mut fused = vec![0.0f32; rows * d];
+            plane.attend(&scores, rows, len, &vlens, &values, d,
+                         &mut fused);
+            let mut sa = StreamingAttention::new(bits, clip);
+            let mut got = vec![0.0f32; rows * d];
+            sa.attend_scores(&scores, rows, len, &vlens, &values, d,
+                             &mut got);
+            assert_bits_equal(&got, &fused, &format!("M={bits}"));
+        }
+    }
+
+    #[test]
+    fn streaming_matches_across_a_tile_seam() {
+        // len straddles one TILE_LANES seam, so the per-row key
+        // stream is fed in two KeySumStream slices
+        let (rows, len, d) = (3usize, TILE_LANES + 3, 4usize);
+        let scores = random(rows * len, 11, 3.0);
+        let values = random(len * d, 12, 1.0);
+        for bits in [2u32, 3, 4] {
+            let mut plane = AttentionPlane::new(bits, -5.0);
+            let mut fused = vec![0.0f32; rows * d];
+            plane.attend(&scores, rows, len, &[], &values, d,
+                         &mut fused);
+            let mut sa = StreamingAttention::new(bits, -5.0);
+            let mut got = vec![0.0f32; rows * d];
+            sa.attend_scores(&scores, rows, len, &[], &values, d,
+                             &mut got);
+            assert_bits_equal(&got, &fused, &format!("M={bits}"));
+        }
+    }
+
+    #[test]
+    fn qkv_front_equals_scores_front_on_strip_scores() {
+        // attend() must equal attend_scores() over a dense plane
+        // built from the same qk_strip lanes.
+        let (rows, len, d) = (4usize, 19usize, 6usize);
+        let q = random(rows * d, 21, 1.0);
+        let k = random(len * d, 22, 1.0);
+        let values = random(len * d, 23, 1.0);
+        let scale = 1.0 / (d as f32).sqrt();
+        let mut sa = StreamingAttention::new(2, -4.0);
+        let level = sa.simd_level();
+        let mut scores = vec![0.0f32; rows * len];
+        for r in 0..rows {
+            simd::qk_strip(level, &q[r * d..(r + 1) * d], &k, d,
+                           scale, &mut scores[r * len..(r + 1) * len]);
+        }
+        let vlens = [len, 11, 0, 5];
+        let mut want = vec![0.0f32; rows * d];
+        sa.attend_scores(&scores, rows, len, &vlens, &values, d,
+                         &mut want);
+        let mut got = vec![0.0f32; rows * d];
+        sa.attend(&q, rows, len, &vlens, &k, &values, d, scale,
+                  &mut got);
+        assert_bits_equal(&got, &want, "qkv-vs-scores");
+    }
+
+    #[test]
+    fn worker_counts_do_not_change_the_output() {
+        let (rows, len, d) = (9usize, 33usize, 4usize);
+        let scores = random(rows * len, 5, 3.0);
+        let values = random(len * d, 6, 1.0);
+        let mut sa = StreamingAttention::new(2, -4.0);
+        let mut want = vec![0.0f32; rows * d];
+        sa.set_threads(1)
+            .attend_scores(&scores, rows, len, &[], &values, d,
+                           &mut want);
+        for workers in [2usize, 7, 0] {
+            let mut got = vec![0.0f32; rows * d];
+            sa.set_threads(workers)
+                .attend_scores(&scores, rows, len, &[], &values, d,
+                               &mut got);
+            assert_bits_equal(&got, &want, &format!("w={workers}"));
+        }
+    }
+
+    #[test]
+    fn zero_geometry_is_a_no_op() {
+        let mut sa = StreamingAttention::new(2, -4.0);
+        let mut out: Vec<f32> = Vec::new();
+        sa.attend_scores(&[], 0, 0, &[], &[], 0, &mut out);
+        let mut out = vec![7.0f32; 3 * 2];
+        sa.attend_scores(&[], 3, 0, &[], &[], 2, &mut out);
+        assert!(out.iter().all(|&x| x == 0.0));
+        let mut out = vec![7.0f32; 2 * 3];
+        sa.attend(&[0.0; 6], 2, 0, &[], &[], &[], 3, 1.0, &mut out);
+        assert!(out.iter().all(|&x| x == 0.0));
+    }
+}

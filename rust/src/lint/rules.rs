@@ -106,6 +106,7 @@ const HOT_PATHS: &[&str] = &[
     "rust/src/exaq/softmax.rs",
     "rust/src/exaq/batched.rs",
     "rust/src/exaq/plane.rs",
+    "rust/src/exaq/stream.rs",
     "rust/src/exaq/simd.rs",
     "rust/src/exaq/lut.rs",
     "rust/src/util/pool.rs",
@@ -119,6 +120,7 @@ const FLOAT_SCOPE: &[&str] = &[
     "rust/src/exaq/plane.rs",
     "rust/src/exaq/simd.rs",
     "rust/src/exaq/softmax.rs",
+    "rust/src/exaq/stream.rs",
 ];
 
 /// File exempt from [`THREAD`]'s spawn/scope check: the scoped pool.

@@ -675,19 +675,24 @@ fn cmd_lint(args: &Args) -> i32 {
 }
 
 /// `repro compare <baseline.json> <current.json> [--threshold 0.10]
-/// [--gate hard|soft]` — the bench regression gate. Exit codes: 0
-/// pass, 1 regression (hard gate only), 2 unreadable/invalid input.
-/// A missing *baseline* file passes with a note (repos grow the
-/// baseline snapshot later); a missing *current* file is an error.
-/// `EXAQ_BENCH_GATE=soft` downgrades failures to warnings, same as
-/// `--gate soft` — for riding the gate non-blocking in CI first.
+/// [--gate hard|soft] [--markdown]` — the bench regression gate.
+/// Exit codes: 0 pass, 1 regression (hard gate only), 2
+/// unreadable/invalid input. A missing *baseline* file passes with a
+/// note (repos grow the baseline snapshot later); a missing
+/// *current* file is an error. `EXAQ_BENCH_GATE=soft` downgrades
+/// failures to warnings, same as `--gate soft` — for riding the gate
+/// non-blocking in CI first. `--markdown` swaps the plain-text
+/// report for a per-cell markdown table (deltas per metric); the
+/// exit-code contract is identical in both modes. Because the flag
+/// parser pairs `--key value`, put `--markdown` after the two file
+/// paths.
 fn cmd_compare(args: &Args) -> i32 {
     use exaq_repro::report::compare;
     use exaq_repro::util::json::Json;
     let [base_path, cur_path] = args.positionals.as_slice() else {
         eprintln!("usage: repro compare <baseline.json> \
                    <current.json> [--threshold 0.10] \
-                   [--gate hard|soft]");
+                   [--gate hard|soft] [--markdown]");
         return 2;
     };
     let base_body = match std::fs::read_to_string(base_path) {
@@ -732,7 +737,11 @@ fn cmd_compare(args: &Args) -> i32 {
             return 2;
         }
     };
-    print!("{}", report.render());
+    if args.flags.contains_key("markdown") {
+        print!("{}", report.render_markdown());
+    } else {
+        print!("{}", report.render());
+    }
     if report.failed() {
         if soft {
             println!("repro compare: FAILED, but gate is soft \

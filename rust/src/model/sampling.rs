@@ -13,6 +13,7 @@
 use crate::exaq::batched::{ensure_engine, BatchSoftmax};
 use crate::exaq::plane::AttentionPlane;
 use crate::exaq::softmax::softmax_exact;
+use crate::exaq::stream::StreamingAttention;
 use crate::util::rng::SplitMix64;
 
 /// How to turn logits into a next token.
@@ -180,6 +181,9 @@ pub struct BatchSampler {
     /// policy as `engines` so alternating configurations never rebuild
     /// LUTs or reallocate the packed plane.
     planes: Vec<AttentionPlane>,
+    /// Per-(bits, clip) streaming one-pass kernels, cached under the
+    /// same policy (see [`BatchSampler::attend_streaming`]).
+    streams: Vec<StreamingAttention>,
     // partition scratch, reused so a decode tick allocates nothing
     // at steady state
     groups: Vec<(RowClass, usize)>,
@@ -228,6 +232,33 @@ impl BatchSampler {
         self.planes[pi].set_threads(self.threads);
         self.planes[pi]
             .attend(scores, rows, len, valid_lens, values, d_head, out);
+    }
+
+    /// [`Self::attend_rows`] through the streaming one-pass kernel
+    /// ([`crate::exaq::StreamingAttention::attend_scores`]): same
+    /// `[rows × len]` score plane in, bit-identical attended vectors
+    /// out, but the kernel consumes the scores one `TILE_LANES` strip
+    /// at a time and never allocates its own dense f32 plane. Kernels
+    /// are cached per (bits, clip) exactly like `planes`/`engines`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn attend_streaming(&mut self, scores: &[f32], rows: usize,
+                            len: usize, valid_lens: &[usize],
+                            values: &[f32], d_head: usize, bits: u32,
+                            clip: f32, out: &mut [f32]) {
+        let si = match self
+            .streams
+            .iter()
+            .position(|s| s.matches(bits, clip))
+        {
+            Some(i) => i,
+            None => {
+                self.streams.push(StreamingAttention::new(bits, clip));
+                self.streams.len() - 1
+            }
+        };
+        self.streams[si].set_threads(self.threads);
+        self.streams[si].attend_scores(scores, rows, len, valid_lens,
+                                       values, d_head, out);
     }
 
     /// Sample one token per entry of `rows` from a `[* × vocab]` logits
@@ -522,6 +553,42 @@ mod tests {
         sampler.attend_rows(&scores, rows, len, &vlens, &values, d, 2,
                             -4.0, &mut fused);
         assert_eq!(sampler.planes.len(), 3);
+    }
+
+    #[test]
+    fn sampler_attend_streaming_matches_the_fused_entry() {
+        // the streaming entry point must produce the exact vectors of
+        // the fused plane entry, and keep its own per-config cache
+        let (rows, len, d) = (4usize, 37usize, 6usize);
+        let mut gen = SplitMix64::new(77);
+        let scores: Vec<f32> =
+            (0..rows * len).map(|_| gen.normal() as f32).collect();
+        let values: Vec<f32> =
+            (0..len * d).map(|_| gen.normal() as f32).collect();
+        let vlens = [len, 0, 11, len];
+
+        let mut sampler = BatchSampler::default();
+        sampler.set_threads(2);
+        let mut fused = vec![0.0f32; rows * d];
+        let mut streamed = vec![0.0f32; rows * d];
+        for bits in [2u32, 3, 4] {
+            sampler.attend_rows(&scores, rows, len, &vlens, &values,
+                                d, bits, -4.0, &mut fused);
+            sampler.attend_streaming(&scores, rows, len, &vlens,
+                                     &values, d, bits, -4.0,
+                                     &mut streamed);
+            let a: Vec<u32> =
+                fused.iter().map(|x| x.to_bits()).collect();
+            let b: Vec<u32> =
+                streamed.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(a, b, "bits={bits}");
+        }
+        // three configs -> three cached kernels, and repeating a
+        // config must not grow the cache
+        assert_eq!(sampler.streams.len(), 3);
+        sampler.attend_streaming(&scores, rows, len, &vlens, &values,
+                                 d, 2, -4.0, &mut streamed);
+        assert_eq!(sampler.streams.len(), 3);
     }
 
     #[test]

@@ -33,6 +33,7 @@ pub const KEY_FIELDS: &[&str] = &[
 pub const METRICS: &[&str] = &[
     "algo1_us", "scalar_us", "batched_us", "baseline_us", "host_s",
     "scalar_host_s", "batched_host_s", "fused_us", "two_step_us",
+    "streaming_us",
 ];
 
 /// One metric of one matched cell, baseline vs current.
@@ -125,6 +126,57 @@ impl CompareReport {
                 let _ = writeln!(out, "  ok — no shared metrics");
             }
         }
+        out
+    }
+
+    /// Render the full comparison as a GitHub-flavoured markdown
+    /// table: one row per (cell, metric) with baseline, current,
+    /// delta, and status. Unlike [`Self::render`] (which only prints
+    /// problems), every compared metric gets a row, so the output is
+    /// paste-ready for PR descriptions. Purely presentational — the
+    /// pass/fail contract stays with [`Self::failed`].
+    pub fn render_markdown(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "### bench `{}` — {} matched cells, threshold {:.0}%",
+            self.bench,
+            self.cells.len(),
+            100.0 * self.threshold
+        );
+        let _ = writeln!(out);
+        let _ = writeln!(
+            out,
+            "| cell | metric | baseline | current | delta | status |"
+        );
+        let _ =
+            writeln!(out, "|---|---|---:|---:|---:|---|");
+        for cell in &self.cells {
+            for d in &cell.diffs {
+                let status = if d.ratio > self.threshold {
+                    "**REGRESSION**"
+                } else if d.ratio < 0.0 {
+                    "faster"
+                } else {
+                    "ok"
+                };
+                let _ = writeln!(
+                    out,
+                    "| {} | {} | {:.3} | {:.3} | {:+.1}% | {} |",
+                    cell.key, d.metric, d.base, d.current,
+                    100.0 * d.ratio, status
+                );
+            }
+        }
+        for key in &self.missing {
+            let _ = writeln!(
+                out,
+                "| {key} | — | — | — | — | **MISSING** |"
+            );
+        }
+        let _ = writeln!(out);
+        let verdict = if self.failed() { "FAIL" } else { "PASS" };
+        let _ = writeln!(out, "verdict: **{verdict}**");
         out
     }
 }
@@ -290,6 +342,42 @@ mod tests {
         let bad = Json::parse("{\"bench\":\"x\"}").unwrap();
         assert!(compare(&bad, &cur, DEFAULT_THRESHOLD).is_err());
         assert!(compare(&base, &bad, DEFAULT_THRESHOLD).is_err());
+    }
+
+    #[test]
+    fn markdown_render_tables_every_metric_and_the_verdict() {
+        let base = doc(&[
+            "{\"bits\":2,\"batched_us\":10.0,\"streaming_us\":8.0}",
+        ]);
+        let cur = doc(&[
+            "{\"bits\":2,\"batched_us\":12.0,\"streaming_us\":7.0}",
+        ]);
+        let r = compare(&base, &cur, 0.10).unwrap();
+        let md = r.render_markdown();
+        // header + alignment row, one row per metric, verdict line
+        assert!(md.contains(
+            "| cell | metric | baseline | current | delta | status |"
+        ));
+        assert!(md.contains(
+            "| bits=2 | batched_us | 10.000 | 12.000 | +20.0% | \
+             **REGRESSION** |"
+        ));
+        assert!(md.contains(
+            "| bits=2 | streaming_us | 8.000 | 7.000 | -12.5% | \
+             faster |"
+        ));
+        assert!(md.contains("verdict: **FAIL**"));
+        // a clean compare renders PASS and no regression rows
+        let ok = compare(&base, &base, 0.10).unwrap();
+        let md = ok.render_markdown();
+        assert!(md.contains("verdict: **PASS**"));
+        assert!(!md.contains("REGRESSION"));
+        // vanished cells still surface in the table
+        let shrunk = doc(&["{\"bits\":3,\"batched_us\":1.0}"]);
+        let miss = compare(&base, &shrunk, 0.10).unwrap();
+        assert!(miss
+            .render_markdown()
+            .contains("| bits=2 | — | — | — | — | **MISSING** |"));
     }
 
     #[test]

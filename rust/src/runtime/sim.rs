@@ -19,14 +19,18 @@
 //! packed pipeline ([`AttentionPlane::attend`]); the attended vectors
 //! become the layer-0 value-cache payload. Set
 //! [`SimConfig::fused_attention`] = false for the two-step
-//! quantize -> softmax -> dense-PV reference — the vectors are
-//! bit-identical, only the host time differs.
+//! quantize -> softmax -> dense-PV reference, or
+//! [`SimConfig::streaming_attention`] = true for the one-pass
+//! streaming kernel that never holds a dense score plane — the
+//! vectors are bit-identical in every mode, only peak score memory
+//! and host time differ.
 
 use std::rc::Rc;
 
 use crate::cost::{GemmPrecision, MachineModel, TransformerShape};
 use crate::exaq::batched::BatchSoftmax;
 use crate::exaq::plane::AttentionPlane;
+use crate::exaq::stream::StreamingAttention;
 use crate::util::clock::Clock;
 use crate::util::error::{bail, Result};
 use crate::util::rng::SplitMix64;
@@ -69,6 +73,12 @@ pub struct SimConfig {
     /// vectors; the flag exists so benches can report the host-time
     /// delta of keeping the plane packed.
     pub fused_attention: bool,
+    /// Route attention through the streaming one-pass kernel
+    /// ([`crate::exaq::StreamingAttention`]) instead: scores are
+    /// consumed tile by tile and the kernel never holds a dense f32
+    /// score plane. Bit-identical vectors again; takes precedence
+    /// over [`SimConfig::fused_attention`] when set.
+    pub streaming_attention: bool,
     /// Worker count for the batched plane kernel (0 = auto: the row
     /// pool's own heuristic). Logits are bit-identical for any value —
     /// the pool is deterministic — so this only moves host time.
@@ -96,6 +106,7 @@ impl Default for SimConfig {
             shape_clip: -4.0,
             batched_softmax: true,
             fused_attention: true,
+            streaming_attention: false,
             threads: 0,
             clock_hz: 1.0e6,
             gemm_precision: GemmPrecision::Bf16,
@@ -165,6 +176,10 @@ pub struct SimBackend {
     /// The fused packed attention plane shaping every step's score
     /// plane at the same (bits, clip) as the logit engine.
     plane: AttentionPlane,
+    /// The streaming one-pass kernel at the same (bits, clip); used
+    /// when [`SimConfig::streaming_attention`] is set (bit-identical
+    /// to the plane — only peak score memory and host time differ).
+    stream: StreamingAttention,
     /// Seeded `[max_seq × head_dim]` value plane shared by every head
     /// (built once, never mutated — the PV pass only reads it).
     values: Vec<f32>,
@@ -191,6 +206,9 @@ impl SimBackend {
         let mut plane =
             AttentionPlane::new(cfg.shape_bits, cfg.shape_clip);
         plane.set_threads(cfg.threads);
+        let mut stream =
+            StreamingAttention::new(cfg.shape_bits, cfg.shape_clip);
+        stream.set_threads(cfg.threads);
         let mut vrng = SplitMix64::new(cfg.seed ^ 0xA77E);
         let values: Vec<f32> = (0..cfg.max_seq * cfg.head_dim)
             .map(|_| vrng.normal() as f32)
@@ -201,6 +219,7 @@ impl SimBackend {
             clock,
             engine,
             plane,
+            stream,
             values,
             rolls: Vec::new(),
             att_scores: Vec::new(),
@@ -269,11 +288,16 @@ impl SimBackend {
     /// Run the prepared `[rows × max_seq]` score plane
     /// (`self.att_scores` / `self.att_vlens`) through the packed
     /// attention pipeline into `self.att_out` (`[rows × head_dim]`).
-    /// Fused and two-step are bit-identical by the plane contract.
+    /// Streaming, fused, and two-step are bit-identical by the
+    /// plane/stream contracts.
     fn run_attention(&mut self, rows: usize) {
         let (seq, hd) = (self.cfg.max_seq, self.cfg.head_dim);
         self.att_out.resize(rows * hd, 0.0);
-        if self.cfg.fused_attention {
+        if self.cfg.streaming_attention {
+            self.stream.attend_scores(&self.att_scores, rows, seq,
+                                      &self.att_vlens, &self.values,
+                                      hd, &mut self.att_out);
+        } else if self.cfg.fused_attention {
             self.plane.attend(&self.att_scores, rows, seq,
                               &self.att_vlens, &self.values, hd,
                               &mut self.att_out);
@@ -662,6 +686,74 @@ mod tests {
             .unwrap();
         assert_eq!(sa.vc.as_f32().unwrap(), sb.vc.as_f32().unwrap(),
                    "fused decode attention diverged");
+    }
+
+    #[test]
+    fn latency_charge_back_reads_the_shared_constants_table() {
+        // the backend charges the clock through MachineModel::default,
+        // which must be the same machine the cost CLI quotes: rebuild
+        // it by hand from cost::constants and demand exact agreement
+        use crate::cost::{constants, CycleTable};
+        let (b, _clock) = backend();
+        let model = MachineModel {
+            mxu_bf16_macs: constants::MXU_BF16_MACS,
+            mxu_fp8_macs: constants::MXU_FP8_MACS,
+            vpu_lanes: constants::VPU_LANES,
+            hbm_bytes_per_cycle: constants::HBM_BYTES_PER_CYCLE,
+            cycles: CycleTable {
+                exp: constants::EXP_CYCLES,
+                lut: constants::LUT_CYCLES,
+                quant: constants::QUANT_CYCLES,
+                add: constants::ADD_CYCLES,
+                div: constants::DIV_CYCLES,
+            },
+        };
+        for batch in [1usize, 4] {
+            let want = model.prefill_cycles(b.cfg.shape(batch),
+                                            b.cfg.gemm_precision,
+                                            Some(b.cfg.shape_bits))
+                / b.cfg.clock_hz;
+            assert_eq!(b.prefill_seconds(batch).to_bits(),
+                       want.to_bits(),
+                       "prefill charge drifted from the table");
+            let want = model
+                .decode_step_cycles(b.cfg.shape(batch),
+                                    b.cfg.gemm_precision,
+                                    Some(b.cfg.shape_bits), batch,
+                                    b.cfg.max_seq)
+                / b.cfg.clock_hz;
+            assert_eq!(b.decode_seconds(batch).to_bits(),
+                       want.to_bits(),
+                       "decode charge drifted from the table");
+        }
+    }
+
+    #[test]
+    fn streaming_attention_writes_identical_caches() {
+        // the one-pass streaming kernel must land the exact same
+        // attended vectors in the value cache as the fused plane, for
+        // whole prefill planes and for decode steps
+        let clock = Rc::new(VirtualClock::new());
+        let mut a =
+            SimBackend::new(SimConfig::default(), clock.clone());
+        let stream_cfg = SimConfig { streaming_attention: true,
+                                     ..SimConfig::default() };
+        let mut b = SimBackend::new(stream_cfg, clock);
+        let tokens = prompt_tensor(&a.cfg.clone());
+        let (la, mut sa) =
+            a.prefill("sim", QuantMode::None, &tokens, None).unwrap();
+        let (lb, mut sb) =
+            b.prefill("sim", QuantMode::None, &tokens, None).unwrap();
+        assert_eq!(la.as_f32().unwrap(), lb.as_f32().unwrap(),
+                   "streaming mode changed prefill logits");
+        assert_eq!(sa.vc.as_f32().unwrap(), sb.vc.as_f32().unwrap(),
+                   "streaming prefill attention diverged");
+        a.decode("sim", QuantMode::None, &[5], &[3], &mut sa, None)
+            .unwrap();
+        b.decode("sim", QuantMode::None, &[5], &[3], &mut sb, None)
+            .unwrap();
+        assert_eq!(sa.vc.as_f32().unwrap(), sb.vc.as_f32().unwrap(),
+                   "streaming decode attention diverged");
     }
 
     #[test]

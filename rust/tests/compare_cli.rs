@@ -1,0 +1,127 @@
+//! End-to-end exercise of `repro compare` through the real binary:
+//! the exit-code contract (0 pass / 1 regression / 2 broken input)
+//! must be identical with and without `--markdown`, and the markdown
+//! mode must emit the per-cell table instead of the plain report.
+
+use std::path::PathBuf;
+use std::process::Command;
+
+fn fixture_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "exaq-compare-cli-{tag}-{}",
+        std::process::id()
+    ));
+    std::fs::create_dir_all(&dir).expect("mkdir fixture");
+    dir
+}
+
+fn write_doc(dir: &PathBuf, name: &str, rows: &str) -> String {
+    let body = format!(
+        "{{\"bench\":\"attention\",\"meta\":{{}},\
+         \"results\":[{rows}]}}"
+    );
+    let path = dir.join(name);
+    std::fs::write(&path, body).expect("write bench doc");
+    path.to_string_lossy().into_owned()
+}
+
+fn run(args: &[&str]) -> (Option<i32>, String, String) {
+    let out = Command::new(env!("CARGO_BIN_EXE_repro"))
+        .args(args)
+        .env_remove("EXAQ_BENCH_GATE")
+        .output()
+        .expect("repro compare runs");
+    (
+        out.status.code(),
+        String::from_utf8_lossy(&out.stdout).into_owned(),
+        String::from_utf8_lossy(&out.stderr).into_owned(),
+    )
+}
+
+const BASE_ROW: &str = "{\"rows\":64,\"len\":1024,\"bits\":2,\
+                        \"kernel\":\"attend\",\"fused_us\":10.0,\
+                        \"streaming_us\":8.0}";
+const SLOW_ROW: &str = "{\"rows\":64,\"len\":1024,\"bits\":2,\
+                        \"kernel\":\"attend\",\"fused_us\":15.0,\
+                        \"streaming_us\":7.0}";
+
+#[test]
+fn markdown_flag_swaps_the_report_but_not_the_exit_code() {
+    let dir = fixture_dir("swap");
+    let base = write_doc(&dir, "base.json", BASE_ROW);
+    let slow = write_doc(&dir, "slow.json", SLOW_ROW);
+
+    // plain mode: regression -> exit 1, plain-text report
+    let (code, stdout, _) = run(&["compare", &base, &slow]);
+    assert_eq!(code, Some(1), "plain gate must fail:\n{stdout}");
+    assert!(stdout.contains("REGRESSION"), "plain report:\n{stdout}");
+    assert!(!stdout.contains("| cell |"), "no table in plain mode");
+
+    // markdown mode (flag trails the positionals): same exit code,
+    // table output with one row per metric and the verdict line
+    let (code, stdout, _) =
+        run(&["compare", &base, &slow, "--markdown"]);
+    assert_eq!(code, Some(1), "markdown gate must fail:\n{stdout}");
+    assert!(stdout.contains(
+        "| cell | metric | baseline | current | delta | status |"
+    ), "missing table header:\n{stdout}");
+    assert!(stdout.contains(
+        "| rows=64 len=1024 bits=2 kernel=attend | fused_us | \
+         10.000 | 15.000 | +50.0% | **REGRESSION** |"
+    ), "missing regression row:\n{stdout}");
+    assert!(stdout.contains(
+        "| rows=64 len=1024 bits=2 kernel=attend | streaming_us | \
+         8.000 | 7.000 | -12.5% | faster |"
+    ), "missing faster row:\n{stdout}");
+    assert!(stdout.contains("verdict: **FAIL**"), "{stdout}");
+
+    // identical documents: exit 0 and a PASS verdict
+    let (code, stdout, _) =
+        run(&["compare", &base, &base, "--markdown"]);
+    assert_eq!(code, Some(0), "identical docs pass:\n{stdout}");
+    assert!(stdout.contains("verdict: **PASS**"), "{stdout}");
+
+    // soft gate downgrades the markdown failure to exit 0 too
+    // (--markdown goes last: the `--key value` parser would
+    // otherwise swallow the next flag as its value)
+    let (code, stdout, _) = run(&[
+        "compare", &base, &slow, "--gate", "soft", "--markdown",
+    ]);
+    assert_eq!(code, Some(0), "soft gate passes:\n{stdout}");
+    assert!(stdout.contains("verdict: **FAIL**"),
+            "soft gate still reports the failure:\n{stdout}");
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn broken_inputs_exit_two_in_both_modes() {
+    let dir = fixture_dir("broken");
+    let base = write_doc(&dir, "base.json", BASE_ROW);
+    let bad = dir.join("bad.json");
+    std::fs::write(&bad, "{\"bench\":\"attention\"}")
+        .expect("write bad doc");
+    let bad = bad.to_string_lossy().into_owned();
+
+    for tail in [&[][..], &["--markdown"][..]] {
+        let mut args = vec!["compare", base.as_str(), bad.as_str()];
+        args.extend_from_slice(tail);
+        let (code, stdout, stderr) = run(&args);
+        assert_eq!(code, Some(2),
+                   "invalid current doc is exit 2 \
+                    (args {args:?}):\n{stdout}\n{stderr}");
+    }
+
+    // a missing *baseline* passes with a note in either mode — the
+    // note path never reaches the renderer, so markdown is a no-op
+    let gone = dir.join("nope.json").to_string_lossy().into_owned();
+    for tail in [&[][..], &["--markdown"][..]] {
+        let mut args = vec!["compare", gone.as_str(), base.as_str()];
+        args.extend_from_slice(tail);
+        let (code, stdout, _) = run(&args);
+        assert_eq!(code, Some(0), "missing baseline passes:\n{stdout}");
+        assert!(stdout.contains("nothing to gate against"));
+    }
+
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -147,6 +147,37 @@ fn attention_plane_is_inside_the_kernel_scopes() {
 }
 
 #[test]
+fn streaming_kernel_is_inside_the_kernel_scopes() {
+    // the streaming one-pass kernel carries the same bit-exactness
+    // contract as the fused plane, so it sits in the same three
+    // scopes: no panics, no ad-hoc float reductions, no raw thread
+    // primitives or arch gates
+    let v = single("rust/src/exaq/stream.rs",
+                   "fn f(x: Option<u32>) -> u32 { x.unwrap() }\n");
+    assert_eq!(v.rule, "no-panic-hot-path");
+    assert_eq!(v.line, 1);
+    let v = single("rust/src/exaq/stream.rs",
+                   "fn d(xs: &[f32]) -> f32 {\n\
+                    \x20   xs.iter().sum()\n}\n");
+    assert_eq!(v.rule, "float-reduction-discipline");
+    assert_eq!((v.line, v.col), (2, 15));
+    let v = single("rust/src/exaq/stream.rs",
+                   "fn f() { std::thread::scope(|_| {}); }\n");
+    assert_eq!(v.rule, "thread-discipline");
+    assert_eq!((v.line, v.col), (1, 15));
+    let v = single("rust/src/exaq/stream.rs",
+                   "#[cfg(target_arch = \"x86_64\")]\nfn f() {}\n");
+    assert_eq!(v.rule, "thread-discipline");
+    assert_eq!((v.line, v.col), (1, 7));
+    // the fixed-tree accumulators the kernel actually uses stay legal
+    clean("rust/src/exaq/stream.rs",
+          "fn d(xs: &[f32; 4]) -> f32 {\n\
+           \x20   let a0 = xs[0] + xs[1];\n\
+           \x20   let a1 = xs[2] + xs[3];\n\
+           \x20   a0 + a1\n}\n");
+}
+
+#[test]
 fn fabric_router_and_replica_are_hot_path_scoped() {
     // the serving fabric's router + replica layers sit on the decode
     // tick: panics are banned there exactly like in the batcher...

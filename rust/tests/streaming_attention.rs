@@ -1,0 +1,280 @@
+//! Integration suite for the streaming one-pass attention kernel
+//! (`StreamingAttention`): a hand-rolled randomized sweep asserting
+//! *bit-exact* agreement with the fused packed plane
+//! (`AttentionPlane::attend`) across rows / lens / head dims /
+//! bit-widths / clips / masks, SIMD-level and worker-count invariance
+//! with lens straddling the `TILE_LANES` seam (len % TILE_LANES in
+//! {0, 1, group-1} included by construction), the fused-QK^T front
+//! against the caller-materialized-scores front, hostile inputs
+//! (NaN / ±inf rows, all-clipped rows, zero-length tails), the
+//! sampler's streaming entry point, and the O(1) peak-score-memory
+//! accounting. Mirrors `rust/tests/attention_plane.rs` — the
+//! streaming kernel inherits the exact same contract, minus the
+//! dense plane.
+
+use exaq_repro::exaq::footprint::{dense_plane_bytes,
+                                  packed_plane_bytes,
+                                  streaming_strip_bytes};
+use exaq_repro::exaq::plane::{AttentionPlane, TILE_LANES, TILE_ROWS};
+use exaq_repro::exaq::simd;
+use exaq_repro::exaq::stream::StreamingAttention;
+use exaq_repro::model::sampling::BatchSampler;
+use exaq_repro::util::rng::SplitMix64;
+
+fn random(n: usize, seed: u64, scale: f32) -> Vec<f32> {
+    let mut r = SplitMix64::new(seed);
+    (0..n).map(|_| (r.normal() as f32) * scale).collect()
+}
+
+fn assert_bits_equal(a: &[f32], b: &[f32], tag: &str) {
+    assert_eq!(a.len(), b.len(), "{tag}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(),
+                   "{tag}: lane {i}: {x} vs {y}");
+    }
+}
+
+#[test]
+fn randomized_sweep_streaming_matches_fused_bitwise() {
+    // 120 random configurations: rows 0..10, len 1..300 (often not a
+    // multiple of the packing group or the tile width), d_head 1..40,
+    // hostile valid_lens (0, > len), bits 1-5, random clips and
+    // scales — the streaming kernel must reproduce the fused plane
+    // bit-for-bit while never holding more than one score strip
+    let mut meta = SplitMix64::new(0xA77E);
+    let mut streams: Vec<StreamingAttention> = Vec::new();
+    for trial in 0..120 {
+        let rows = meta.below(10);
+        let len = 1 + meta.below(300);
+        let d = 1 + meta.below(40);
+        let bits = 1 + meta.below(5) as u32;
+        let clip = -1.0 - (meta.uniform() as f32) * 6.0;
+        let scale = 0.5 + (meta.uniform() as f32) * 3.0;
+        let valid_lens: Vec<usize> = match meta.below(3) {
+            0 => Vec::new(), // empty = full rows
+            1 => (0..rows).map(|_| meta.below(len + 1)).collect(),
+            _ => (0..rows)
+                .map(|_| meta.below(2 * len + 8)) // often > len
+                .collect(),
+        };
+        let scores = random(rows * len, 0x5EED + trial, scale);
+        let values = random(len * d, 0xFEED + trial, 1.0);
+
+        // reuse kernels across trials the way serving does, to also
+        // exercise packed-scratch reuse at changing shapes
+        let stream = match streams
+            .iter_mut()
+            .position(|s| s.matches(bits, clip))
+        {
+            Some(i) => &mut streams[i],
+            None => {
+                streams.push(StreamingAttention::new(bits, clip));
+                streams.last_mut().expect("just pushed")
+            }
+        };
+        let tag = format!(
+            "trial {trial}: rows={rows} len={len} d={d} bits={bits}");
+        let mut want = vec![0.0f32; rows * d];
+        AttentionPlane::new(bits, clip).attend(
+            &scores, rows, len, &valid_lens, &values, d, &mut want);
+        let mut got = vec![0.0f32; rows * d];
+        stream.attend_scores(&scores, rows, len, &valid_lens, &values,
+                             d, &mut got);
+        assert_bits_equal(&got, &want, &tag);
+        // packed scratch stays in lockstep with the fused layout
+        assert_eq!(stream.plane_bytes(),
+                   packed_plane_bytes(rows, len, bits), "{tag}");
+    }
+}
+
+#[test]
+fn simd_levels_and_workers_are_invariant_across_tile_seams() {
+    // lens straddling the TILE_LANES seam and the packing-group tail
+    // (len % TILE_LANES covers 0, 1, 2, TILE_LANES - 1, 3, 5, 1), at
+    // every available lane level and worker counts {1, 2, 7, auto}:
+    // every output must be bit-identical to the fused plane at
+    // scalar / one worker
+    let lens = [TILE_LANES - 1, TILE_LANES, TILE_LANES + 1,
+                TILE_LANES + 2, 2 * TILE_LANES + 3, 5, 1];
+    let rows = TILE_ROWS + 3; // one full row block plus a partial one
+    let d = 9; // off the 4/8-lane SIMD widths, exercises axpy tails
+    for bits in [2u32, 3, 4] {
+        for (li, &len) in lens.iter().enumerate() {
+            let scores = random(rows * len, 31 + li as u64, 2.0);
+            let values = random(len * d, 67 + li as u64, 1.0);
+            let vlens: Vec<usize> =
+                (0..rows).map(|r| (r * len).div_ceil(rows)).collect();
+            let mut want = vec![0.0f32; rows * d];
+            let mut plane = AttentionPlane::new(bits, -4.0);
+            plane.set_simd_level(simd::Level::Scalar).set_threads(1);
+            plane.attend(&scores, rows, len, &vlens, &values, d,
+                         &mut want);
+            let mut stream = StreamingAttention::new(bits, -4.0);
+            for level in simd::available_levels() {
+                for workers in [1usize, 2, 7, 0] {
+                    let mut got = vec![0.0f32; rows * d];
+                    stream.set_simd_level(level).set_threads(workers);
+                    stream.attend_scores(&scores, rows, len, &vlens,
+                                         &values, d, &mut got);
+                    assert_bits_equal(
+                        &got, &want,
+                        &format!("bits={bits} len={len} \
+                                  level={} workers={workers}",
+                                 level.name()));
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn qkv_front_matches_the_scores_front_at_every_level() {
+    // the fused QK^T front must agree bit-for-bit with feeding the
+    // same kernel a caller-materialized score plane, and hence with
+    // the fused packed plane — at every lane level and across the
+    // tile seam
+    let (rows, d) = (TILE_ROWS + 1, 13usize);
+    for (li, &len) in
+        [TILE_LANES + 5, TILE_LANES, 39, 1].iter().enumerate()
+    {
+        let q = random(rows * d, 0x0_51 + li as u64, 1.0);
+        let k = random(len * d, 0x0_52 + li as u64, 1.0);
+        let values = random(len * d, 0x0_53 + li as u64, 1.0);
+        let scale = 1.0 / (d as f32).sqrt();
+        // qk_strip is bit-identical across levels by construction,
+        // so one scalar-derived plane serves as the reference input
+        let mut scores = vec![0.0f32; rows * len];
+        for (r, row) in scores.chunks_exact_mut(len).enumerate() {
+            simd::qk_strip(simd::Level::Scalar,
+                           &q[r * d..(r + 1) * d], &k, d, scale, row);
+        }
+        let vlens: Vec<usize> =
+            (0..rows).map(|r| (r * len).div_ceil(rows) + 1).collect();
+        for bits in [2u32, 3, 4] {
+            let mut want = vec![0.0f32; rows * d];
+            AttentionPlane::new(bits, -4.5).attend(
+                &scores, rows, len, &vlens, &values, d, &mut want);
+            let mut stream = StreamingAttention::new(bits, -4.5);
+            for level in simd::available_levels() {
+                stream.set_simd_level(level).set_threads(1);
+                let mut qkv = vec![0.0f32; rows * d];
+                stream.attend(&q, rows, len, &vlens, &k, &values, d,
+                              scale, &mut qkv);
+                assert_bits_equal(
+                    &qkv, &want,
+                    &format!("qkv bits={bits} len={len} level={}",
+                             level.name()));
+                let mut via_scores = vec![0.0f32; rows * d];
+                stream.attend_scores(&scores, rows, len, &vlens,
+                                     &values, d, &mut via_scores);
+                assert_bits_equal(
+                    &via_scores, &qkv,
+                    &format!("fronts bits={bits} len={len} level={}",
+                             level.name()));
+            }
+        }
+    }
+}
+
+#[test]
+fn hostile_streams_stay_bit_stable() {
+    // NaN lanes, +inf rows, all--inf (fully clipped) rows, and a row
+    // masked to zero length: streaming and fused must still agree
+    // bit-for-bit, and unmasked-lane outputs must stay finite
+    let (rows, len, d) = (5usize, 67usize, 7usize);
+    let mut scores = random(rows * len, 13, 2.0);
+    scores[3] = f32::NAN;
+    for x in &mut scores[len..2 * len] {
+        *x = f32::INFINITY;
+    }
+    for x in &mut scores[2 * len..3 * len] {
+        *x = f32::NEG_INFINITY;
+    }
+    let values = random(len * d, 14, 1.0);
+    let vlens = [len, len, len, 0, 19];
+    for bits in [1u32, 2, 3, 4] {
+        let mut want = vec![0.0f32; rows * d];
+        AttentionPlane::new(bits, -5.0).attend(
+            &scores, rows, len, &vlens, &values, d, &mut want);
+        let mut got = vec![0.0f32; rows * d];
+        StreamingAttention::new(bits, -5.0).attend_scores(
+            &scores, rows, len, &vlens, &values, d, &mut got);
+        assert_bits_equal(&got, &want, &format!("M={bits}"));
+        // the masked row is exactly zero
+        assert!(got[3 * d..4 * d].iter().all(|&x| x == 0.0),
+                "masked row leaked at M={bits}");
+        // rows 2 (all clipped) and 4 (short mask) stay finite
+        for &i in &[2usize, 4] {
+            for (j, x) in got[i * d..(i + 1) * d].iter().enumerate() {
+                assert!(x.is_finite(),
+                        "M={bits} row {i} lane {j} = {x}");
+            }
+        }
+    }
+}
+
+#[test]
+fn zero_length_tails_and_empty_streams_are_no_ops() {
+    let mut stream = StreamingAttention::new(2, -4.0);
+    let mut out: Vec<f32> = Vec::new();
+    stream.attend_scores(&[], 0, 0, &[], &[], 0, &mut out);
+    stream.attend(&[], 0, 0, &[], &[], &[], 0, 1.0, &mut out);
+    // len == 0 with live rows: out comes back zeroed, not stale
+    let mut out = vec![9.0f32; 4 * 3];
+    stream.attend_scores(&[], 4, 0, &[], &[], 3, &mut out);
+    assert!(out.iter().all(|&x| x == 0.0));
+    let mut out = vec![9.0f32; 4 * 3];
+    stream.attend(&random(4 * 3, 2, 1.0), 4, 0, &[], &[], &[], 3,
+                  1.0, &mut out);
+    assert!(out.iter().all(|&x| x == 0.0));
+    // d_head == 0 is a no-op on an empty out
+    let scores = random(4 * 8, 1, 1.0);
+    let mut empty: Vec<f32> = Vec::new();
+    stream.attend_scores(&scores, 4, 8, &[], &[], 0, &mut empty);
+}
+
+#[test]
+fn sampler_streaming_entry_agrees_with_direct_use() {
+    let (rows, len, d) = (6usize, 129usize, 8usize);
+    let scores = random(rows * len, 91, 2.0);
+    let values = random(len * d, 92, 1.0);
+    let vlens: Vec<usize> = (0..rows).map(|r| r * 25 + 1).collect();
+    for bits in [2u32, 3, 4] {
+        let mut want = vec![0.0f32; rows * d];
+        StreamingAttention::new(bits, -4.5).attend_scores(
+            &scores, rows, len, &vlens, &values, d, &mut want);
+        let mut sampler_out = vec![0.0f32; rows * d];
+        let mut sampler = BatchSampler::default();
+        sampler.attend_streaming(&scores, rows, len, &vlens, &values,
+                                 d, bits, -4.5, &mut sampler_out);
+        assert_bits_equal(&sampler_out, &want,
+                          &format!("sampler M={bits}"));
+    }
+}
+
+#[test]
+fn peak_score_memory_is_one_strip_at_every_len() {
+    // the headline claim, pinned as an accounting contract: the
+    // streaming path's peak f32 score scratch is TILE_ROWS x
+    // TILE_LANES x 4 bytes — a constant — while the dense plane the
+    // two-step path writes grows linearly with len
+    assert_eq!(streaming_strip_bytes(), TILE_ROWS * TILE_LANES * 4);
+    for len in [TILE_LANES, 1024, 4096, 65_536] {
+        assert!(streaming_strip_bytes()
+                <= dense_plane_bytes(TILE_ROWS, len),
+                "strip must not exceed the dense plane at len={len}");
+    }
+    // and the packed key scratch matches the fused plane exactly
+    let (rows, len, d) = (TILE_ROWS, 2 * TILE_LANES + 7, 4usize);
+    let scores = random(rows * len, 3, 1.0);
+    let values = random(len * d, 4, 1.0);
+    for bits in [2u32, 3, 4] {
+        let mut stream = StreamingAttention::new(bits, -4.0);
+        let mut out = vec![0.0f32; rows * d];
+        stream.attend_scores(&scores, rows, len, &[], &values, d,
+                             &mut out);
+        assert_eq!(stream.plane_bytes(),
+                   packed_plane_bytes(rows, len, bits),
+                   "bits={bits}");
+    }
+}
